@@ -1,0 +1,61 @@
+"""Fig. 12 + 13 — impact of all-to-all traffic (DLRM with 128 tables on 128
+servers) as batch size grows; bandwidth tax per (batch, degree)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.netsim import (
+    HardwareSpec,
+    compute_time,
+    fat_tree_comm_time,
+    ideal_switch_comm_time,
+    iteration_time,
+    topoopt_comm_time,
+)
+from repro.core.topology_finder import topology_finder
+from repro.core.workloads import DLRM_A2A, job_demand
+
+N = 128
+BATCHES = (32, 64, 128, 512, 2048)
+
+
+def run(batches=BATCHES, degrees=(4, 8)) -> list[dict]:
+    rows = []
+    for d in degrees:
+        hw = HardwareSpec(link_bandwidth=100e9 / 8, degree=d)
+        for bs in batches:
+            job = DLRM_A2A.with_batch(bs)
+            # worst case: one big table per server.
+            dem = job_demand(job, N, table_hosts=range(N))
+            t0 = time.perf_counter()
+            topo = topology_finder(dem, d)
+            res = topoopt_comm_time(topo, dem, hw)
+            us = (time.perf_counter() - t0) * 1e6
+            comp = compute_time(job.flops_per_sample * bs * N, N, hw)
+            t_topo = iteration_time(res["comm_time"], comp)
+            t_ideal = iteration_time(ideal_switch_comm_time(dem, hw), comp)
+            t_ft = iteration_time(fat_tree_comm_time(dem, hw, 0.35), comp)
+            a2a_ratio = dem.sum_mp / max(dem.sum_allreduce, 1e-9)
+            # Paper's §5.4 tax is over the whole job (AllReduce rides direct
+            # rings at tax 1; only forwarded MP pays the multi-hop tax).
+            mp_tax = res["bandwidth_tax"]
+            tax = (dem.sum_allreduce + mp_tax * dem.sum_mp) / (
+                dem.sum_allreduce + dem.sum_mp
+            )
+            rows.append(
+                dict(
+                    name=f"alltoall_d{d}_bs{bs}",
+                    us_per_call=us,
+                    derived=(
+                        f"tax={tax:.2f};"
+                        f"a2a/ar={a2a_ratio:.2f};ft/topo={t_ft / t_topo:.2f}"
+                    ),
+                    bandwidth_tax=tax,
+                    mp_only_tax=mp_tax,
+                    topoopt_s=t_topo,
+                    ideal_s=t_ideal,
+                    fat_tree_s=t_ft,
+                )
+            )
+    return rows

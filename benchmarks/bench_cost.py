@@ -1,0 +1,27 @@
+"""Fig. 10 — interconnect cost vs cluster size."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.costmodel import ClusterSpec, cost_report
+
+
+def run() -> list[dict]:
+    rows = []
+    for n in (128, 256, 432, 1024, 4394):
+        spec = ClusterSpec(n_servers=n, degree=4, link_gbps=100)
+        t0 = time.perf_counter()
+        rep = cost_report(spec)
+        us = (time.perf_counter() - t0) * 1e6
+        ratio = rep["ideal_switch"] / rep["topoopt_patch"]
+        ocs_ratio = rep["topoopt_ocs"] / rep["topoopt_patch"]
+        rows.append(
+            dict(
+                name=f"cost_n{n}",
+                us_per_call=us,
+                derived=f"ideal/topoopt={ratio:.2f};ocs/patch={ocs_ratio:.2f}",
+                **{k: round(v) for k, v in rep.items()},
+            )
+        )
+    return rows

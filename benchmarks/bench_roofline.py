@@ -1,0 +1,46 @@
+"""§Roofline — aggregate the dry-run records into the per-(arch x shape x
+mesh) roofline table (reads experiments/dryrun/*.json)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                          "experiments", "dryrun")
+
+
+def load_records(tag: str = "baseline") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*_{tag}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run() -> list[dict]:
+    rows = []
+    for rec in load_records():
+        r = rec["roofline"]
+        rows.append(
+            dict(
+                name=f"roofline_{rec['arch']}_{rec['shape']}_{rec['mesh_name']}",
+                us_per_call=rec["compile_s"] * 1e6,
+                derived=(
+                    f"dom={r['dominant']};mfu={r['mfu']:.3f};"
+                    f"useful={r['useful_fraction']:.2f}"
+                ),
+                compute_ms=r["compute_s"] * 1e3,
+                memory_ms=r["memory_s"] * 1e3,
+                collective_ms=r["collective_s"] * 1e3,
+                dominant=r["dominant"],
+                mfu=r["mfu"],
+                useful_fraction=r["useful_fraction"],
+                chips=r["chips"],
+            )
+        )
+    if not rows:
+        rows.append(dict(name="roofline_missing", us_per_call=0.0,
+                         derived="run repro.launch.dryrun first"))
+    return rows

@@ -1,0 +1,135 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline / §Perf tables from the
+dry-run JSON records.
+
+    PYTHONPATH=src python -m benchmarks.report [--tag baseline]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from collections import defaultdict
+
+DRYRUN_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "experiments", "dryrun",
+)
+
+
+def load(tag: str | None = None) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if tag is None or r.get("tag") == tag:
+            recs.append(r)
+    return recs
+
+
+def _fmt_bytes(b: float) -> str:
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if b >= div:
+            return f"{b / div:.1f}{unit}"
+    return f"{b:.0f}B"
+
+
+def roofline_table(recs: list[dict], mesh: str = "single_pod") -> str:
+    rows = [r for r in recs if r.get("mesh_name") == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "dominant | MODEL/HLO flops | MFU@roofline |",
+        "|---|---|---:|---:|---:|---|---:|---:|",
+    ]
+    for r in rows:
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']*1e3:.1f} "
+            f"| {rf['memory_s']*1e3:.1f} | {rf['collective_s']*1e3:.1f} "
+            f"| {rf['dominant']} | {rf['useful_fraction']:.2f} "
+            f"| {rf['mfu']:.3f} |"
+        )
+    return "\n".join(out)
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    by_cell = defaultdict(dict)
+    for r in recs:
+        by_cell[(r["arch"], r["shape"])][r["mesh_name"]] = r
+    out = [
+        "| arch | shape | mesh | compile (s) | HLO flops/dev | HLO bytes/dev | "
+        "collective bytes/dev | top collectives |",
+        "|---|---|---|---:|---:|---:|---:|---|",
+    ]
+    for (arch, shape), meshes in sorted(by_cell.items()):
+        for mesh_name, r in sorted(meshes.items()):
+            coll = r["collectives"]["by_type"]
+            top = ", ".join(
+                f"{k}:{_fmt_bytes(v)}"
+                for k, v in sorted(coll.items(), key=lambda kv: -kv[1])[:3]
+            )
+            out.append(
+                f"| {arch} | {shape} | {mesh_name} | {r['compile_s']:.1f} "
+                f"| {r['hlo']['flops_per_dev']:.2e} "
+                f"| {_fmt_bytes(r['hlo']['bytes_per_dev'])} "
+                f"| {_fmt_bytes(r['collectives']['total_bytes'])} | {top} |"
+            )
+    return "\n".join(out)
+
+
+def perf_table(arch: str, shape: str, mesh: str = "single_pod") -> str:
+    recs = [
+        r for r in load(None)
+        if r["arch"] == arch and r["shape"] == shape and r["mesh_name"] == mesh
+    ]
+    recs.sort(key=lambda r: (r["tag"] != "baseline", r["tag"]))
+    out = [
+        "| tag | compute (ms) | memory (ms) | collective (ms) | dominant | "
+        "MODEL/HLO | step@roofline (ms) |",
+        "|---|---:|---:|---:|---|---:|---:|",
+    ]
+    for r in recs:
+        rf = r["roofline"]
+        out.append(
+            f"| {r['tag']} | {rf['compute_s']*1e3:.1f} | {rf['memory_s']*1e3:.1f} "
+            f"| {rf['collective_s']*1e3:.1f} | {rf['dominant']} "
+            f"| {rf['useful_fraction']:.2f} | {rf['step_time_s']*1e3:.1f} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument(
+        "--section", default="all",
+        choices=["all", "dryrun", "roofline", "perf"],
+    )
+    ap.add_argument("--perf-cells", default=(
+        "granite-8b:train_4k,falcon-mamba-7b:train_4k,"
+        "qwen3-moe-30b-a3b:train_4k"
+    ))
+    args = ap.parse_args()
+    recs = load(args.tag)
+
+    if args.section in ("all", "dryrun"):
+        print("### Dry-run records (per-device SPMD program)\n")
+        print(dryrun_table(recs))
+        print()
+    if args.section in ("all", "roofline"):
+        for mesh in ("single_pod", "multi_pod"):
+            print(f"### Roofline — {mesh}\n")
+            print(roofline_table(recs, mesh))
+            print()
+    if args.section in ("all", "perf"):
+        for cell in args.perf_cells.split(","):
+            arch, shape = cell.split(":")
+            print(f"### Perf iterations — {arch} x {shape}\n")
+            print(perf_table(arch, shape))
+            print()
+
+
+if __name__ == "__main__":
+    main()

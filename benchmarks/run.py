@@ -1,0 +1,55 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus per-bench extras to
+JSON files under experiments/bench/).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import traceback
+
+BENCHES = [
+    ("cost", "Fig. 10 interconnect cost"),
+    ("dedicated", "Fig. 11 dedicated 128-server cluster"),
+    ("alltoall", "Fig. 12/13 all-to-all impact + bandwidth tax"),
+    ("pathlen", "Fig. 14/15 path length + link utilization"),
+    ("shared", "Fig. 16 shared 432-server cluster"),
+    ("reconfig", "Fig. 17 reconfiguration latency"),
+    ("roofline", "Roofline dry-run terms"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated bench names")
+    ap.add_argument("--out", default="experiments/bench")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    os.makedirs(args.out, exist_ok=True)
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench, desc in BENCHES:
+        if only and bench not in only:
+            continue
+        try:
+            mod = __import__(f"benchmarks.bench_{bench}", fromlist=["run"])
+            rows = mod.run()
+            with open(os.path.join(args.out, f"{bench}.json"), "w") as f:
+                json.dump(rows, f, indent=1, default=str)
+            for row in rows:
+                print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+        except Exception:
+            failures += 1
+            print(f"{bench},0,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with the
+full TopoOpt pipeline —
+
+1. TopologyFinder plans the rings for an 8-way data-parallel job,
+2. the JAX mesh is reordered so the primary ring is physically contiguous,
+3. gradient sync runs over the multi-ring TotientPerms AllReduce (§6),
+4. checkpoints every 50 steps; restart-safe.
+
+Run with 8 fake devices (CPU):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python examples/train_lm_topoopt.py --steps 300
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeSpec, get_config
+from repro.core import topology_finder
+from repro.core.demand import data_parallel_demand
+from repro.core.device_order import topoopt_mesh
+from repro.checkpoint.ckpt import latest_step, load_checkpoint, save_checkpoint
+from repro.data.pipeline import DataSpec, batch_for_step
+from repro.models import lm
+from repro.optim import adamw, cosine
+from repro.train.steps import make_shardmap_dp_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--n-layers", type=int, default=8)
+    args = ap.parse_args()
+
+    n_dev = jax.device_count()
+    # ~100M params: vocab 32k x d_model + layers.
+    cfg = dataclasses.replace(
+        get_config("granite-8b"),
+        n_layers=args.n_layers, d_model=args.d_model, n_heads=8, n_kv_heads=4,
+        head_dim=32, d_ff=args.d_model * 4, vocab=32768,
+        param_dtype="float32", activation_dtype="float32",
+    )
+    shape = ShapeSpec("example", seq_len=128, global_batch=n_dev * 2, kind="train")
+
+    # --- TopoOpt plan: degree-3 rings for the DP AllReduce -----------------
+    n_params = sum(
+        int(np.prod(l.shape)) for l in jax.tree.leaves(lm.param_specs(cfg))
+    )
+    print(f"model: {n_params/1e6:.1f}M params on {n_dev} devices")
+    topo = topology_finder(data_parallel_demand(n_dev, n_params * 4), degree=3)
+    strides = tuple(topo.ring_strides(tuple(range(n_dev))))
+    print(f"TotientPerms ring strides: {strides}")
+
+    mesh = topoopt_mesh((n_dev,), ("data",), allreduce_axis="data",
+                        stride=strides[0] if strides else 1)
+    opt = adamw(cosine(3e-3, args.steps))
+    step_fn = make_shardmap_dp_train_step(
+        cfg, opt, mesh, axis_name="data", ring_strides=strides or (1,)
+    )
+
+    start = 0
+    params = state = None
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        p_specs = lm.param_specs(cfg)
+        o_specs = jax.eval_shape(opt.init, p_specs)
+        start, params, state, _ = load_checkpoint(args.ckpt_dir, p_specs, o_specs)
+        print(f"resumed from step {start}")
+    if params is None:
+        params = lm.init(jax.random.PRNGKey(0), cfg)
+        state = opt.init(params)
+
+    spec = DataSpec(cfg=cfg, shape=shape, seed=0)
+    t0 = time.perf_counter()
+    for step in range(start, args.steps):
+        batch = batch_for_step(spec, step)
+        params, state, loss, _ = step_fn(params, state, batch, jnp.int32(step), 0)
+        if step % 20 == 0:
+            dt = (time.perf_counter() - t0) / max(step - start, 1)
+            print(f"step {step:4d} loss {float(loss):.4f} ({dt*1e3:.0f} ms/step)")
+        if args.ckpt_dir and (step + 1) % 50 == 0:
+            save_checkpoint(args.ckpt_dir, step + 1, params, state)
+    print(f"final loss: {float(loss):.4f}")
+
+
+if __name__ == "__main__":
+    main()

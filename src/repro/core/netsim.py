@@ -1,0 +1,169 @@
+"""FlexNet-style flow-level network simulation (§5.1).
+
+Estimates a training iteration's communication time for a demand on a given
+fabric.  Two granularities:
+
+* ``iteration_time`` — fluid bottleneck-link model: every flow follows its
+  routes, link loads accumulate, comm time = max link (bytes / bandwidth);
+  AllReduce groups ride their permutation rings with the canonical ring cost
+  ``2 (k-1)/k * M`` split over the group's rings.
+* :mod:`repro.core.packetsim` — event-driven max-min-fair flow simulator for
+  the shared-cluster and reconfiguration studies.
+
+Fabrics other than TopoOpt (ideal switch, fat-tree, oversub, expander,
+SiP-ML ring) are built in :mod:`repro.core.fabrics` and consumed here through
+the same interface.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .demand import TrafficDemand
+from .routing import bandwidth_tax, link_loads
+from .topology_finder import Topology
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    """Per-node network/compute capability."""
+
+    link_bandwidth: float = 100e9 / 8  # bytes/s per interface (100 Gbps NIC)
+    degree: int = 4
+    compute_flops: float = 312e12  # A100 bf16 peak
+    compute_efficiency: float = 0.45
+
+    @property
+    def node_bandwidth(self) -> float:
+        return self.link_bandwidth * self.degree
+
+
+def _ring_bytes_per_link(group_bytes: float, k: int) -> float:
+    """Ring AllReduce moves 2*(k-1)/k * M across each link of the ring."""
+    if k <= 1:
+        return 0.0
+    return 2.0 * (k - 1) / k * group_bytes
+
+
+def mp_flows(demand: TrafficDemand) -> list[tuple[int, int, float]]:
+    srcs, dsts = np.nonzero(demand.mp)
+    return [(int(s), int(t), float(demand.mp[s, t])) for s, t in zip(srcs, dsts)]
+
+
+def topoopt_comm_time(
+    topo: Topology, demand: TrafficDemand, hw: HardwareSpec
+) -> dict[str, float]:
+    """Fluid comm time on a TopoOpt direct-connect topology.
+
+    AllReduce bytes are spread over each group's rings (multi-ring
+    load-balancing, §6); MP bytes follow the routing table with host-based
+    forwarding (bandwidth tax).  Both share the physical links.
+    """
+    loads: dict[tuple[int, int], float] = {}
+
+    # AllReduce traffic on its rings (chunked across rings).
+    for group in demand.allreduce:
+        rings = topo.rings.get(group.members, [])
+        k = len(group.members)
+        per_link_total = _ring_bytes_per_link(group.nbytes, k)
+        if not rings or per_link_total == 0.0:
+            continue
+        share = per_link_total / len(rings)
+        for ring in rings:
+            for a, b in ring.edges():
+                loads[(a, b)] = loads.get((a, b), 0.0) + share
+
+    # MP traffic over routed paths (forwarding copies count on every hop).
+    # Pairs without a precomputed route (e.g. MCMC probing placements on a
+    # fixed topology) fall back to shortest-path on the current graph.
+    flows = mp_flows(demand)
+    routing = _routing_with_fallback(topo, flows)
+    mp_loads = link_loads(topo.graph, flows, routing)
+    for link, nbytes in mp_loads.items():
+        loads[link] = loads.get(link, 0.0) + nbytes
+
+    # Parallel links between the same pair share the load.
+    n_par: dict[tuple[int, int], int] = {}
+    for a, b in topo.graph.edges():
+        n_par[(a, b)] = n_par.get((a, b), 0) + 1
+    worst = 0.0
+    for link, nbytes in loads.items():
+        par = max(1, n_par.get(link, 1))
+        worst = max(worst, nbytes / (par * hw.link_bandwidth))
+
+    tax = bandwidth_tax(flows, routing) if flows else 1.0
+    return {"comm_time": worst, "bandwidth_tax": tax}
+
+
+def _routing_with_fallback(topo: Topology, flows) -> "RoutingTable":
+    from .routing import RoutingTable
+
+    missing = [
+        (s, t) for s, t, _ in flows if not topo.routing.get(s, t)
+    ]
+    if not missing:
+        return topo.routing
+    import networkx as nx
+
+    cache = getattr(topo, "_sp_cache", None)
+    if cache is None:
+        cache = {}
+        topo._sp_cache = cache
+    merged = RoutingTable(routes=dict(topo.routing.routes))
+    simple = nx.DiGraph(topo.graph)
+    for s, t in missing:
+        if (s, t) in cache:
+            merged.routes[(s, t)] = cache[(s, t)]
+            continue
+        try:
+            path = tuple(nx.shortest_path(simple, s, t))
+            merged.add(s, t, path)
+            cache[(s, t)] = merged.routes[(s, t)]
+        except (nx.NetworkXNoPath, nx.NodeNotFound):
+            cache[(s, t)] = []
+    return merged
+
+
+def ideal_switch_comm_time(demand: TrafficDemand, hw: HardwareSpec) -> float:
+    """Ideal non-blocking switch with node bandwidth d*B (§5.1): AllReduce at
+    full node bandwidth + per-node in/out bottleneck for MP."""
+    t = 0.0
+    for group in demand.allreduce:
+        k = len(group.members)
+        t = max(t, _ring_bytes_per_link(group.nbytes, k) / hw.node_bandwidth)
+    out_bytes = demand.mp.sum(axis=1)
+    in_bytes = demand.mp.sum(axis=0)
+    node_bottleneck = max(out_bytes.max(initial=0.0), in_bytes.max(initial=0.0))
+    return max(t, t + node_bottleneck / hw.node_bandwidth)
+
+
+def fat_tree_comm_time(
+    demand: TrafficDemand, hw: HardwareSpec, bandwidth_fraction: float
+) -> float:
+    """Cost-equivalent fat-tree: one NIC per server with d*B' bandwidth where
+    B' = bandwidth_fraction * B (§5.1/§5.2); full-bisection so it behaves as
+    an ideal switch at the reduced rate."""
+    scaled = HardwareSpec(
+        link_bandwidth=hw.link_bandwidth * bandwidth_fraction,
+        degree=hw.degree,
+        compute_flops=hw.compute_flops,
+        compute_efficiency=hw.compute_efficiency,
+    )
+    return ideal_switch_comm_time(demand, scaled)
+
+
+def iteration_time(
+    comm_time: float,
+    compute_time: float,
+    overlap: float = 0.0,
+) -> float:
+    """Combine compute and comm.  ``overlap`` in [0,1]: fraction of comm that
+    hides under compute (the paper's Eq. 1 uses overlap=0)."""
+    hidden = min(comm_time * overlap, compute_time)
+    return compute_time + comm_time - hidden
+
+
+def compute_time(flops_per_iteration: float, n: int, hw: HardwareSpec) -> float:
+    return flops_per_iteration / (n * hw.compute_flops * hw.compute_efficiency)

@@ -1,0 +1,94 @@
+"""SelectPermutations (Algorithm 3) — pick ``d_k`` ring strides per group.
+
+Goal (Theorem 1): choose strides close to a geometric sequence with ratio
+``x = n^(1/d_k)`` so that the AllReduce sub-topology's diameter is bounded by
+``O(d_k * n^(1/d_k))`` — every node reaches every other within a small number
+of coin-change hops (App. E.2), Chord-style.
+"""
+
+from __future__ import annotations
+
+from .totient import PermutationSet, RingPermutation
+
+
+def geometric_targets(n: int, d: int) -> list[float]:
+    """The ideal stride sequence x^0, x^1, ..., x^(d-1) with x = n^(1/d).
+
+    When n^(1/d) < 2 the paper switches to ratio 2 (uses fewer effective
+    degrees, bound becomes O(log2 n))."""
+    if d <= 0:
+        return []
+    x = n ** (1.0 / d)
+    if x < 2.0 and n > 1:
+        x = 2.0
+    return [x**i for i in range(d)]
+
+
+def select_permutations(perm_set: PermutationSet, d_k: int) -> list[RingPermutation]:
+    """Algorithm 3.  Greedily project the geometric sequence onto the
+    available totient strides (L1-nearest, without replacement)."""
+    if d_k <= 0 or not perm_set.perms:
+        return []
+    by_stride = {r.p: r for r in perm_set.perms}
+    candidates = sorted(by_stride)
+    n = perm_set.perms[0].size
+    d_k = min(d_k, len(candidates))
+
+    selected: list[int] = []
+    # q starts at the minimum candidate (stride 1 when present).
+    q = candidates[0]
+    selected.append(q)
+    remaining = [c for c in candidates if c != q]
+    x = geometric_targets(n, d_k)
+    ratio = x[1] / x[0] if len(x) > 1 else 2.0
+
+    for _ in range(1, d_k):
+        if not remaining:
+            break
+        target = q * ratio
+        # L1-nearest projection onto remaining candidates.
+        qp = min(remaining, key=lambda r: abs(r - target))
+        selected.append(qp)
+        remaining.remove(qp)
+        q = qp
+
+    return [by_stride[p] for p in selected]
+
+
+def coin_change_diameter(n: int, strides: list[int]) -> int:
+    """Exact diameter of the union of the stride rings under directed
+    coin-change routing (BFS over Z_n with the strides as +coins).
+
+    Used by tests to check Theorem 1 and by TopologyFinder to report the
+    cluster diameter seen by MP transfers."""
+    if n <= 1:
+        return 0
+    if not strides:
+        return -1  # disconnected
+    dist = [-1] * n
+    dist[0] = 0
+    frontier = [0]
+    while frontier:
+        nxt = []
+        for v in frontier:
+            for c in strides:
+                w = (v + c) % n
+                if dist[w] < 0:
+                    dist[w] = dist[v] + 1
+                    nxt.append(w)
+        frontier = nxt
+    if any(d < 0 for d in dist):
+        return -1
+    return max(dist)
+
+
+def theorem1_bound(n: int, d: int) -> float:
+    """O(d * n^(1/d)) bound, with the x<2 correction of App. E.2."""
+    if d <= 0:
+        return float("inf")
+    x = n ** (1.0 / d)
+    if x < 2.0:
+        import math
+
+        return math.log2(max(n, 2)) + 1
+    return d * x

@@ -1,0 +1,129 @@
+"""Parallelization-strategy search (FlexFlow-style MCMC, §4.1 Comp x Comm).
+
+The strategy space mirrors what matters for the paper's workloads: pure data
+parallelism vs hybrid (embedding tables / experts placed on a subset of
+hosts), including *which* hosts — device placement changes the MP traffic
+matrix, which is exactly what the Comm x Topo plane consumes.
+
+The simulated-annealing proposal/acceptance follows FlexFlow's MCMC: accept
+better strategies always, worse ones with probability exp(-delta/T).
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+
+from .demand import TrafficDemand
+from .netsim import (
+    HardwareSpec,
+    compute_time,
+    iteration_time,
+    topoopt_comm_time,
+)
+from .topology_finder import Topology
+from .workloads import JobSpec, job_demand
+
+
+@dataclass(frozen=True)
+class Strategy:
+    """A point in the Comp x Comm plane."""
+
+    mode: str  # "dp" | "hybrid"
+    table_hosts: tuple[int, ...] = ()
+    ep_group_size: int = 0
+
+    def demand(self, job: JobSpec, n: int) -> TrafficDemand:
+        hosts = self.table_hosts if self.mode == "hybrid" else None
+        return job_demand(job, n, table_hosts=hosts, ep_group_size=self.ep_group_size)
+
+
+@dataclass
+class SearchResult:
+    strategy: Strategy
+    iter_time: float
+    demand: TrafficDemand
+    history: list[float] = field(default_factory=list)
+
+
+def _evaluate(
+    strategy: Strategy, job: JobSpec, topo: Topology, hw: HardwareSpec, overlap: float
+) -> tuple[float, TrafficDemand]:
+    demand = strategy.demand(job, topo.n)
+    comm = topoopt_comm_time(topo, demand, hw)["comm_time"]
+    comp = compute_time(job.flops_per_sample * job.batch_per_gpu * topo.n, topo.n, hw)
+    return iteration_time(comm, comp, overlap=overlap), demand
+
+
+def _propose(strategy: Strategy, job: JobSpec, n: int, rng: random.Random) -> Strategy:
+    moves = ["toggle_mode"]
+    if job.n_tables:
+        moves += ["move_host", "add_host", "drop_host"]
+    if job.n_experts:
+        moves += ["ep_size"]
+    move = rng.choice(moves)
+
+    if move == "toggle_mode":
+        if strategy.mode == "dp" and job.n_tables:
+            k = max(1, min(job.n_tables, n // 4))
+            hosts = tuple(sorted(rng.sample(range(n), k)))
+            return Strategy(mode="hybrid", table_hosts=hosts,
+                            ep_group_size=strategy.ep_group_size)
+        return Strategy(mode="dp", ep_group_size=strategy.ep_group_size)
+
+    hosts = list(strategy.table_hosts) or [rng.randrange(n)]
+    if move == "move_host":
+        idx = rng.randrange(len(hosts))
+        hosts[idx] = rng.randrange(n)
+    elif move == "add_host" and len(hosts) < min(n, job.n_tables):
+        hosts.append(rng.randrange(n))
+    elif move == "drop_host" and len(hosts) > 1:
+        hosts.pop(rng.randrange(len(hosts)))
+    elif move == "ep_size":
+        sizes = [s for s in (2, 4, 8, 16, 32) if n % s == 0 and s <= n]
+        if sizes:
+            return Strategy(
+                mode=strategy.mode, table_hosts=strategy.table_hosts,
+                ep_group_size=rng.choice(sizes),
+            )
+    return Strategy(
+        mode="hybrid", table_hosts=tuple(sorted(set(hosts))),
+        ep_group_size=strategy.ep_group_size,
+    )
+
+
+def mcmc_search(
+    job: JobSpec,
+    topo: Topology,
+    hw: HardwareSpec,
+    iters: int = 200,
+    temperature: float = 0.1,
+    overlap: float = 0.0,
+    seed: int = 0,
+    init: Strategy | None = None,
+) -> SearchResult:
+    """Search the Comp x Comm plane for a fixed topology (§4.1)."""
+    rng = random.Random(seed)
+    n = topo.n
+    current = init or Strategy(mode="dp",
+                               ep_group_size=8 if job.n_experts else 0)
+    cur_time, cur_demand = _evaluate(current, job, topo, hw, overlap)
+    best, best_time, best_demand = current, cur_time, cur_demand
+    history = [cur_time]
+
+    for it in range(iters):
+        cand = _propose(current, job, n, rng)
+        cand_time, cand_demand = _evaluate(cand, job, topo, hw, overlap)
+        t = temperature * max(cur_time, 1e-12)
+        if cand_time <= cur_time or rng.random() < math.exp(
+            -(cand_time - cur_time) / t
+        ):
+            current, cur_time, cur_demand = cand, cand_time, cand_demand
+            if cur_time < best_time:
+                best, best_time, best_demand = current, cur_time, cur_demand
+        history.append(cur_time)
+
+    return SearchResult(
+        strategy=best, iter_time=best_time, demand=best_demand, history=history
+    )

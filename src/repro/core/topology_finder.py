@@ -1,0 +1,230 @@
+"""TopologyFinder (Algorithm 1).
+
+Given ``n`` servers of degree ``d`` and a :class:`TrafficDemand`, construct:
+
+1. degree split ``d_A``/``d_MP`` proportional to AllReduce vs MP bytes,
+2. the AllReduce sub-topology — ``d_k`` TotientPerms rings per group chosen
+   by SelectPermutations (geometric-stride, small diameter),
+3. the MP sub-topology — repeated Blossom max-weight matching with
+   demand-halving (diminishing returns, App. E.4 Discount),
+4. combined topology + routing: CoinChangeMod on the ring strides for
+   AllReduce, k-shortest-path on the combined graph for MP.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import networkx as nx
+import numpy as np
+
+from .demand import AllReduceGroup, TrafficDemand
+from .routing import RoutingTable, allreduce_routes, k_shortest_mp_routes
+from .select_perms import coin_change_diameter, select_permutations
+from .totient import RingPermutation, totient_perms
+
+
+@dataclass
+class Topology:
+    """The physical plan for one job's shard of the cluster."""
+
+    n: int
+    degree: int
+    graph: nx.MultiDiGraph
+    # AllReduce group -> the ring permutations (strides) carrying it.
+    rings: dict[tuple[int, ...], list[RingPermutation]] = field(default_factory=dict)
+    routing: RoutingTable = field(default_factory=RoutingTable)
+    d_allreduce: int = 0
+    d_mp: int = 0
+
+    def ring_strides(self, members: tuple[int, ...]) -> list[int]:
+        return [r.p for r in self.rings.get(members, [])]
+
+    def diameter(self) -> int:
+        simple = nx.DiGraph(self.graph)
+        if simple.number_of_nodes() < self.n or not nx.is_strongly_connected(simple):
+            return -1
+        return nx.diameter(simple)
+
+    def out_degrees(self) -> list[int]:
+        return [self.graph.out_degree(v) for v in range(self.n)]
+
+
+def _add_ring(graph: nx.MultiDiGraph, ring: RingPermutation) -> None:
+    for a, b in ring.edges():
+        graph.add_edge(a, b, kind="allreduce", stride=ring.p)
+
+
+def _add_duplex(graph: nx.MultiDiGraph, a: int, b: int) -> None:
+    graph.add_edge(a, b, kind="mp")
+    graph.add_edge(b, a, kind="mp")
+
+
+def topology_finder(
+    demand: TrafficDemand,
+    degree: int,
+    prime_only: bool | None = None,
+    mp_route_k: int = 2,
+) -> Topology:
+    """Algorithm 1 (paper §4.2)."""
+    n = demand.n
+    graph = nx.MultiDiGraph()
+    graph.add_nodes_from(range(n))
+
+    sum_ar = demand.sum_allreduce
+    sum_mp = demand.sum_mp
+    total = sum_ar + sum_mp
+
+    groups = list(demand.allreduce)
+    if not groups:
+        # Keep the network connected even for pure-MP jobs: a zero-traffic
+        # global ring still gets the mandatory 1 degree (line 2: max(1, .)).
+        groups = [AllReduceGroup(members=tuple(range(n)), nbytes=0.0)]
+        sum_ar = 0.0
+
+    # -- Step 1: distribute the degree -------------------------------------
+    if total <= 0:
+        d_a = 1
+    else:
+        d_a = max(1, math.ceil(degree * sum_ar / total))
+    d_a = min(d_a, degree)
+    d_mp = degree - d_a
+    d_a_budget = d_a
+
+    # -- Step 2: AllReduce sub-topology -------------------------------------
+    rings: dict[tuple[int, ...], list[RingPermutation]] = {}
+    group_total = sum(g.total for g in groups)
+    for g in sorted(groups, key=lambda g: -g.total):
+        if d_a_budget <= 0:
+            break
+        if group_total > 0:
+            d_k = math.ceil(d_a * g.total / group_total)
+        else:
+            d_k = 1
+        d_k = min(d_k, d_a_budget)
+        perm_set = totient_perms(g.members, prime_only=prime_only)
+        chosen = select_permutations(perm_set, d_k)
+        if not chosen and len(g.members) >= 2:
+            chosen = [perm_set.perms[0]] if perm_set.perms else []
+        for ring in chosen:
+            _add_ring(graph, ring)
+        rings[g.members] = chosen
+        d_a_budget -= max(len(chosen), 1)
+
+    # -- Step 3: MP sub-topology (Blossom matching, demand halving) ---------
+    t_mp = demand.mp.copy()
+    for _ in range(d_mp):
+        sym = t_mp + t_mp.T
+        if sym.max() <= 0:
+            break
+        und = nx.Graph()
+        srcs, dsts = np.nonzero(sym)
+        for i, j in zip(srcs.tolist(), dsts.tolist()):
+            if i < j:
+                und.add_edge(i, j, weight=float(sym[i, j]))
+        matching = nx.max_weight_matching(und, maxcardinality=False)
+        if not matching:
+            break
+        for a, b in matching:
+            _add_duplex(graph, a, b)
+            # Diminishing return: halve served demand (line 17).
+            t_mp[a, b] /= 2.0
+            t_mp[b, a] /= 2.0
+
+    # -- Step 4: final topology + routing ------------------------------------
+    topo = Topology(
+        n=n, degree=degree, graph=graph, rings=rings,
+        d_allreduce=d_a, d_mp=d_mp,
+    )
+    routing = RoutingTable()
+    for members, group_rings in rings.items():
+        strides = [r.p for r in group_rings]
+        if strides:
+            sub = allreduce_routes(members, strides)
+            routing.routes.update(sub.routes)
+    mp_routes = k_shortest_mp_routes(graph, demand.mp, k=mp_route_k)
+    # MP routes take priority on pairs where both exist (shorter on combined G).
+    for pair, rs in mp_routes.routes.items():
+        existing = routing.routes.get(pair)
+        if existing is None or min(r.hops for r in rs) < min(r.hops for r in existing):
+            routing.routes[pair] = rs
+    topo.routing = routing
+    return topo
+
+
+def effective_diameter(topo: Topology) -> int:
+    """Diameter as seen by coin-change routing on the primary AllReduce group
+    (Theorem 1's quantity), falling back to the graph diameter."""
+    if topo.rings:
+        members, group_rings = max(topo.rings.items(), key=lambda kv: len(kv[0]))
+        strides = [r.p for r in group_rings]
+        if strides:
+            return coin_change_diameter(len(members), strides)
+    return topo.diameter()
+
+
+# ---------------------------------------------------------------------------
+# Failure handling (§7 "Handling failures")
+# ---------------------------------------------------------------------------
+
+
+def repair_topology(topo: Topology, failed: tuple[int, int]) -> Topology:
+    """A fiber failure removes links between ``failed=(u, v)`` (both
+    directions).  Per §7: TopoOpt donates an MP link to restore a broken
+    AllReduce ring; if the failed link was MP-only, re-route around it.
+
+    Returns a new Topology with the failed links removed, a replacement link
+    rewired from the lowest-value MP link (if the failure broke a ring), and
+    routing recomputed for affected pairs.
+    """
+    u, v = failed
+    g = topo.graph.copy()
+    broke_ring = False
+    removed = {(u, v), (v, u)}
+    for a, b in ((u, v), (v, u)):
+        if g.has_edge(a, b):
+            for key, data in list(g[a][b].items()):
+                if data.get("kind") == "allreduce":
+                    broke_ring = True
+                g.remove_edge(a, b, key=key)
+
+    if broke_ring:
+        # Donate one MP link: rewire it to (u, v) to close the ring again.
+        mp_edges = [
+            (a, b, k)
+            for a, b, k, data in g.edges(keys=True, data=True)
+            if data.get("kind") == "mp" and (a, b) != (u, v) and (a, b) != (v, u)
+        ]
+        if mp_edges:
+            a, b, k = mp_edges[0]
+            g.remove_edge(a, b, key=k)
+            if not g.has_edge(a, b):  # no parallel link left on that pair
+                removed.add((a, b))
+            g.add_edge(u, v, kind="allreduce", stride=None, repaired=True)
+            removed.discard((u, v))
+
+    repaired = Topology(
+        n=topo.n, degree=topo.degree, graph=g, rings=topo.rings,
+        d_allreduce=topo.d_allreduce, d_mp=topo.d_mp,
+    )
+    # Recompute routing on the surviving graph (shortest paths for every pair
+    # previously routed through a removed link — the failure AND the donated
+    # MP link).
+    simple = nx.DiGraph(g)
+    new_routing = RoutingTable()
+    for pair, rs in topo.routing.routes.items():
+        keep = [
+            r for r in rs
+            if not any(hop in removed for hop in zip(r.path[:-1], r.path[1:]))
+        ]
+        if keep:
+            new_routing.routes[pair] = keep
+            continue
+        try:
+            path = nx.shortest_path(simple, pair[0], pair[1])
+            new_routing.add(pair[0], pair[1], tuple(path))
+        except (nx.NetworkXNoPath, nx.NodeNotFound):
+            continue
+    repaired.routing = new_routing
+    return repaired

@@ -1,0 +1,137 @@
+"""Workload characterizations for the paper's six DNN models (§5.1, List 1)
+and for the assigned architectures (traffic-demand view).
+
+Each :class:`JobSpec` captures what the co-optimization needs: dense
+(replicated) parameter bytes -> AllReduce demand; embedding tables / experts
+-> MP demand; FLOPs -> compute time.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Sequence
+
+from .demand import TrafficDemand, dlrm_demand, data_parallel_demand, moe_demand
+
+
+@dataclass(frozen=True)
+class JobSpec:
+    name: str
+    batch_per_gpu: int
+    dense_params: float  # replicated parameter count
+    flops_per_sample: float
+    # Embedding-table models (DLRM/NCF): tables create MP broadcast+incast.
+    n_tables: int = 0
+    table_rows: float = 0.0
+    table_dim: int = 0
+    # MoE models: EP all-to-all.
+    n_experts: int = 0
+    top_k: int = 0
+    moe_hidden: int = 0
+    d_model: int = 0
+    n_moe_layers: int = 0
+    bytes_per_param: int = 4
+    bytes_per_activation: int = 4
+
+    @property
+    def dense_bytes(self) -> float:
+        return self.dense_params * self.bytes_per_param
+
+    def with_batch(self, batch_per_gpu: int) -> "JobSpec":
+        return replace(self, batch_per_gpu=batch_per_gpu)
+
+
+# --- List 1 (§5.3 configurations) -----------------------------------------
+
+VGG16 = JobSpec(
+    name="vgg16", batch_per_gpu=64, dense_params=138e6, flops_per_sample=3 * 15.5e9
+)
+RESNET50 = JobSpec(
+    name="resnet50", batch_per_gpu=128, dense_params=25.6e6, flops_per_sample=3 * 4.1e9
+)
+BERT = JobSpec(
+    # 12 blocks, hidden 1024, seq 64, embed 512.
+    name="bert", batch_per_gpu=16, dense_params=152e6,
+    flops_per_sample=6 * 152e6 * 64,
+)
+CANDLE = JobSpec(
+    # 8 dense layers of 16384 + 16 feature layers of 16384: ~ 5.4e9 params.
+    name="candle", batch_per_gpu=256, dense_params=5.4e9,
+    flops_per_sample=2 * 3 * 5.4e9,
+)
+DLRM = JobSpec(
+    # 64 tables x 1e7 rows x 128 dims; 8 dense 2048 + 16 feat 4096.
+    name="dlrm", batch_per_gpu=128,
+    dense_params=8 * 2048**2 + 16 * 4096**2,
+    flops_per_sample=2 * 3 * (8 * 2048**2 + 16 * 4096**2),
+    n_tables=64, table_rows=1e7, table_dim=128,
+)
+DLRM_A2A = JobSpec(  # §5.4 worst-case: 128 large tables on 128 servers,
+    # embedding dims boosted ("128x relative to state-of-the-art", §6) so
+    # all-to-all reaches ~80% of AllReduce at batch 2048 as in Fig. 12.
+    name="dlrm_a2a", batch_per_gpu=128,
+    dense_params=8 * 2048**2 + 16 * 4096**2,
+    flops_per_sample=2 * 3 * (8 * 2048**2 + 16 * 4096**2),
+    n_tables=128, table_rows=1e7, table_dim=1024,
+)
+NCF = JobSpec(
+    # 64 MF + 64 MLP tables of 1e6 users/items; dense 8 x 4096.
+    name="ncf", batch_per_gpu=128, dense_params=8 * 4096**2,
+    flops_per_sample=2 * 3 * 8 * 4096**2,
+    n_tables=128, table_rows=1e6, table_dim=96,  # mean of MF 64 / MLP 128
+)
+
+PAPER_JOBS = {
+    j.name: j for j in [VGG16, RESNET50, BERT, CANDLE, DLRM, DLRM_A2A, NCF]
+}
+
+
+# --- Demand construction given a strategy ----------------------------------
+
+
+def job_demand(
+    job: JobSpec,
+    n: int,
+    table_hosts: Sequence[int] | None = None,
+    ep_group_size: int = 0,
+) -> TrafficDemand:
+    """Translate (job, parallelization strategy) -> per-iteration demand.
+
+    ``table_hosts`` None => pure data parallelism (embedding tables, if any,
+    are replicated and join the AllReduce — the paper's Fig. 1a 44 GB case).
+    """
+    if job.n_experts and ep_group_size > 1:
+        groups = [
+            tuple(range(g, g + ep_group_size))
+            for g in range(0, n, ep_group_size)
+        ]
+        # Tokens routed to top_k experts: dispatch + combine per MoE layer.
+        tokens = job.batch_per_gpu
+        a2a_bytes = (
+            2 * job.n_moe_layers * tokens * job.top_k * job.d_model
+            * job.bytes_per_activation / max(1, ep_group_size - 1)
+        )
+        expert_params = (
+            job.n_moe_layers * job.n_experts * 3 * job.d_model * job.moe_hidden
+            / max(1, n // ep_group_size)
+        )
+        return moe_demand(
+            n, job.dense_bytes, groups, a2a_bytes,
+            expert_param_bytes=expert_params * job.bytes_per_param,
+        )
+
+    if job.n_tables and table_hosts:
+        table_hosts = tuple(sorted(set(table_hosts)))
+        # Activations out per host per iteration: every other server's batch
+        # worth of looked-up rows for the tables this host owns.
+        tables_per_host = job.n_tables / len(table_hosts)
+        act = (
+            job.batch_per_gpu * job.table_dim * job.bytes_per_activation
+            * tables_per_host
+        )
+        return dlrm_demand(n, job.dense_bytes, table_hosts, act)
+
+    params = job.dense_params
+    if job.n_tables:
+        params = params + job.n_tables * job.table_rows * job.table_dim
+    return data_parallel_demand(n, params * job.bytes_per_param)

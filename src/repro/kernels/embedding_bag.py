@@ -1,0 +1,60 @@
+"""DLRM embedding-bag lookup as a Pallas TPU kernel.
+
+out[b, t] = sum_j table[t, idx[b, t, j]] — multi-hot embedding-bag over T
+tables.  TPU-native design: indices are *scalar-prefetched*
+(PrefetchScalarGridSpec) so the BlockSpec index_map itself selects the table
+row to DMA per grid step — the gather is expressed as data-dependent block
+fetches, the canonical TPU pattern for embedding lookups (no scatter/gather
+unit on TPU).  Accumulation over the NNZ axis happens in the revisited
+output block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(idx_ref, row_ref, o_ref):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0, 0, :] += row_ref[0, 0, :].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag(
+    tables: jax.Array,  # (T, R, E) stacked embedding tables
+    indices: jax.Array,  # (B, T, NNZ) int32 row ids
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (B, T, E) bag sums."""
+    T, R, E = tables.shape
+    B, T2, NNZ = indices.shape
+    assert T == T2
+
+    def table_map(b, t, j, idx_ref):
+        return (t, idx_ref[b, t, j], 0)
+
+    def out_map(b, t, j, idx_ref):
+        return (b, t, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, T, NNZ),
+        in_specs=[pl.BlockSpec((1, 1, E), table_map)],
+        out_specs=pl.BlockSpec((1, 1, E), out_map),
+    )
+    return pl.pallas_call(
+        _bag_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, E), tables.dtype),
+        interpret=interpret,
+    )(indices, tables)

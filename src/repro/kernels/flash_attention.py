@@ -1,0 +1,139 @@
+"""Flash attention (GQA, causal / sliding-window / full) as a Pallas TPU
+kernel.
+
+Design (TPU-native, not a CUDA port): grid = (batch, q_heads, q_blocks,
+kv_blocks) with the kv axis innermost and *sequential* (online-softmax
+carry lives in VMEM scratch across kv grid steps).  Block shapes are MXU
+aligned (multiples of 128 on the matmul dims); K/V blocks stream HBM->VMEM
+per grid step, so VMEM holds O(Bq*d + Bk*d + Bq*Bk) — independent of
+sequence length.  Causal blocks above the diagonal are masked via in-block
+iota (they still occupy grid steps; production TPU kernels skip them with a
+grid transform — measured as a §Perf iteration).
+
+GQA: kv head index = q head // (H // KV) through the K/V index_maps — no
+K/V replication in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, window: int, block_q: int, block_k: int,
+    seq_len: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (block_q, d)
+    k = k_ref[0, 0].astype(jnp.float32)  # (block_k, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (block_q, block_k)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < seq_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]  # (block_q, 1)
+    m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)
+    l_cur = alpha * l_scr[...] + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_cur
+    l_scr[...] = l_cur
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, KV, Sk, D)
+    v: jax.Array,  # (B, KV, Sk, D)
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    _, KV, Sk, _ = k.shape
+    assert H % KV == 0, "GQA requires H % KV == 0"
+    group = H // KV
+    scale = 1.0 / math.sqrt(D)
+
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    # Pad sequence dims to block multiples (out-of-bounds block reads are
+    # undefined; padded keys are masked via seq_len inside the kernel).
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sq_p, Sk_p = Sq + pad_q, Sk + pad_k
+    grid = (B, H, pl.cdiv(Sq_p, block_q), pl.cdiv(Sk_p, block_k))
+
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, seq_len=Sk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, D), lambda b, h, iq, ik: (b, h // group, ik, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, D), lambda b, h, iq, ik: (b, h // group, ik, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq_p, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)[:, :, :Sq, :]

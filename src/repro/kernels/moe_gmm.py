@@ -1,0 +1,69 @@
+"""Grouped (per-expert) matmul for MoE as a Pallas TPU kernel.
+
+Computes out[e] = x[e] @ w[e] for E experts with MXU-aligned blocking:
+grid = (E, C/bc, F/bf, D/bd) with the contraction (D) axis innermost and a
+fp32 accumulator in VMEM scratch; weights/activations stream HBM->VMEM one
+(bc x bd) / (bd x bf) tile per step.  This is the dispatch-side compute of
+the capacity-based MoE in models/layers.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_scr):
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jax.lax.dot(
+        x_ref[0], w_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_c", "block_f", "block_d", "interpret")
+)
+def moe_gmm(
+    x: jax.Array,  # (E, C, D) dispatched tokens
+    w: jax.Array,  # (E, D, F) expert weights
+    block_c: int = 128,
+    block_f: int = 128,
+    block_d: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    E, C, D = x.shape
+    _, _, F = w.shape
+    block_c = min(block_c, C)
+    block_f = min(block_f, F)
+    block_d = min(block_d, D)
+    assert C % block_c == 0 and F % block_f == 0 and D % block_d == 0
+    grid = (E, C // block_c, F // block_f, D // block_d)
+
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_d), lambda e, ci, fi, ki: (e, ci, ki)),
+            pl.BlockSpec((1, block_d, block_f), lambda e, ci, fi, ki: (e, ki, fi)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_c, block_f), lambda e, ci, fi, ki: (e, ci, fi)
+        ),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

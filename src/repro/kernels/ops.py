@@ -1,0 +1,45 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU,
+where the kernels compile to Mosaic.  The XLA fallbacks live in
+models/layers.py; these wrappers are the TPU fast path.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .embedding_bag import embedding_bag
+from .flash_attention import flash_attention
+from .moe_gmm import moe_gmm
+from .mamba_scan import mamba_scan
+from .rglru_scan import rglru_scan
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def attention(q, k, v, causal=True, window=0, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return flash_attention(q, k, v, causal=causal, window=window, **kw)
+
+
+def selective_scan(xc, dt, a, b, c, d_skip, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return mamba_scan(xc, dt, a, b, c, d_skip, **kw)
+
+
+def lru_scan(a, b, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return rglru_scan(a, b, **kw)
+
+
+def grouped_matmul(x, w, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return moe_gmm(x, w, **kw)
+
+
+def bag_lookup(tables, indices, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return embedding_bag(tables, indices, **kw)

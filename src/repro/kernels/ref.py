@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert allclose)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_flash_attention(q, k, v, causal=True, window=0):
+    """q: (B, H, Sq, D); k/v: (B, KV, Sk, D) -> (B, H, Sq, D)."""
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, KV, g, Sq, D).astype(jnp.float32)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    qi = jnp.arange(Sq)[:, None]
+    kj = jnp.arange(Sk)[None, :]
+    m = jnp.ones((Sq, Sk), bool)
+    if causal:
+        m &= kj <= qi
+    if window > 0:
+        m &= kj > qi - window
+    s = jnp.where(m, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def ref_mamba_scan(xc, dt, a, b, c, d_skip):
+    """Sequential-scan oracle.  Shapes as kernels.mamba_scan."""
+    B, L, DI = xc.shape
+    ST = a.shape[1]
+
+    def step(h, xs):
+        x_t, dt_t, b_t, c_t = xs
+        decay = jnp.exp(dt_t[:, :, None] * a[None])  # (B, DI, ST)
+        drive = (dt_t * x_t)[:, :, None] * b_t[:, None, :]
+        h = decay * h + drive
+        y = jnp.einsum("bds,bs->bd", h, c_t) + d_skip * x_t
+        return h, y
+
+    h0 = jnp.zeros((B, DI, ST), jnp.float32)
+    xs = (
+        jnp.moveaxis(xc.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(c.astype(jnp.float32), 1, 0),
+    )
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_last
+
+
+def ref_rglru_scan(a, b):
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    h0 = jnp.zeros(a.shape[::2][:1] + a.shape[2:], jnp.float32)
+    h0 = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+    xs = (
+        jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+    )
+    h_last, hs = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(hs, 0, 1), h_last
+
+
+def ref_moe_gmm(x, w):
+    return jnp.einsum(
+        "ecd,edf->ecf", x.astype(jnp.float32), w.astype(jnp.float32)
+    ).astype(x.dtype)
+
+
+def ref_embedding_bag(tables, indices):
+    """tables: (T, R, E); indices: (B, T, NNZ) -> (B, T, E)."""
+    T = tables.shape[0]
+    gathered = tables[jnp.arange(T)[None, :, None], indices]  # (B, T, NNZ, E)
+    return gathered.sum(axis=2)

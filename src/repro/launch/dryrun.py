@@ -1,0 +1,232 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ---------------------------------------------------------------------------
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+# ShapeDtypeStruct inputs (no allocation), record memory/cost analyses and
+# collective bytes for the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+# ---------------------------------------------------------------------------
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import (
+    ALL_SHAPES,
+    ArchConfig,
+    ShapeSpec,
+    all_configs,
+    get_config,
+    input_specs,
+    shape_applicability,
+)
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import roofline
+from repro.models import lm
+from repro.optim import adamw, constant
+from repro.parallel.sharding import (
+    ShardingPlan,
+    batch_sharding,
+    opt_state_sharding,
+    param_sharding,
+)
+from repro.train.steps import make_serve_step, make_train_step
+
+
+def plan_from_args(args, cfg: ArchConfig, shape: ShapeSpec) -> ShardingPlan:
+    return ShardingPlan(
+        fsdp=not args.no_fsdp,
+        seq_parallel=args.seq_parallel,
+        remat=args.remat,
+        loss_chunk=args.loss_chunk,
+    )
+
+
+def options_from_args(args):
+    from repro.parallel.options import ModelOptions
+
+    return ModelOptions(
+        attention_impl=args.attention,
+        attention_chunk=args.attention_chunk,
+        scan_impl=args.scan,
+        scan_chunk=args.scan_chunk,
+        moe_constrain=args.moe_constrain,
+        moe_gather_constrain=args.moe_gather_constrain,
+        lowp_norm=args.lowp_norm,
+    )
+
+
+def dryrun_cell(cfg: ArchConfig, shape: ShapeSpec, mesh, plan: ShardingPlan) -> dict:
+    """Lower+compile one cell; returns the §Dry-run record."""
+    from repro.train.steps import install_activation_policy
+
+    install_activation_policy(plan, mesh)
+    chips = mesh.devices.size
+    batch_specs = input_specs(cfg, shape)
+    b_sh = batch_sharding(batch_specs, cfg, plan, mesh)
+    p_specs = lm.param_specs(cfg)
+    p_sh = param_sharding(p_specs, plan, mesh)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            optimizer = adamw(constant(3e-4))
+            o_specs = jax.eval_shape(optimizer.init, p_specs)
+            o_sh = opt_state_sharding(o_specs, plan, mesh)
+            step_fn = make_train_step(cfg, optimizer, plan)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_sh, o_sh, b_sh, None),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(
+                p_specs, o_specs, batch_specs,
+                jax.ShapeDtypeStruct((), jax.numpy.int32),
+            )
+        else:
+            serve = make_serve_step(cfg, shape)
+            if shape.kind == "decode":
+                cache_sh = b_sh
+                jitted = jax.jit(
+                    serve, in_shardings=(p_sh, b_sh),
+                    out_shardings=(None, b_sh["cache"]),
+                    donate_argnums=(1,),
+                )
+            else:
+                jitted = jax.jit(serve, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(p_specs, batch_specs)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+            "alias_size_in_bytes",
+        ):
+            if hasattr(ma, k):
+                mem[k] = getattr(ma, k)
+    except Exception as e:  # pragma: no cover
+        mem["error"] = str(e)
+
+    cost_list = compiled.cost_analysis()
+    cost = cost_list if isinstance(cost_list, dict) else cost_list[0]
+    hlo = analyze_hlo(compiled.as_text())
+    terms = roofline(hlo, hlo["collective_bytes"], chips, cfg, shape)
+
+    return {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "mesh": dict(zip(mesh.axis_names, [int(mesh.shape[a]) for a in mesh.axis_names])),
+        "chips": int(chips),
+        "plan": {
+            "fsdp": plan.fsdp,
+            "seq_parallel": plan.seq_parallel,
+            "remat": plan.remat,
+            "loss_chunk": plan.loss_chunk,
+        },
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "memory": mem,
+        "xla_cost": {k: cost.get(k) for k in ("flops", "bytes accessed") if k in cost},
+        "hlo": {
+            "flops_per_dev": hlo["flops"],
+            "bytes_per_dev": hlo["bytes"],
+        },
+        "collectives": {
+            "total_bytes": hlo["collective_bytes"],
+            "by_type": hlo["collectives_by_type"],
+        },
+        "roofline": terms.as_dict(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="TopoOpt multi-pod dry-run")
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--remat", default="full", choices=["full", "dots", "none"])
+    ap.add_argument("--loss-chunk", type=int, default=0)
+    ap.add_argument("--attention", default="naive", choices=["naive", "chunked"])
+    ap.add_argument("--attention-chunk", type=int, default=1024)
+    ap.add_argument("--scan", default="assoc",
+                    choices=["assoc", "assoc_ckpt", "seq"])
+    ap.add_argument("--moe-constrain", action="store_true")
+    ap.add_argument("--moe-gather-constrain", action="store_true")
+    ap.add_argument("--lowp-norm", action="store_true")
+    ap.add_argument("--scan-chunk", type=int, default=256)
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+
+    from repro.parallel.options import set_options
+
+    set_options(options_from_args(args))
+
+    configs = all_configs()
+    archs = [get_config(args.arch)] if args.arch else [
+        c for c in configs.values() if c.family != "recsys"
+    ]
+    shapes = [s for s in ALL_SHAPES if args.shape is None or s.name == args.shape]
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod", make_production_mesh(multi_pod=True)))
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_skip = n_fail = 0
+    for cfg in archs:
+        for shape in shapes:
+            ok, why = shape_applicability(cfg, shape)
+            if not ok:
+                print(f"SKIP  {cfg.name} x {shape.name}: {why}", flush=True)
+                n_skip += 1
+                continue
+            for mesh_name, mesh in meshes:
+                plan = plan_from_args(args, cfg, shape)
+                tag = f"{cfg.name}_{shape.name}_{mesh_name}_{args.tag}"
+                try:
+                    rec = dryrun_cell(cfg, shape, mesh, plan)
+                    rec["mesh_name"] = mesh_name
+                    rec["tag"] = args.tag
+                    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                        json.dump(rec, f, indent=1)
+                    r = rec["roofline"]
+                    print(
+                        f"OK    {tag}: compile={rec['compile_s']:.1f}s "
+                        f"dominant={r['dominant']} "
+                        f"compute={r['compute_s']*1e3:.2f}ms "
+                        f"mem={r['memory_s']*1e3:.2f}ms "
+                        f"coll={r['collective_s']*1e3:.2f}ms "
+                        f"useful={r['useful_fraction']:.2f} mfu={r['mfu']:.3f}",
+                        flush=True,
+                    )
+                    n_ok += 1
+                except Exception:
+                    print(f"FAIL  {tag}", flush=True)
+                    traceback.print_exc()
+                    n_fail += 1
+    print(f"dry-run complete: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

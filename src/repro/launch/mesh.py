@@ -1,0 +1,29 @@
+"""Production meshes.
+
+Functions (never module-level constants) so importing this module does not
+touch jax device state — only the dry-run forces 512 host devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips as (data=16, model=16).  Multi-pod: 2 pods of
+    256 as (pod=2, data=16, model=16)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for CPU tests (requires forced host device count)."""
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e hardware constants used by the roofline analysis (EXPERIMENTS.md).
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_LINK_BW = 50e9  # bytes/s per link
+ICI_LINKS_PER_CHIP = 4

@@ -1,0 +1,133 @@
+"""Roofline terms from a compiled dry-run artifact (EXPERIMENTS.md §Roofline).
+
+compute    = HLO_FLOPs   / (chips x 197 TFLOP/s bf16)
+memory     = HLO_bytes   / (chips x 819 GB/s HBM)
+collective = coll_bytes  / (chips x 50 GB/s/link x links-used)
+
+``cost_analysis()`` FLOPs/bytes on an SPMD program are per-device; we report
+both per-device and whole-job numbers.  MODEL_FLOPS = 6*N*D (dense) or
+6*N_active*D (MoE) with D = tokens processed per step.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+from ..configs.base import ArchConfig, ShapeSpec
+from .mesh import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16
+
+
+def param_counts(cfg: ArchConfig) -> dict:
+    """(total, expert, embedding) parameter counts from the init specs."""
+    from ..models import lm
+
+    specs = lm.param_specs(cfg)
+    total = expert = embed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(specs)[0]:
+        names = [str(k.key) for k in path if hasattr(k, "key")]
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if "moe" in names and names[-1] in ("wg", "wu", "wd"):
+            expert += n
+        if names and names[-1] in ("embed", "lm_head"):
+            embed += n
+    return {"total": total, "expert": expert, "embedding": embed}
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """6*N*D (training) / 2*N*D (inference), N = active non-embedding params."""
+    counts = param_counts(cfg)
+    n_active = counts["total"] - counts["embedding"]
+    if cfg.n_experts:
+        n_active -= counts["expert"] * (1.0 - cfg.top_k / cfg.n_experts)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 2.0
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        factor = 2.0
+    return factor * n_active * tokens
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float  # whole job
+    hlo_bytes: float  # whole job
+    collective_bytes: float  # per-device program
+    model_flops: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste detector."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline-optimistic step time: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline-optimistic step time."""
+        denom = self.step_time_s * self.chips * PEAK_FLOPS_BF16
+        return self.model_flops / denom if denom else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_bytes_per_dev": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "useful_fraction": self.useful_fraction,
+            "step_time_s": self.step_time_s,
+            "mfu": self.mfu,
+            "chips": self.chips,
+        }
+
+
+def roofline(
+    hlo_analysis: dict,
+    coll_bytes_per_dev: float,
+    chips: int,
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    links_used: int = 4,
+) -> RooflineTerms:
+    # Per-device numbers from the trip-count-aware HLO analyzer
+    # (launch.hlo_analysis — XLA's cost_analysis counts loop bodies once).
+    flops_dev = float(hlo_analysis.get("flops", 0.0))
+    bytes_dev = float(hlo_analysis.get("bytes", 0.0))
+    return RooflineTerms(
+        compute_s=flops_dev / PEAK_FLOPS_BF16,
+        memory_s=bytes_dev / HBM_BW,
+        collective_s=coll_bytes_per_dev / (ICI_LINK_BW * links_used),
+        hlo_flops=flops_dev * chips,
+        hlo_bytes=bytes_dev * chips,
+        collective_bytes=coll_bytes_per_dev,
+        model_flops=model_flops(cfg, shape),
+        chips=chips,
+    )

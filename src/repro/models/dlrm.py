@@ -1,0 +1,94 @@
+"""DLRM in JAX (paper §2.1, List 1) — the paper's flagship workload.
+
+Embedding tables + bottom/top MLPs + pairwise dot interaction, matching
+facebookresearch/dlrm's architecture at configurable scale.  Used by the
+testbed-reproduction example and the embedding-bag kernel.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+@dataclass(frozen=True)
+class DLRMConfig:
+    n_tables: int = 8
+    rows_per_table: int = 1000
+    embed_dim: int = 32
+    dense_features: int = 13
+    bottom_mlp: tuple[int, ...] = (64, 32)
+    top_mlp: tuple[int, ...] = (64, 1)
+
+
+def init(key, cfg: DLRMConfig):
+    keys = jax.random.split(key, 3 + cfg.n_tables)
+    tables = jnp.stack(
+        [
+            L.truncated_normal(
+                keys[i],
+                (cfg.rows_per_table, cfg.embed_dim),
+                1.0 / math.sqrt(cfg.embed_dim),
+                jnp.float32,
+            )
+            for i in range(cfg.n_tables)
+        ]
+    )
+
+    def mlp_init(k, dims):
+        ws = []
+        ks = jax.random.split(k, len(dims) - 1)
+        for i in range(len(dims) - 1):
+            ws.append(
+                {
+                    "w": L.dense_init(ks[i], dims[i], dims[i + 1], jnp.float32),
+                    "b": jnp.zeros((dims[i + 1],), jnp.float32),
+                }
+            )
+        return ws
+
+    n_pairs = (cfg.n_tables + 1) * cfg.n_tables // 2
+    top_in = cfg.embed_dim + n_pairs
+    return {
+        "tables": tables,
+        "bottom": mlp_init(keys[-2], (cfg.dense_features, *cfg.bottom_mlp, cfg.embed_dim)),
+        "top": mlp_init(keys[-1], (top_in, *cfg.top_mlp)),
+    }
+
+
+def _mlp(ws, x, final_sigmoid=False):
+    for i, lyr in enumerate(ws):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(ws) - 1:
+            x = jax.nn.relu(x)
+    return jax.nn.sigmoid(x) if final_sigmoid else x
+
+
+def forward(params, dense, sparse_ids, cfg: DLRMConfig):
+    """dense: (B, dense_features); sparse_ids: (B, n_tables) int32."""
+    bot = _mlp(params["bottom"], dense)  # (B, E)
+    # Per-table lookup (the Pallas embedding-bag kernel fuses this on TPU).
+    emb = jnp.einsum(
+        "tbe->bte",
+        params["tables"][jnp.arange(cfg.n_tables)[:, None], sparse_ids.T],
+    )  # (B, T, E)
+    feats = jnp.concatenate([bot[:, None, :], emb], axis=1)  # (B, T+1, E)
+    inter = jnp.einsum("bte,bse->bts", feats, feats)
+    iu, ju = jnp.triu_indices(cfg.n_tables + 1, k=1)
+    flat = inter[:, iu, ju]  # (B, n_pairs)
+    top_in = jnp.concatenate([bot, flat], axis=1)
+    return _mlp(params["top"], top_in)[:, 0]
+
+
+def loss_fn(params, batch, cfg: DLRMConfig):
+    logits = forward(params, batch["dense"], batch["sparse"], cfg)
+    y = batch["label"].astype(jnp.float32)
+    loss = jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+    return loss, {"bce": loss}

@@ -1,0 +1,272 @@
+"""Recurrent stacks: RecurrentGemma/Griffin hybrid (RG-LRU + local attention,
+pattern 2:1) and Falcon-Mamba (pure Mamba-1 SSM).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ArchConfig
+from ..parallel.act_sharding import constrain
+from . import layers as L
+
+
+def _stack_init(key, n, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# Falcon-Mamba (ssm)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_params(key, cfg: ArchConfig):
+    ke, kb, kh = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "embed": L.truncated_normal(ke, (cfg.vocab, cfg.d_model), 0.02, dt),
+        "blocks": _stack_init(kb, cfg.n_layers, partial(L.init_mamba, cfg=cfg)),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+        "lm_head": L.dense_init(kh, cfg.d_model, cfg.vocab, dt),
+    }
+
+
+def mamba_forward(params, cfg: ArchConfig, tokens, remat: str = "full",
+                  chunk: int | None = None):
+    from ..parallel.options import get_options
+
+    chunk = chunk or get_options().scan_chunk
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.activation_dtype))
+
+    def block_fn(h, blk):
+        h = constrain(h, "btd")
+        y, _ = L.mamba_block(blk, L.rms_norm(h, blk["norm"]), cfg, chunk=chunk)
+        return constrain(h + y, "btd"), None
+
+    if remat != "none":
+        block_fn = jax.checkpoint(block_fn)
+    x, _ = lax.scan(block_fn, x, params["blocks"])
+    x = L.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return logits, jnp.float32(0.0)
+
+
+def mamba_prefill(params, cfg: ArchConfig, tokens, chunk: int = 256):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.activation_dtype))
+
+    def block_fn(h, blk):
+        h = constrain(h, "btd")
+        y, st = L.mamba_block(blk, L.rms_norm(h, blk["norm"]), cfg,
+                              state=None, chunk=chunk)
+        return constrain(h + y, "btd"), st
+
+    x, states = lax.scan(block_fn, x, params["blocks"])
+    x = L.rms_norm(x[:, -1], params["final_norm"])
+    logits = jnp.einsum("bd,dv->bv", x, params["lm_head"])
+    cache = {"conv": states["conv"], "ssm": states["ssm"]}
+    return logits, cache
+
+
+def mamba_decode_step(params, cfg: ArchConfig, token, pos, cache):
+    x = params["embed"][token].astype(jnp.dtype(cfg.activation_dtype))
+
+    def block_fn(h, xs):
+        blk, conv, ssm = xs
+        y, st = L.mamba_block(
+            blk, L.rms_norm(h, blk["norm"])[:, None], cfg,
+            state={"conv": conv, "ssm": ssm}, chunk=1,
+        )
+        return h + y[:, 0], (st["conv"], st["ssm"])
+
+    x, (conv, ssm) = lax.scan(block_fn, x,
+                              (params["blocks"], cache["conv"], cache["ssm"]))
+    x = L.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bd,dv->bv", x, params["lm_head"])
+    return logits, {"conv": conv, "ssm": ssm}
+
+
+# ---------------------------------------------------------------------------
+# RecurrentGemma / Griffin (hybrid)
+# ---------------------------------------------------------------------------
+
+
+def _init_rec_layer(key, cfg):
+    kr, km = jax.random.split(key)
+    return {"rec": L.init_rglru(kr, cfg), "mlp": L.init_mlp(km, cfg)}
+
+
+def _init_attn_layer(key, cfg):
+    ka, km = jax.random.split(key)
+    return {"attn": L.init_attention(ka, cfg), "mlp": L.init_mlp(km, cfg)}
+
+
+def init_griffin_params(key, cfg: ArchConfig):
+    ke, kb, kt, kh = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    n_blocks = cfg.n_layers // len(cfg.block_pattern)
+
+    def init_triple(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "rec": _stack_init(k1, 2, partial(_init_rec_layer, cfg=cfg)),
+            "attn": _init_attn_layer(k2, cfg),
+        }
+
+    params = {
+        "embed": L.truncated_normal(ke, (cfg.vocab, cfg.d_model), 0.02, dt),
+        "blocks": _stack_init(kb, n_blocks, init_triple),
+        "tail": _stack_init(kt, len(cfg.tail_pattern),
+                            partial(_init_rec_layer, cfg=cfg)),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+        "lm_head": L.dense_init(kh, cfg.d_model, cfg.vocab, dt),
+    }
+    return params
+
+
+def _rec_layer_apply(lyr, h, cfg, state=None, chunk=256):
+    y, st = L.rglru_block(lyr["rec"], L.rms_norm(h, lyr["rec"]["norm"]), cfg,
+                          state=state, chunk=chunk)
+    h = h + y
+    h = h + L.mlp(lyr["mlp"], L.rms_norm(h, lyr["mlp"]["norm"]))
+    return h, st
+
+
+def _attn_layer_apply(lyr, h, cfg, mask, positions):
+    h = h + L.attention(lyr["attn"], L.rms_norm(h, lyr["attn"]["norm"]), cfg,
+                        mask=mask, causal=True, window=cfg.attn_window,
+                        positions=positions)
+    h = h + L.mlp(lyr["mlp"], L.rms_norm(h, lyr["mlp"]["norm"]))
+    return h
+
+
+def griffin_forward(params, cfg: ArchConfig, tokens, remat: str = "full",
+                    chunk: int = 256):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.activation_dtype))
+    S = tokens.shape[1]
+    positions = jnp.arange(S)[None, :]
+    mask = None
+
+    def rec_fn(h, lyr):
+        h, _ = _rec_layer_apply(lyr, constrain(h, "btd"), cfg, chunk=chunk)
+        return constrain(h, "btd"), None
+
+    def triple_fn(h, blk):
+        h, _ = lax.scan(rec_fn, h, blk["rec"])
+        h = _attn_layer_apply(blk["attn"], h, cfg, mask, positions)
+        return constrain(h, "btd"), None
+
+    if remat != "none":
+        triple_fn = jax.checkpoint(triple_fn)
+    x, _ = lax.scan(triple_fn, x, params["blocks"])
+    x, _ = lax.scan(rec_fn, x, params["tail"])
+    x = L.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return logits, jnp.float32(0.0)
+
+
+def griffin_prefill(params, cfg: ArchConfig, tokens, chunk: int = 256):
+    act = jnp.dtype(cfg.activation_dtype)
+    x = params["embed"][tokens].astype(act)
+    B, S = tokens.shape
+    positions = jnp.arange(S)[None, :]
+    mask = None
+    window = min(cfg.attn_window, S)
+    hd = cfg.hd
+
+    def rec_fn(h, lyr):
+        h, st = _rec_layer_apply(lyr, h, cfg, chunk=chunk)
+        return h, st
+
+    def triple_fn(h, blk):
+        h, rec_states = lax.scan(rec_fn, h, blk["rec"])
+        lyr = blk["attn"]
+        src = L.rms_norm(h, lyr["attn"]["norm"])
+        k = L._split_heads(jnp.einsum("btd,de->bte", src, lyr["attn"]["wk"]),
+                           cfg.n_kv_heads, hd)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        v = L._split_heads(jnp.einsum("btd,de->bte", src, lyr["attn"]["wv"]),
+                           cfg.n_kv_heads, hd)
+        # Keep the last `window` positions, laid out as a ring buffer
+        # (slot = pos % window) so decode can continue in place.
+        kw = k[:, -window:].transpose(0, 2, 1, 3)
+        vw = v[:, -window:].transpose(0, 2, 1, 3)
+        start = S - window
+        roll = -(start % window)
+        kw = jnp.roll(kw, roll, axis=2)
+        vw = jnp.roll(vw, roll, axis=2)
+        h = _attn_layer_apply(lyr, h, cfg, mask, positions)
+        return h, (rec_states, (kw.astype(act), vw.astype(act)))
+
+    x, (rec_states, kv) = lax.scan(triple_fn, x, params["blocks"])
+    x, tail_states = lax.scan(rec_fn, x, params["tail"])
+    x = L.rms_norm(x[:, -1], params["final_norm"])
+    logits = jnp.einsum("bd,dv->bv", x, params["lm_head"])
+
+    # rec_states: dict of (n_blocks, 2, ...) -> flatten; tail: (2, ...)
+    def flat(main, tail):
+        m = main.reshape(-1, *main.shape[2:])
+        return jnp.concatenate([m, tail], axis=0)
+
+    cache = {
+        "lru": flat(rec_states["lru"], tail_states["lru"]),
+        "conv": flat(rec_states["conv"], tail_states["conv"]),
+        "k": kv[0],
+        "v": kv[1],
+    }
+    return logits, cache
+
+
+def griffin_decode_step(params, cfg: ArchConfig, token, pos, cache):
+    x = params["embed"][token].astype(jnp.dtype(cfg.activation_dtype))
+    n_blocks = cfg.n_layers // len(cfg.block_pattern)
+    n_rec_main = n_blocks * 2
+
+    lru_m = cache["lru"][:n_rec_main].reshape(n_blocks, 2, *cache["lru"].shape[1:])
+    conv_m = cache["conv"][:n_rec_main].reshape(n_blocks, 2, *cache["conv"].shape[1:])
+    lru_t, conv_t = cache["lru"][n_rec_main:], cache["conv"][n_rec_main:]
+
+    def rec_fn(h, xs):
+        lyr, lru, conv = xs
+        h2, st = _rec_layer_apply(
+            lyr, h[:, None], cfg, state={"lru": lru, "conv": conv}, chunk=1
+        )
+        return h2[:, 0], (st["lru"], st["conv"])
+
+    def rec_fn_seq(h, xs):
+        # same but h stays (B, D): wrap/unwrap inside
+        return rec_fn(h, xs)
+
+    def triple_fn(h, xs):
+        blk, lru, conv, ck, cv = xs
+        h, rec_st = lax.scan(rec_fn_seq, h, (blk["rec"], lru, conv))
+        lyr = blk["attn"]
+        att, nk, nv = L.attention_decode(
+            lyr["attn"], L.rms_norm(h, lyr["attn"]["norm"]), ck, cv, pos, cfg,
+            window=cfg.attn_window,
+        )
+        h = h + att
+        h = h + L.mlp(lyr["mlp"], L.rms_norm(h, lyr["mlp"]["norm"]))
+        return h, (rec_st, (nk, nv))
+
+    x, (rec_st, kv) = lax.scan(
+        triple_fn, x, (params["blocks"], lru_m, conv_m, cache["k"], cache["v"])
+    )
+    x, tail_st = lax.scan(rec_fn_seq, x, (params["tail"], lru_t, conv_t))
+    x = L.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bd,dv->bv", x, params["lm_head"])
+
+    def flat(main, tail):
+        m = main.reshape(-1, *main.shape[2:])
+        return jnp.concatenate([m, tail], axis=0)
+
+    new_cache = {
+        "lru": flat(rec_st[0], tail_st[0]),
+        "conv": flat(rec_st[1], tail_st[1]),
+        "k": kv[0],
+        "v": kv[1],
+    }
+    return logits, new_cache

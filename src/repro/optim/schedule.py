@@ -1,0 +1,48 @@
+"""LR schedules.  minicpm-2b trains with WSD (warmup-stable-decay,
+arXiv:2404.06395); others default to cosine."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def linear_warmup(lr: float, warmup: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        return jnp.float32(lr) * jnp.minimum(1.0, (s + 1) / max(warmup, 1))
+
+    return fn
+
+
+def cosine(lr: float, total_steps: int, warmup: int = 100, final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1) / max(warmup, 1))
+        prog = jnp.clip((s - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.float32(lr) * warm * cos
+
+    return fn
+
+
+def wsd(lr: float, total_steps: int, warmup_frac: float = 0.01,
+        decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup-Stable-Decay: linear warmup, long constant plateau, short
+    exponential-ish (linear here) decay tail."""
+    warmup = max(1, int(total_steps * warmup_frac))
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1) / warmup)
+        decay_prog = jnp.clip(
+            (s - decay_start) / max(total_steps - decay_start, 1), 0.0, 1.0
+        )
+        decay = 1.0 - (1.0 - final_frac) * decay_prog
+        return jnp.float32(lr) * warm * decay
+
+    return fn

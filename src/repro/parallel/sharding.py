@@ -1,0 +1,215 @@
+"""Sharding plans -> PartitionSpec trees.
+
+DP/FSDP over the ``data`` (and ``pod``) axes, TP/EP over ``model``; sequence
+dims of long caches shard over ``model`` (flash-decoding style).  Every spec
+is sanitized against actual divisibility (e.g. minicpm's prime vocab 122753
+cannot shard over 16 — the rule falls back to the next dim) so a single rule
+set covers all 10 architectures.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class ShardingPlan:
+    """How a job is laid out on the mesh (the Comp x Comm plane choice)."""
+
+    fsdp: bool = True          # ZeRO-3: shard params/opt-state over data axes
+    zero1: bool = False        # ZeRO-1: replicate params, shard opt state
+    seq_parallel: bool = False  # shard activation sequence dim over "model"
+    # TopoOpt integration: collective schedule from the co-optimizer.
+    ring_strides: tuple[int, ...] = ()
+    remat: str = "full"
+    loss_chunk: int = 0
+
+    def dp_axes(self, mesh: Mesh):
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop axes whose size does not divide the corresponding dim."""
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for d, axes in zip(shape, dims):
+        if axes is None:
+            out.append(None)
+            continue
+        if _axis_size(mesh, axes) == 0 or d % _axis_size(mesh, axes) != 0:
+            out.append(None)
+        else:
+            out.append(axes)
+    return P(*out)
+
+
+# --- parameter rules --------------------------------------------------------
+
+# (context, name) -> base spec expressed with symbolic axes:
+#   "tp"   -> "model"; "fsdp" -> data axes (if plan.fsdp)
+# base rank = len(spec); extra leading dims (layer stacking) -> None.
+_PARAM_RULES: list[tuple[tuple[str, ...], tuple]] = [
+    (("embed",), ("tp", "fsdp")),
+    (("lm_head",), ("fsdp", "tp")),
+    (("moe", "router"), ("fsdp", None)),
+    (("moe", "wg"), ("tp", "fsdp", None)),
+    (("moe", "wu"), ("tp", "fsdp", None)),
+    (("moe", "wd"), ("tp", None, "fsdp")),
+    (("wq",), ("fsdp", "tp")),
+    (("wk",), ("fsdp", "tp")),
+    (("wv",), ("fsdp", "tp")),
+    (("wo",), ("tp", "fsdp")),
+    (("wg",), ("fsdp", "tp")),
+    (("wu",), ("fsdp", "tp")),
+    (("wd",), ("tp", "fsdp")),
+    (("w1",), ("fsdp", "tp")),
+    (("w2",), ("tp", "fsdp")),
+    (("w_in",), ("fsdp", "tp")),
+    (("w_x",), ("fsdp", "tp")),
+    (("w_y",), ("fsdp", "tp")),
+    (("w_xdbc",), ("tp", None)),
+    (("w_dt",), (None, "tp")),
+    (("w_input_gate",), ("tp", None)),
+    (("w_rec_gate",), ("tp", None)),
+    (("w_out",), ("tp", "fsdp")),
+    (("conv_w",), (None, "tp")),
+    (("conv_b",), ("tp",)),
+    (("a_log",), ("tp", None)),
+    (("d_skip",), ("tp",)),
+    (("b_dt",), ("tp",)),
+    (("lambda_p",), ("tp",)),
+    (("tables",), (None, "tp", None)),
+]
+
+
+def _path_names(path) -> tuple[str, ...]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+    return tuple(names)
+
+
+def _resolve(sym, plan: ShardingPlan, mesh: Mesh, for_params: bool):
+    if sym == "tp":
+        return "model" if "model" in mesh.axis_names else None
+    if sym == "fsdp":
+        if for_params and not plan.fsdp:
+            return None
+        return plan.dp_axes(mesh)
+    return sym
+
+
+def param_spec_tree(param_shapes, plan: ShardingPlan, mesh: Mesh,
+                    for_params: bool = True):
+    """PartitionSpec tree for a parameter pytree (of ShapeDtypeStructs)."""
+
+    def one(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        for key, base in _PARAM_RULES:
+            if len(key) == 1:
+                hit = names and names[-1] == key[0]
+            else:
+                hit = len(names) >= 2 and names[-2:] == key
+            if hit:
+                extra = len(shape) - len(base)
+                if extra < 0:
+                    continue
+                resolved = tuple(
+                    _resolve(s, plan, mesh, for_params) for s in base
+                )
+                return sanitize(P(*([None] * extra), *resolved), shape, mesh)
+        # Default: replicate small leaves; fsdp-shard anything big on its
+        # largest dim as a fallback.
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(one, param_shapes)
+
+
+def param_sharding(param_shapes, plan: ShardingPlan, mesh: Mesh,
+                   for_params: bool = True):
+    specs = param_spec_tree(param_shapes, plan, mesh, for_params=for_params)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def opt_state_sharding(param_shapes, plan: ShardingPlan, mesh: Mesh):
+    """Optimizer moments follow the parameters; under ZeRO-1 the moments are
+    sharded over data even when the params are replicated."""
+    if plan.zero1:
+        plan = ShardingPlan(
+            fsdp=True, zero1=True, seq_parallel=plan.seq_parallel,
+            ring_strides=plan.ring_strides, remat=plan.remat,
+            loss_chunk=plan.loss_chunk,
+        )
+        return param_sharding(param_shapes, plan, mesh, for_params=True)
+    return param_sharding(param_shapes, plan, mesh, for_params=True)
+
+
+# --- batch / cache rules -----------------------------------------------------
+
+
+def batch_spec_tree(batch_shapes, cfg: ArchConfig, plan: ShardingPlan,
+                    mesh: Mesh):
+    dp = plan.dp_axes(mesh)
+    tp = "model" if "model" in mesh.axis_names else None
+    seq = tp if plan.seq_parallel else None
+
+    def cache_spec(name: str, shape):
+        if name in ("ssm",):  # (L, B, DI, ST)
+            return sanitize(P(None, dp, tp, None), shape, mesh)
+        if name in ("conv",):  # (L, B, W, DI)
+            return sanitize(P(None, dp, None, tp), shape, mesh)
+        if name in ("lru",):  # (L, B, DI)
+            return sanitize(P(None, dp, tp), shape, mesh)
+        if name in ("k", "v", "xk", "xv"):  # (L, B, KV, S, D)
+            # Batch over dp, cache sequence over model (flash-decoding).
+            return sanitize(P(None, dp, None, tp, None), shape, mesh)
+        return P(*([None] * len(shape)))
+
+    def one(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        name = names[-1] if names else ""
+        if "cache" in names:
+            return cache_spec(name, shape)
+        if name in ("tokens", "labels"):  # (B, S)
+            return sanitize(P(dp, seq), shape, mesh)
+        if name == "frames":  # (B, S, D)
+            return sanitize(P(dp, seq, None), shape, mesh)
+        if name == "image_embeds":  # (B, T, D)
+            return sanitize(P(dp, None, None), shape, mesh)
+        if name == "token":  # (B,)
+            return sanitize(P(dp), shape, mesh)
+        if name == "pos":
+            return P()
+        if name in ("dense", "sparse", "label"):
+            return sanitize(P(dp, *([None] * (len(shape) - 1))), shape, mesh)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shapes)
+
+
+def batch_sharding(batch_shapes, cfg: ArchConfig, plan: ShardingPlan,
+                   mesh: Mesh):
+    specs = batch_spec_tree(batch_shapes, cfg, plan, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)

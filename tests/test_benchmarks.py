@@ -1,0 +1,52 @@
+"""Benchmark harness smoke tests (reduced parameters) + paper-claim checks
+that the full runs validate at scale."""
+
+import pytest
+
+
+def test_cost_bench():
+    from benchmarks import bench_cost
+
+    rows = bench_cost.run()
+    assert len(rows) >= 4
+    for row in rows:
+        assert row["ideal_switch"] > row["topoopt_patch"]
+
+
+def test_alltoall_bench_tax_grows_with_degree_drop():
+    from benchmarks import bench_alltoall
+
+    rows = bench_alltoall.run(batches=(128,), degrees=(4, 8))
+    tax = {r["name"]: r["bandwidth_tax"] for r in rows}
+    # higher degree -> lower forwarding tax (Fig. 13)
+    assert tax["alltoall_d8_bs128"] < tax["alltoall_d4_bs128"]
+
+
+def test_pathlen_bench_degree_effect():
+    from benchmarks import bench_pathlen
+
+    rows = bench_pathlen.run(degrees=(4, 8))
+    mp = {r["name"]: r["mean_path"] for r in rows}
+    # Fig. 14: mean path length drops substantially from d=4 to d=8
+    assert mp["pathlen_d8"] < mp["pathlen_d4"]
+    assert mp["pathlen_d4"] < 8.0
+
+
+def test_dedicated_bench_single_model():
+    from benchmarks import bench_dedicated
+
+    rows = bench_dedicated.run(models=("vgg16",), bandwidths=(100,),
+                               mcmc_iters=20)
+    row = rows[0]
+    # similar-cost fat-tree is slower than TopoOpt; ideal >= TopoOpt comm.
+    assert row["fat_tree_s"] > row["topoopt_s"]
+    assert row["fat_tree_paper_s"] > row["fat_tree_s"] * 0.99
+
+
+def test_shared_bench_ratio_grows_with_load():
+    from benchmarks import bench_shared
+
+    rows = bench_shared.run(loads=(0.2, 1.0))
+    r20 = float(rows[0]["fat_tree_mean"] / rows[0]["topoopt_mean"])
+    r100 = float(rows[1]["fat_tree_mean"] / rows[1]["topoopt_mean"])
+    assert r100 > r20 > 1.0

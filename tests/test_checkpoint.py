@@ -1,0 +1,105 @@
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import (
+    available_steps,
+    latest_step,
+    load_checkpoint,
+    prune_checkpoints,
+    save_checkpoint,
+)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(k, (4, 8)),
+        "nested": {"b": jnp.arange(10, dtype=jnp.int32), "c": jnp.float32(3.5)},
+    }
+
+
+def _specs(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def test_roundtrip(tmp_path):
+    params = _tree()
+    opt = {"m": _tree(1)}
+    save_checkpoint(str(tmp_path), 7, params, opt)
+    step, p2, o2, manifest = load_checkpoint(str(tmp_path), _specs(params), _specs(opt))
+    assert step == 7 and manifest["step"] == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(opt), jax.tree.leaves(o2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_prune(tmp_path):
+    params = _tree()
+    for s in (10, 20, 30, 40):
+        save_checkpoint(str(tmp_path), s, params)
+    assert latest_step(str(tmp_path)) == 40
+    prune_checkpoints(str(tmp_path), keep=2)
+    assert available_steps(str(tmp_path)) == [30, 40]
+
+
+def test_no_staging_dirs_left(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())
+    leftovers = [d for d in os.listdir(tmp_path) if d.startswith(".staging")]
+    assert not leftovers
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())
+    bad_specs = {
+        "a": jax.ShapeDtypeStruct((3, 3), jnp.float32),
+        "nested": {
+            "b": jax.ShapeDtypeStruct((10,), jnp.int32),
+            "c": jax.ShapeDtypeStruct((), jnp.float32),
+        },
+    }
+    with pytest.raises(ValueError, match="shape"):
+        load_checkpoint(str(tmp_path), bad_specs)
+
+
+def test_missing_dir():
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint("/nonexistent/ckpts", {})
+
+
+def test_elastic_restore_subprocess(tmp_path):
+    """Write under 1 device, restore under 8 with target shardings —
+    the elastic path (arrays saved global, re-placed on load)."""
+    from _subproc import run_with_devices
+
+    params = _tree()
+    save_checkpoint(str(tmp_path), 5, params)
+    out = run_with_devices(
+        f"""
+import jax, numpy as np
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.checkpoint.ckpt import load_checkpoint
+
+mesh = jax.make_mesh((8,), ("data",))
+specs = {{
+    "a": jax.ShapeDtypeStruct((4, 8), jnp.float32),
+    "nested": {{"b": jax.ShapeDtypeStruct((10,), jnp.int32),
+               "c": jax.ShapeDtypeStruct((), jnp.float32)}},
+}}
+shardings = {{
+    "a": NamedSharding(mesh, P(None, "data")),
+    "nested": {{"b": NamedSharding(mesh, P()), "c": NamedSharding(mesh, P())}},
+}}
+step, p, _, _ = load_checkpoint(r"{tmp_path}", specs, param_shardings=shardings)
+assert step == 5
+assert len(p["a"].sharding.device_set) == 8
+print("PASS")
+""",
+        n_devices=8,
+    )
+    assert "PASS" in out

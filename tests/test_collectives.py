@@ -1,0 +1,120 @@
+"""Multi-ring TotientPerms collectives vs lax.psum (8 fake devices,
+subprocess-isolated)."""
+
+from _subproc import run_with_devices
+
+
+def test_ring_and_multiring_allreduce_match_psum():
+    out = run_with_devices(
+        """
+import jax, numpy as np
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+from repro.core.collectives import ring_all_reduce, multi_ring_all_reduce
+
+mesh = jax.make_mesh((8,), ("x",))
+x = jnp.arange(8 * 13, dtype=jnp.float32).reshape(8, 13)
+ref = jax.jit(shard_map(lambda v: jax.lax.psum(v, "x"), mesh=mesh,
+                        in_specs=P("x"), out_specs=P("x")))(x)
+for strides in [(1,), (3,), (5,), (7,), (1, 3), (1, 3, 5), (1, 3, 5, 7)]:
+    fn = (lambda ss: lambda v: multi_ring_all_reduce(v, "x", ss))(strides)
+    out = jax.jit(shard_map(fn, mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
+    assert np.allclose(out, ref), strides
+print("PASS")
+""",
+        n_devices=8,
+    )
+    assert "PASS" in out
+
+
+def test_all_to_all_ring_matches_transpose():
+    out = run_with_devices(
+        """
+import jax, numpy as np
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+from repro.core.collectives import all_to_all_ring
+
+mesh = jax.make_mesh((8,), ("x",))
+y = jnp.arange(8 * 8 * 4, dtype=jnp.float32).reshape(8, 8, 4)
+for p in (1, 3, 5):
+    fn = (lambda pp: lambda v: all_to_all_ring(v[0], "x", pp)[None])(p)
+    out = jax.jit(shard_map(fn, mesh=mesh, in_specs=P("x"), out_specs=P("x")))(y)
+    assert np.allclose(out, np.transpose(np.asarray(y), (1, 0, 2))), p
+print("PASS")
+""",
+        n_devices=8,
+    )
+    assert "PASS" in out
+
+
+def test_reduce_scatter_owns_correct_segment():
+    out = run_with_devices(
+        """
+import jax, numpy as np
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+from repro.core.collectives import ring_reduce_scatter
+
+mesh = jax.make_mesh((8,), ("x",))
+x = jnp.arange(8 * 16, dtype=jnp.float32).reshape(8, 16)
+out = jax.jit(shard_map(lambda v: ring_reduce_scatter(v, "x", 3), mesh=mesh,
+                        in_specs=P("x"), out_specs=P("x")))(x)
+full = np.asarray(x).sum(axis=0)
+n, seg = 8, 2
+padded = full.reshape(n, seg)
+inv = pow(3, -1, 8)
+got = np.asarray(out).reshape(8, seg)
+for dev in range(8):
+    pos = (dev * inv) % 8
+    assert np.allclose(got[dev], padded[(pos + 1) % 8]), dev
+print("PASS")
+""",
+        n_devices=8,
+    )
+    assert "PASS" in out
+
+
+def test_int_exactness_of_multiring():
+    """AllReduce of integers must be exact regardless of ring count."""
+    out = run_with_devices(
+        """
+import jax, numpy as np
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+from repro.core.collectives import multi_ring_all_reduce
+
+mesh = jax.make_mesh((8,), ("x",))
+x = jnp.arange(8 * 11, dtype=jnp.int32).reshape(8, 11)
+out = jax.jit(shard_map(lambda v: multi_ring_all_reduce(v, "x", (1, 3, 5)),
+                        mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
+assert np.array_equal(np.asarray(out)[0], np.asarray(x).sum(0))
+print("PASS")
+""",
+        n_devices=8,
+    )
+    assert "PASS" in out
+
+
+def test_device_order_mesh():
+    out = run_with_devices(
+        """
+import jax, numpy as np
+from repro.core.device_order import permuted_axis_order, topoopt_mesh
+
+order = permuted_axis_order(8, 3)
+assert sorted(order) == list(range(8))
+assert order[1] == 3  # position j holds device (j * p) % n
+
+mesh = topoopt_mesh((8,), ("data",), allreduce_axis="data", stride=3)
+ids = [d.id for d in mesh.devices.flat]
+assert ids == order, (ids, order)
+print("PASS")
+""",
+        n_devices=8,
+    )
+    assert "PASS" in out

@@ -1,0 +1,59 @@
+"""Cost model (§5.2): validate the paper's headline cost ratios."""
+
+import pytest
+
+from repro.core.costmodel import (
+    ClusterSpec,
+    cost_equivalent_bandwidth_fraction,
+    cost_report,
+    expander_cost,
+    fat_tree_cost,
+    ideal_switch_cost,
+    sipml_cost,
+    topoopt_cost,
+)
+
+
+def test_ideal_vs_topoopt_ratio_about_3x():
+    # Paper: "the ratio of Ideal Switch's cost to TOPOOPT's cost is 3.2x on
+    # average"; at 4,394 servers the ratio is 3.0-3.6x.
+    ratios = []
+    for n in (128, 432, 1024, 4394):
+        spec = ClusterSpec(n_servers=n, degree=4, link_gbps=100)
+        ratios.append(ideal_switch_cost(spec) / topoopt_cost(spec))
+    avg = sum(ratios) / len(ratios)
+    assert 2.2 <= avg <= 4.5, ratios
+
+
+def test_ocs_vs_patch_panel_ratio():
+    # Paper: OCS-based TopoOpt is 1.33x the patch-panel build on average.
+    spec = ClusterSpec(n_servers=432, degree=4, link_gbps=100)
+    ratio = topoopt_cost(spec, use_ocs=True) / topoopt_cost(spec, use_ocs=False)
+    assert 1.15 <= ratio <= 1.6, ratio
+
+
+def test_cost_ordering():
+    spec = ClusterSpec(n_servers=128, degree=4, link_gbps=100)
+    rep = cost_report(spec)
+    # Expander cheapest (no optical layer); SiP-ML and Ideal most expensive.
+    assert rep["expander"] < rep["topoopt_patch"]
+    assert rep["ideal_switch"] > rep["topoopt_patch"]
+    assert rep["sipml"] > rep["topoopt_patch"]
+    assert rep["oversub_fat_tree"] < rep["ideal_switch"]
+
+
+def test_cost_equivalent_fraction_in_range():
+    spec = ClusterSpec(n_servers=128, degree=4, link_gbps=100)
+    frac = cost_equivalent_bandwidth_fraction(spec)
+    assert 0.05 < frac < 1.0
+    # fat tree at that fraction costs ~ topoopt
+    assert fat_tree_cost(spec, bandwidth_fraction=frac) == pytest.approx(
+        topoopt_cost(spec), rel=0.15
+    )
+
+
+def test_costs_scale_with_n():
+    small = ClusterSpec(n_servers=128, degree=4)
+    big = ClusterSpec(n_servers=1024, degree=4)
+    assert topoopt_cost(big) > 6 * topoopt_cost(small)
+    assert expander_cost(big) == pytest.approx(8 * expander_cost(small))

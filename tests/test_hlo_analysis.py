@@ -1,0 +1,112 @@
+"""HLO analyzer: exactness on known programs + while-loop trip counting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def _compile(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile().as_text()
+
+
+def test_matmul_flops_exact():
+    M, K, N = 64, 128, 256
+    text = _compile(
+        lambda x, w: x @ w,
+        jax.ShapeDtypeStruct((M, K), jnp.float32),
+        jax.ShapeDtypeStruct((K, N), jnp.float32),
+    )
+    res = analyze_hlo(text)
+    assert res["flops"] == pytest.approx(2 * M * K * N)
+
+
+def test_scan_multiplies_trip_count():
+    M, K = 32, 64
+    L = 7
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=L)
+        return out
+
+    text = _compile(
+        f,
+        jax.ShapeDtypeStruct((M, K), jnp.float32),
+        jax.ShapeDtypeStruct((K, K), jnp.float32),
+    )
+    res = analyze_hlo(text)
+    assert res["flops"] == pytest.approx(L * 2 * M * K * K)
+
+
+def test_nested_scan():
+    M, K = 16, 32
+
+    def f(x, w):
+        def inner(c, _):
+            return c @ w, None
+
+        def outer(c, _):
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+
+    text = _compile(
+        f,
+        jax.ShapeDtypeStruct((M, K), jnp.float32),
+        jax.ShapeDtypeStruct((K, K), jnp.float32),
+    )
+    res = analyze_hlo(text)
+    assert res["flops"] == pytest.approx(15 * 2 * M * K * K)
+
+
+def test_bytes_nonzero_and_reasonable():
+    M = 512
+    text = _compile(
+        lambda x: jnp.tanh(x) * 2.0 + 1.0,
+        jax.ShapeDtypeStruct((M, M), jnp.float32),
+    )
+    res = analyze_hlo(text)
+    # fused elementwise: ~1 read + 1 write of the array
+    assert 2 * M * M * 4 <= res["bytes"] <= 10 * M * M * 4
+
+
+def test_collectives_on_synthetic_hlo():
+    text = """
+HloModule test
+
+%cond (p: (s32[], f32[16])) -> pred[] {
+  %p = (s32[], f32[16]) parameter(0)
+  %gte = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%gte, %c), direction=LT
+}
+
+%body (p.1: (s32[], f32[16])) -> (s32[], f32[16]) {
+  %p.1 = (s32[], f32[16]) parameter(0)
+  %gte.1 = s32[] get-tuple-element(%p.1), index=0
+  %gte.2 = f32[16] get-tuple-element(%p.1), index=1
+  %one = s32[] constant(1)
+  %next = s32[] add(%gte.1, %one)
+  %ar = f32[16]{0} all-reduce(%gte.2), to_apply=%add_comp
+  ROOT %t = (s32[], f32[16]) tuple(%next, %ar)
+}
+
+ENTRY %main (x: f32[16]) -> f32[16] {
+  %x = f32[16]{0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[16]) tuple(%zero, %x)
+  %w = (s32[], f32[16]) while(%init), condition=%cond, body=%body
+  %res = f32[16]{0} get-tuple-element(%w), index=1
+  ROOT %ag = f32[32]{0} all-gather(%res), dimensions={0}
+}
+"""
+    res = analyze_hlo(text)
+    # all-reduce: 12 trips x 2 x 64B = 1536; all-gather: 128B
+    assert res["collectives_by_type"]["all-reduce"] == pytest.approx(12 * 2 * 64)
+    assert res["collectives_by_type"]["all-gather"] == pytest.approx(128)

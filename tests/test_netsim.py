@@ -1,0 +1,79 @@
+import numpy as np
+import pytest
+
+from repro.core.demand import TrafficDemand, data_parallel_demand
+from repro.core.fabrics import expander_topology, generic_comm_time, sipml_ring_topology
+from repro.core.netsim import (
+    HardwareSpec,
+    compute_time,
+    fat_tree_comm_time,
+    ideal_switch_comm_time,
+    iteration_time,
+    topoopt_comm_time,
+)
+from repro.core.topology_finder import topology_finder
+
+
+HW = HardwareSpec(link_bandwidth=12.5e9, degree=4)  # 100 Gbps
+
+
+def test_ideal_switch_allreduce_time():
+    dem = data_parallel_demand(16, 1e9)
+    t = ideal_switch_comm_time(dem, HW)
+    expected = 2 * 15 / 16 * 1e9 / (4 * 12.5e9)
+    assert t == pytest.approx(expected)
+
+
+def test_topoopt_matches_ideal_for_pure_dp():
+    # d rings at B each == one pipe at d*B for ring AllReduce.
+    dem = data_parallel_demand(16, 1e9)
+    topo = topology_finder(dem, degree=4)
+    t = topoopt_comm_time(topo, dem, HW)
+    assert t["comm_time"] == pytest.approx(ideal_switch_comm_time(dem, HW), rel=1e-6)
+    assert t["bandwidth_tax"] == 1.0
+
+
+def test_fat_tree_slower_at_reduced_bandwidth():
+    dem = data_parallel_demand(16, 1e9)
+    t_ideal = ideal_switch_comm_time(dem, HW)
+    t_ft = fat_tree_comm_time(dem, HW, bandwidth_fraction=0.35)
+    assert t_ft == pytest.approx(t_ideal / 0.35)
+
+
+def test_mp_forwarding_incurs_tax():
+    dem = TrafficDemand(n=16)
+    dem.add_all_to_all(range(16), 1e6)
+    dem.allreduce.append(
+        __import__("repro.core.demand", fromlist=["AllReduceGroup"]).AllReduceGroup(
+            members=tuple(range(16)), nbytes=1.0
+        )
+    )
+    topo = topology_finder(dem, degree=4)
+    t = topoopt_comm_time(topo, dem, HW)
+    assert t["bandwidth_tax"] > 1.0  # multi-hop forwarding
+
+
+def test_iteration_time_overlap():
+    assert iteration_time(2.0, 3.0, overlap=0.0) == 5.0
+    assert iteration_time(2.0, 3.0, overlap=1.0) == 3.0
+    assert iteration_time(2.0, 3.0, overlap=0.5) == 4.0
+
+
+def test_compute_time():
+    hw = HardwareSpec(compute_flops=100.0, compute_efficiency=0.5)
+    assert compute_time(1000.0, 2, hw) == pytest.approx(10.0)
+
+
+def test_expander_topology_regular():
+    topo = expander_topology(16, 4, seed=1)
+    assert set(topo.out_degrees()) == {4}
+    dem = data_parallel_demand(16, 1e9)
+    t = generic_comm_time(topo, dem, HW)
+    assert t > 0
+
+
+def test_sipml_ring_neighbors():
+    topo = sipml_ring_topology(8, 4)
+    assert topo.graph.has_edge(0, 1) and topo.graph.has_edge(0, 7)
+    assert topo.graph.has_edge(0, 2) and topo.graph.has_edge(0, 6)
+    assert not topo.graph.has_edge(0, 4)

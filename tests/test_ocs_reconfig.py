@@ -1,0 +1,43 @@
+import networkx as nx
+import numpy as np
+
+from repro.core.ocs_reconfig import ocs_topology
+
+
+def test_highest_demand_gets_most_links():
+    n = 8
+    demand = np.ones((n, n))
+    demand[0, 1] = 100.0
+    g = ocs_topology(n, demand, degree=4)
+    assert g.number_of_edges(0, 1) >= 2  # parallel links for the elephant
+
+
+def test_degree_respected():
+    n = 8
+    rng = np.random.default_rng(0)
+    demand = rng.random((n, n)) * 100
+    g = ocs_topology(n, demand, degree=3)
+    for v in range(n):
+        assert g.out_degree(v) <= 3
+        assert g.in_degree(v) <= 3
+
+
+def test_connectivity_repair():
+    # two cliques of demand, zero cross demand: repair must connect them
+    n = 8
+    demand = np.zeros((n, n))
+    demand[:4, :4] = 10.0
+    demand[4:, 4:] = 10.0
+    np.fill_diagonal(demand, 0.0)
+    g = ocs_topology(n, demand, degree=3, ensure_connected=True)
+    assert nx.is_weakly_connected(nx.DiGraph(g))
+
+
+def test_discounting_spreads_links():
+    n = 6
+    demand = np.ones((n, n)) * 10
+    np.fill_diagonal(demand, 0.0)
+    g = ocs_topology(n, demand, degree=3)
+    # uniform demand with halving: links spread over many pairs
+    pairs = {(a, b) for a, b in g.edges()}
+    assert len(pairs) >= n  # not all parallel on one pair

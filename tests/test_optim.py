@@ -1,0 +1,70 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw, apply_updates, constant, cosine, sgd_momentum, wsd
+
+
+def test_adamw_converges_quadratic():
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    opt = adamw(constant(0.1), weight_decay=0.0)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s, i):
+        g = {"w": p["w"] - target}
+        return opt.update(g, s, p, i)
+
+    for i in range(200):
+        params, state = step(params, state, jnp.int32(i))
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target), atol=1e-2)
+
+
+def test_adamw_bf16_master_copy():
+    params = {"w": jnp.zeros(4, jnp.bfloat16)}
+    opt = adamw(constant(1e-3))
+    state = opt.init(params)
+    assert state["master"]["w"].dtype == jnp.float32
+    g = {"w": jnp.ones(4, jnp.bfloat16)}
+    p2, s2 = opt.update(g, state, params, jnp.int32(0))
+    assert p2["w"].dtype == jnp.bfloat16
+    assert s2["master"]["w"].dtype == jnp.float32
+    # master tracks more precision than bf16 params
+    assert not np.allclose(np.asarray(s2["master"]["w"]), 0.0)
+
+
+def test_sgd_momentum_converges():
+    target = jnp.array([0.5, -0.5])
+    params = {"w": jnp.zeros(2)}
+    opt = sgd_momentum(constant(0.05), momentum=0.9)
+    state = opt.init(params)
+    for i in range(300):
+        g = {"w": params["w"] - target}
+        params, state = opt.update(g, state, params, jnp.int32(i))
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target), atol=1e-2)
+
+
+def test_wsd_schedule_shape():
+    fn = wsd(1.0, total_steps=1000, warmup_frac=0.01, decay_frac=0.1)
+    warm = float(fn(jnp.int32(0)))
+    stable = float(fn(jnp.int32(500)))
+    decayed = float(fn(jnp.int32(999)))
+    assert warm < stable  # warming up
+    assert stable == pytest.approx(1.0)
+    assert decayed < 0.1  # decay tail
+
+
+def test_cosine_schedule_monotone_after_warmup():
+    fn = cosine(1.0, total_steps=100, warmup=10)
+    vals = [float(fn(jnp.int32(s))) for s in range(100)]
+    assert vals[10] >= vals[50] >= vals[99]
+    assert vals[99] >= 0.099  # final_frac floor
+
+
+def test_apply_updates_preserves_dtype():
+    p = {"w": jnp.zeros(3, jnp.bfloat16)}
+    u = {"w": jnp.ones(3, jnp.float32)}
+    out = apply_updates(p, u)
+    assert out["w"].dtype == jnp.bfloat16

@@ -1,0 +1,112 @@
+"""Hypothesis property tests on system invariants."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.routing import coin_change_mod
+from repro.core.select_perms import coin_change_diameter, select_permutations
+from repro.core.topology_finder import topology_finder
+from repro.core.totient import coprimes, is_valid_ring, ring_edges, totient_perms
+from repro.core.demand import TrafficDemand, AllReduceGroup
+from repro.models.layers import chunked_linear_scan
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(min_value=2, max_value=200))
+def test_totient_rings_always_valid(n):
+    """Invariant (Theorem 2): every coprime stride is a Hamiltonian cycle."""
+    for p in coprimes(n)[:8]:
+        assert is_valid_ring(n, ring_edges(n, p))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=96),
+    d=st.integers(min_value=1, max_value=6),
+)
+def test_coin_change_covers_group(n, d):
+    """Invariant: routing over SelectPermutations strides reaches every node."""
+    sel = select_permutations(totient_perms(range(n), prime_only=False), d)
+    strides = [r.p for r in sel]
+    if not strides:
+        return
+    bt = coin_change_mod(n, strides)
+    assert set(bt) == set(range(1, n))
+    # route lengths bounded by diameter
+    diam = coin_change_diameter(n, strides)
+    assert max(len(v) for v in bt.values()) == diam
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=4, max_value=32),
+    degree=st.integers(min_value=1, max_value=6),
+    ar_bytes=st.floats(min_value=1.0, max_value=1e9),
+    mp_scale=st.floats(min_value=0.0, max_value=1e8),
+    seed=st.integers(min_value=0, max_value=99),
+)
+def test_topology_finder_degree_invariant(n, degree, ar_bytes, mp_scale, seed):
+    """Invariant: no node exceeds its interface budget; network connected."""
+    rng = np.random.default_rng(seed)
+    dem = TrafficDemand(n=n)
+    dem.allreduce.append(AllReduceGroup(members=tuple(range(n)), nbytes=ar_bytes))
+    mp = rng.random((n, n)) * mp_scale
+    np.fill_diagonal(mp, 0.0)
+    dem.mp = mp
+    topo = topology_finder(dem, degree)
+    assert topo.d_allreduce + topo.d_mp == degree
+    assert topo.d_allreduce >= 1
+    assert max(topo.out_degrees()) <= degree + 1  # ceil rounding slack
+    import networkx as nx
+
+    assert nx.is_strongly_connected(nx.DiGraph(topo.graph))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=3),
+    l=st.integers(min_value=1, max_value=65),
+    d=st.integers(min_value=1, max_value=8),
+    chunk=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=999),
+)
+def test_chunked_scan_equals_sequential(b, l, d, chunk, seed):
+    """Invariant: chunked associative scan == plain sequential recurrence for
+    any (shape, chunk) combination including non-dividing chunks."""
+    rng = np.random.default_rng(seed)
+    a = jnp.array(rng.uniform(0.2, 0.95, (b, l, d)), jnp.float32)
+    drv = jnp.array(rng.standard_normal((b, l, d)), jnp.float32)
+    h0 = jnp.array(rng.standard_normal((b, d)), jnp.float32)
+    h_all, h_last = chunked_linear_scan(a, drv, h0, chunk=chunk)
+    # sequential reference
+    h = np.asarray(h0).copy()
+    outs = []
+    for t in range(l):
+        h = np.asarray(a)[:, t] * h + np.asarray(drv)[:, t]
+        outs.append(h.copy())
+    ref = np.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(h_all), ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_last), ref[:, -1], rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(min_value=2, max_value=50),
+    cols=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=99),
+)
+def test_embedding_bag_property(rows, cols, seed):
+    from repro.kernels.embedding_bag import embedding_bag
+    from repro.kernels.ref import ref_embedding_bag
+
+    rng = np.random.default_rng(seed)
+    tables = jnp.array(rng.standard_normal((2, rows, 8)), jnp.float32)
+    idx = jnp.array(rng.integers(0, rows, (1, 2, cols)), jnp.int32)
+    out = embedding_bag(tables, idx, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref_embedding_bag(tables, idx)), rtol=1e-5
+    )

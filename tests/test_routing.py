@@ -1,0 +1,80 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.routing import (
+    RoutingTable,
+    allreduce_routes,
+    bandwidth_tax,
+    coin_change_mod,
+    path_length_stats,
+)
+
+
+def test_coin_change_reaches_every_distance():
+    bt = coin_change_mod(16, [1, 3, 7])
+    assert set(bt) == set(range(1, 16))
+    for m, coins in bt.items():
+        assert sum(coins) % 16 == m
+
+
+def test_coin_change_minimality_stride1():
+    bt = coin_change_mod(8, [1])
+    for m, coins in bt.items():
+        assert len(coins) == m  # only +1 hops available
+
+
+def test_coin_change_uses_big_stride():
+    bt = coin_change_mod(16, [1, 5])
+    # distance 10 = 5+5 (2 hops), not 10 x 1.
+    assert len(bt[10]) == 2
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=64),
+    data=st.data(),
+)
+def test_coin_change_complete_for_coprime_strides(n, data):
+    import math
+
+    cands = [p for p in range(1, n) if math.gcd(p, n) == 1]
+    strides = data.draw(
+        st.lists(st.sampled_from(cands), min_size=1, max_size=3, unique=True)
+    )
+    bt = coin_change_mod(n, strides)
+    assert set(bt) == set(range(1, n))
+
+
+def test_allreduce_routes_follow_rings():
+    members = (0, 1, 2, 3, 4, 5, 6, 7)
+    table = allreduce_routes(members, [1, 3])
+    # every ordered pair routed
+    assert len(table.routes) == 8 * 7
+    for (src, dst), routes in table.routes.items():
+        for r in routes:
+            assert r.path[0] == src and r.path[-1] == dst
+            for a, b in zip(r.path[:-1], r.path[1:]):
+                assert (b - a) % 8 in (1, 3)  # every hop rides a ring edge
+
+
+def test_bandwidth_tax_direct_is_one():
+    t = RoutingTable()
+    t.add(0, 1, (0, 1))
+    assert bandwidth_tax([(0, 1, 100.0)], t) == pytest.approx(1.0)
+
+
+def test_bandwidth_tax_two_hops():
+    t = RoutingTable()
+    t.add(0, 2, (0, 1, 2))
+    assert bandwidth_tax([(0, 2, 100.0)], t) == pytest.approx(2.0)
+
+
+def test_path_length_stats():
+    t = RoutingTable()
+    t.add(0, 1, (0, 1))
+    t.add(0, 2, (0, 1, 2))
+    t.add(0, 3, (0, 1, 2, 3))
+    stats = path_length_stats(t)
+    assert stats["mean"] == pytest.approx(2.0)
+    assert stats["max"] == 3

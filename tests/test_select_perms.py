@@ -1,0 +1,71 @@
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.select_perms import (
+    coin_change_diameter,
+    geometric_targets,
+    select_permutations,
+    theorem1_bound,
+)
+from repro.core.totient import totient_perms
+
+
+def test_geometric_targets_ratio():
+    t = geometric_targets(64, 3)
+    assert t[0] == 1.0
+    assert t[1] / t[0] == pytest.approx(64 ** (1 / 3))
+
+
+def test_geometric_targets_small_ratio_clamps_to_2():
+    t = geometric_targets(8, 6)  # 8^(1/6) < 2
+    assert t[1] / t[0] == 2.0
+
+
+def test_select_permutations_count_and_membership():
+    ps = totient_perms(range(16), prime_only=False)
+    sel = select_permutations(ps, 3)
+    assert len(sel) == 3
+    strides = [r.p for r in sel]
+    assert len(set(strides)) == 3
+    assert all(math.gcd(p, 16) == 1 for p in strides)
+    assert strides[0] == 1  # starts from the minimum candidate
+
+
+def test_select_more_than_available():
+    ps = totient_perms(range(6), prime_only=False)  # phi(6) = 2
+    sel = select_permutations(ps, 5)
+    assert len(sel) == 2
+
+
+def test_diameter_stride1_only():
+    assert coin_change_diameter(16, [1]) == 15
+    assert coin_change_diameter(16, []) == -1
+
+
+@pytest.mark.parametrize("n,d", [(16, 2), (16, 3), (64, 3), (128, 4), (60, 3)])
+def test_theorem1_diameter_bound(n, d):
+    ps = totient_perms(range(n), prime_only=False)
+    sel = select_permutations(ps, d)
+    diam = coin_change_diameter(n, [r.p for r in sel])
+    assert diam > 0
+    bound = theorem1_bound(n, len(sel))
+    # Theorem 1 is O(d * n^(1/d)); allow the constant factor 2.
+    assert diam <= 2 * bound, (n, d, diam, bound)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(min_value=4, max_value=256),
+    d=st.integers(min_value=1, max_value=5),
+)
+def test_selected_strides_always_connect(n, d):
+    # Property: any SelectPermutations output keeps the group reachable
+    # (stride 1 is always selected first so the ring is connected).
+    ps = totient_perms(range(n), prime_only=False)
+    sel = select_permutations(ps, d)
+    if not sel:
+        return
+    diam = coin_change_diameter(n, [r.p for r in sel])
+    assert 0 < diam <= n - 1

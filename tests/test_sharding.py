@@ -1,0 +1,98 @@
+"""Sharding rules: divisibility sanitation + full-leaf coverage for every
+assigned architecture (subprocess with a (2, 4) mesh)."""
+
+from _subproc import run_with_devices
+
+
+def test_param_specs_cover_all_archs():
+    out = run_with_devices(
+        """
+import jax
+from jax.sharding import PartitionSpec as P
+from repro.configs.base import all_configs
+from repro.models import lm
+from repro.parallel.sharding import ShardingPlan, param_spec_tree, sanitize
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+plan = ShardingPlan(fsdp=True)
+for name, cfg in all_configs().items():
+    if cfg.family == "recsys":
+        continue
+    small = cfg.smoke()
+    specs = lm.param_specs(small)
+    tree = param_spec_tree(specs, plan, mesh)
+    flat_specs = jax.tree.leaves(specs)
+    flat_shard = jax.tree_util.tree_leaves(tree, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_specs) == len(flat_shard), name
+    n_sharded = 0
+    for leaf, spec in zip(flat_specs, flat_shard):
+        assert len(spec) <= len(leaf.shape), (name, leaf.shape, spec)
+        for dim, ax in zip(leaf.shape, list(spec) + [None] * 9):
+            if ax is None:
+                continue
+            size = mesh.shape[ax] if isinstance(ax, str) else __import__("math").prod(mesh.shape[a] for a in ax)
+            assert dim % size == 0, (name, leaf.shape, spec)
+            n_sharded += 1
+    assert n_sharded > 0, f"{name}: nothing sharded"
+print("PASS")
+""",
+        n_devices=8,
+    )
+    assert "PASS" in out
+
+
+def test_sanitize_drops_indivisible():
+    out = run_with_devices(
+        """
+import jax
+from jax.sharding import PartitionSpec as P
+from repro.parallel.sharding import sanitize
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+# 122753 is prime (minicpm vocab): model axis must be dropped.
+s = sanitize(P("model", "data"), (122753, 64), mesh)
+assert s == P(None, "data"), s
+s2 = sanitize(P(("data", "model"), None), (16, 7), mesh)
+assert s2 == P(("data", "model"), None)
+s3 = sanitize(P(("data", "model"), None), (12, 7), mesh)
+assert s3 == P(None, None)
+print("PASS")
+""",
+        n_devices=8,
+    )
+    assert "PASS" in out
+
+
+def test_batch_and_cache_specs():
+    out = run_with_devices(
+        """
+import jax
+from jax.sharding import PartitionSpec as P
+from repro.configs.base import all_configs, input_specs, DECODE_32K, TRAIN_4K, shape_applicability
+from repro.parallel.sharding import ShardingPlan, batch_spec_tree
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+plan = ShardingPlan()
+for name, cfg in all_configs().items():
+    if cfg.family == "recsys":
+        continue
+    for shape in (TRAIN_4K, DECODE_32K):
+        ok, _ = shape_applicability(cfg, shape)
+        if not ok:
+            continue
+        b = input_specs(cfg, shape)
+        tree = batch_spec_tree(b, cfg, plan, mesh)
+        leaves = jax.tree.leaves(b)
+        specs = jax.tree_util.tree_leaves(tree, is_leaf=lambda x: isinstance(x, P))
+        assert len(leaves) == len(specs), name
+        # tokens/batch leaves must shard batch over data
+        flat = jax.tree_util.tree_flatten_with_path(tree, is_leaf=lambda x: isinstance(x, P))[0]
+        for path, spec in flat:
+            names = [str(k.key) for k in path if hasattr(k, "key")]
+            if names and names[-1] in ("tokens", "token"):
+                assert spec[0] is not None, (name, shape.name, names, spec)
+print("PASS")
+""",
+        n_devices=8,
+    )
+    assert "PASS" in out

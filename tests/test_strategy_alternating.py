@@ -1,0 +1,52 @@
+import pytest
+
+from repro.core.alternating import alternating_optimize, evaluate, initial_topology
+from repro.core.netsim import HardwareSpec
+from repro.core.strategy_search import Strategy, mcmc_search
+from repro.core.workloads import CANDLE, DLRM, PAPER_JOBS, job_demand
+
+
+HW = HardwareSpec(link_bandwidth=12.5e9, degree=4)
+
+
+def test_dlrm_prefers_hybrid():
+    # §2.1: hybrid placement beats pure DP for DLRM (44 GB -> 4 GB transfers).
+    topo = initial_topology(16, 4)
+    dp_time = evaluate(Strategy(mode="dp"), topo, DLRM, HW)
+    res = mcmc_search(DLRM, topo, HW, iters=120, seed=3)
+    assert res.strategy.mode == "hybrid"
+    assert res.iter_time < dp_time
+
+
+def test_candle_stays_data_parallel():
+    # §5.3: "the best parallelization strategy for CANDLE ... is mostly data
+    # parallel" — CANDLE has no tables so hybrid isn't even reachable.
+    topo = initial_topology(16, 4)
+    res = mcmc_search(CANDLE, topo, HW, iters=60, seed=0)
+    assert res.strategy.mode == "dp"
+
+
+def test_alternating_improves_or_matches_naive():
+    # Co-optimization must beat the strategy search on the initial topology.
+    naive = mcmc_search(DLRM, initial_topology(16, 4), HW, iters=100, seed=1)
+    co = alternating_optimize(DLRM, 16, HW, rounds=3, mcmc_iters=100, seed=1)
+    assert co.iter_time <= naive.iter_time * 1.001
+
+
+def test_alternating_converges():
+    res = alternating_optimize(DLRM, 16, HW, rounds=6, mcmc_iters=60, seed=0)
+    assert len(res.rounds) <= 6
+    assert res.iter_time > 0
+    assert res.topology.n == 16
+
+
+def test_mcmc_history_monotone_best():
+    topo = initial_topology(16, 4)
+    res = mcmc_search(DLRM, topo, HW, iters=80, seed=5)
+    assert res.iter_time <= res.history[0]
+
+
+def test_all_paper_jobs_have_demand():
+    for name, job in PAPER_JOBS.items():
+        dem = job_demand(job, 16)
+        assert dem.sum_allreduce > 0, name

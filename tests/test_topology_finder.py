@@ -1,0 +1,100 @@
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.core.demand import TrafficDemand, data_parallel_demand
+from repro.core.topology_finder import (
+    effective_diameter,
+    repair_topology,
+    topology_finder,
+)
+from repro.core.workloads import DLRM, job_demand
+
+
+def test_pure_dp_allocates_all_degree_to_rings():
+    dem = data_parallel_demand(16, 1e9)
+    topo = topology_finder(dem, degree=4)
+    assert topo.d_allreduce == 4
+    assert topo.d_mp == 0
+    # every node has out-degree exactly 4 (4 rings)
+    assert set(topo.out_degrees()) == {4}
+    strides = topo.ring_strides(tuple(range(16)))
+    assert len(strides) == 4 and len(set(strides)) == 4
+
+
+def test_degree_split_proportional():
+    dem = TrafficDemand(n=8)
+    dem.allreduce.append(
+        __import__("repro.core.demand", fromlist=["AllReduceGroup"]).AllReduceGroup(
+            members=tuple(range(8)), nbytes=1.0
+        )
+    )
+    dem.add_all_to_all(range(8), 10.0)  # MP dominates
+    topo = topology_finder(dem, degree=4)
+    assert topo.d_allreduce >= 1  # line 2: at least one ring
+    assert topo.d_mp >= 2  # most degree to MP
+
+
+def test_pure_mp_still_connected():
+    dem = TrafficDemand(n=8)
+    dem.add_all_to_all(range(8), 5.0)
+    topo = topology_finder(dem, degree=3)
+    assert topo.d_allreduce == 1
+    assert nx.is_strongly_connected(nx.DiGraph(topo.graph))
+
+
+def test_dlrm_topology_serves_every_mp_pair():
+    dem = job_demand(DLRM, 16, table_hosts=[0, 3, 8, 13])
+    topo = topology_finder(dem, degree=4)
+    srcs, dsts = np.nonzero(dem.mp)
+    for s, t in zip(srcs.tolist(), dsts.tolist()):
+        routes = topo.routing.get(int(s), int(t))
+        assert routes, f"no route {s}->{t}"
+        for r in routes:
+            for a, b in zip(r.path[:-1], r.path[1:]):
+                assert topo.graph.has_edge(a, b), f"route uses missing edge {a}->{b}"
+
+
+def test_effective_diameter_bounded():
+    dem = data_parallel_demand(64, 1e9)
+    topo = topology_finder(dem, degree=4)
+    d = effective_diameter(topo)
+    assert 0 < d <= 2 * 4 * 64 ** (1 / 4)
+
+
+def test_repair_swaps_mp_link_for_broken_ring():
+    # Craft an MP-heavy demand so the degree split leaves MP links to donate.
+    dem = TrafficDemand(n=16)
+    from repro.core.demand import AllReduceGroup
+
+    dem.allreduce.append(AllReduceGroup(members=tuple(range(16)), nbytes=1e6))
+    dem.add_all_to_all(range(16), 1e6)
+    topo = topology_finder(dem, degree=6)
+    assert topo.d_mp > 0
+    # break an allreduce ring edge
+    ring = next(iter(topo.rings.values()))[0]
+    u, v = ring.edges()[0]
+    repaired = repair_topology(topo, (u, v))
+    # repaired edge present again (donated from MP budget, §7)
+    assert repaired.graph.has_edge(u, v)
+    # network still strongly connected
+    assert nx.is_strongly_connected(nx.DiGraph(repaired.graph))
+    # no route uses a removed link
+    for (s, t), routes in repaired.routing.routes.items():
+        for r in routes:
+            for a, b in zip(r.path[:-1], r.path[1:]):
+                assert repaired.graph.has_edge(a, b)
+
+
+def test_repair_mp_only_link_reroutes():
+    dem = TrafficDemand(n=8)
+    dem.add_all_to_all(range(8), 5.0)
+    topo = topology_finder(dem, degree=4)
+    mp_edges = [
+        (a, b) for a, b, d in topo.graph.edges(data=True) if d.get("kind") == "mp"
+    ]
+    if not mp_edges:
+        pytest.skip("no MP edges allocated")
+    u, v = mp_edges[0]
+    repaired = repair_topology(topo, (u, v))
+    assert nx.is_strongly_connected(nx.DiGraph(repaired.graph))

@@ -1,0 +1,94 @@
+import math
+
+import pytest
+
+from repro.core.totient import (
+    RingPermutation,
+    coprimes,
+    is_valid_ring,
+    prime_coprimes,
+    ring_edges,
+    ring_order,
+    totient_perms,
+    totient_perms_grouped,
+)
+
+
+def test_coprimes_n12_matches_paper():
+    # Paper §4.3: for n = 12, p in {1, 5, 7, 11}.
+    assert coprimes(12) == [1, 5, 7, 11]
+
+
+def test_coprimes_prime_n():
+    # For prime n every 1 <= p < n is a generator (phi(p) = p - 1).
+    assert len(coprimes(13)) == 12
+
+
+def test_prime_coprimes_subset():
+    ps = prime_coprimes(30)
+    assert 1 in ps
+    for p in ps[1:]:
+        assert math.gcd(p, 30) == 1
+        assert all(p % f for f in range(2, p)) and p >= 2
+    assert set(ps) <= set([1] + coprimes(30))
+
+
+@pytest.mark.parametrize("n", [2, 3, 8, 12, 16, 17, 60])
+def test_every_coprime_stride_is_valid_ring(n):
+    # Theorem 2: each coprime stride yields a Hamiltonian directed cycle.
+    for p in coprimes(n):
+        assert is_valid_ring(n, ring_edges(n, p)), (n, p)
+
+
+def test_non_coprime_stride_rejected():
+    with pytest.raises(ValueError):
+        ring_order(12, 4)
+
+
+@pytest.mark.parametrize("n", [8, 12, 16])
+def test_rings_are_unique(n):
+    # Theorem 2: distinct p -> distinct edge sets.
+    seen = set()
+    for p in coprimes(n):
+        edges = frozenset(ring_edges(n, p))
+        assert edges not in seen
+        seen.add(edges)
+
+
+def test_totient_perms_members_mapping():
+    members = (3, 7, 11, 20, 42)
+    ps = totient_perms(members, prime_only=False)
+    assert ps.group == members
+    for ring in ps.perms:
+        order = ring.order()
+        assert sorted(order) == sorted(members)
+        edges = ring.edges()
+        assert len(edges) == len(members)
+        srcs = [a for a, _ in edges]
+        assert sorted(srcs) == sorted(members)
+
+
+def test_totient_perms_auto_prime_restriction():
+    big = totient_perms(range(128))
+    assert all(p == 1 or _is_prime(p) for p in big.strides)
+    small = totient_perms(range(12))
+    assert small.strides == [1, 5, 7, 11]
+
+
+def _is_prime(x):
+    return x >= 2 and all(x % f for f in range(2, int(math.isqrt(x)) + 1))
+
+
+def test_totient_perms_grouped():
+    sets = totient_perms_grouped(16, 4, prime_only=False)
+    assert len(sets) == 4
+    assert sets[0].group == (0, 1, 2, 3)
+    assert sets[3].group == (12, 13, 14, 15)
+    with pytest.raises(ValueError):
+        totient_perms_grouped(10, 4)
+
+
+def test_ring_permutation_edges_follow_stride():
+    ring = RingPermutation(p=5, members=tuple(range(12)))
+    for a, b in ring.edges():
+        assert (a + 5) % 12 == b
