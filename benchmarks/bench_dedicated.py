@@ -1,5 +1,8 @@
 """Fig. 11 — dedicated cluster of 128 servers (d=4): training iteration time
-across fabrics for the paper's six models, sweeping link bandwidth."""
+across fabrics for the paper's six models, sweeping link bandwidth.
+
+Fluid evaluation goes through the :mod:`repro.core.simengine` facade (which
+subsumes the old ``netsim`` helpers)."""
 
 from __future__ import annotations
 
@@ -8,13 +11,12 @@ import time
 from repro.core.alternating import alternating_optimize, evaluate
 from repro.core.costmodel import ClusterSpec, cost_equivalent_bandwidth_fraction
 from repro.core.fabrics import expander_topology, generic_comm_time, sipml_ring_topology
-from repro.core.netsim import (
+from repro.core.simengine import (
     HardwareSpec,
     compute_time,
     fat_tree_comm_time,
     ideal_switch_comm_time,
     iteration_time,
-    topoopt_comm_time,
 )
 from repro.core.workloads import PAPER_JOBS
 

@@ -5,17 +5,25 @@ demand every 50 ms window (Algorithm 5), pausing traffic for the reconfig
 latency; remaining demand drains at fluid rates on the current topology.
 Compared against TopoOpt's one-shot (latency-free) topology, with and
 without host-based forwarding.
+
+The drain loop is :meth:`repro.core.simengine.SimEngine.reconfig_drain`
+(vectorized circuit drain + per-window BFS cache for forwarded traffic);
+``_drain_time`` remains as a thin shim over it.
 """
 
 from __future__ import annotations
 
 import time
 
-import networkx as nx
 import numpy as np
 
-from repro.core.netsim import HardwareSpec, compute_time, iteration_time, topoopt_comm_time
-from repro.core.ocs_reconfig import RECONFIG_WINDOW, ocs_topology
+from repro.core.simengine import (
+    HardwareSpec,
+    SimEngine,
+    compute_time,
+    iteration_time,
+    topoopt_comm_time,
+)
 from repro.core.topology_finder import topology_finder
 from repro.core.workloads import BERT, DLRM, job_demand
 
@@ -35,63 +43,23 @@ def _demand_matrix(dem) -> np.ndarray:
 
 
 def _drain_time(job, dem, hw, reconfig_latency: float, forwarding: bool) -> float:
-    """Simulate draining one iteration's demand with periodic reconfigs.
-
-    The demand-estimation window shrinks with the reconfiguration latency
-    (fast switches reconfigure per-transfer; slow ones amortize over the
-    paper's 50 ms window)."""
-    remaining = _demand_matrix(dem)
-    window = min(RECONFIG_WINDOW, max(1e-3, 50.0 * reconfig_latency))
-    t = 0.0
-    for _ in range(500):  # safety bound
-        if remaining.sum() <= 1e-3:
-            break
-        g = ocs_topology(N, remaining, DEGREE)
-        t += reconfig_latency
-        # fluid drain on current circuits for one window
-        caps = {}
-        for a, b in g.edges():
-            caps[(a, b)] = caps.get((a, b), 0.0) + hw.link_bandwidth
-        if forwarding:
-            simple = nx.DiGraph(g)
-        budget = window
-        drained = np.zeros_like(remaining)
-        for (a, b), cap in caps.items():
-            move = min(remaining[a, b], cap * budget)
-            drained[a, b] += move
-        if forwarding:
-            # forwarded traffic: anything with no direct link crawls over
-            # shortest path at 1/hops efficiency of a single link.
-            srcs, dsts = np.nonzero(remaining - drained > 1e-6)
-            spare = {k: max(0.0, caps[k] * budget - drained[k]) for k in caps}
-            for a, b in zip(srcs.tolist(), dsts.tolist()):
-                if (a, b) in caps:
-                    continue
-                try:
-                    path = nx.shortest_path(simple, a, b)
-                except (nx.NetworkXNoPath, nx.NodeNotFound):
-                    continue
-                links = list(zip(path[:-1], path[1:]))
-                room = min(spare.get(l, 0.0) for l in links)
-                move = min(remaining[a, b], room)
-                if move > 0:
-                    drained[a, b] += move
-                    for l in links:
-                        spare[l] -= move
-        remaining = np.maximum(remaining - drained, 0.0)
-        t += budget
-    return t
+    """Deprecated shim over :meth:`SimEngine.reconfig_drain`."""
+    return SimEngine(hw).reconfig_drain(
+        _demand_matrix(dem), N, DEGREE, reconfig_latency, forwarding
+    )
 
 
 def run(latencies=(1e-6, 1e-4, 1e-2), models=("dlrm", "bert")) -> list[dict]:
     from repro.core.workloads import PAPER_JOBS
 
     hw = HardwareSpec(link_bandwidth=100e9 / 8, degree=DEGREE)
+    engine = SimEngine(hw)
     rows = []
     for name in models:
         job = PAPER_JOBS[name]
         hosts = range(0, N, 2) if job.n_tables else None
         dem = job_demand(job, N, table_hosts=hosts)
+        remaining = _demand_matrix(dem)
         comp = compute_time(job.flops_per_sample * job.batch_per_gpu * N, N, hw)
         topo = topology_finder(dem, DEGREE)
         t_static = iteration_time(
@@ -99,8 +67,12 @@ def run(latencies=(1e-6, 1e-4, 1e-2), models=("dlrm", "bert")) -> list[dict]:
         )
         for lat in latencies:
             t0 = time.perf_counter()
-            t_fw = iteration_time(_drain_time(job, dem, hw, lat, True), comp)
-            t_nofw = iteration_time(_drain_time(job, dem, hw, lat, False), comp)
+            t_fw = iteration_time(
+                engine.reconfig_drain(remaining, N, DEGREE, lat, True), comp
+            )
+            t_nofw = iteration_time(
+                engine.reconfig_drain(remaining, N, DEGREE, lat, False), comp
+            )
             us = (time.perf_counter() - t0) * 1e6
             rows.append(
                 dict(

@@ -1,0 +1,44 @@
+"""Version-compatibility shims for the jax surface the repo touches.
+
+jax moved ``shard_map`` out of ``jax.experimental`` (and renamed its
+replication-check kwarg ``check_rep`` -> ``check_vma``) across 0.4.x -> 0.5+.
+``shard_map_compat`` papers over both so callers write one code path.
+"""
+
+from __future__ import annotations
+
+import inspect
+from functools import lru_cache
+
+
+@lru_cache(maxsize=1)
+def _resolve_shard_map():
+    try:
+        from jax import shard_map as sm  # jax >= 0.6
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as sm  # jax 0.4.x/0.5.x
+    params = inspect.signature(sm).parameters
+    if "check_vma" in params:
+        check_kwarg = "check_vma"
+    elif "check_rep" in params:
+        check_kwarg = "check_rep"
+    else:
+        check_kwarg = None
+    return sm, check_kwarg
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check_replication=False):
+    """``shard_map`` with the replication check toggled portably."""
+    sm, check_kwarg = _resolve_shard_map()
+    kwargs = {check_kwarg: check_replication} if check_kwarg else {}
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a mapped mesh axis (``lax.axis_size`` only exists on
+    newer jax; ``psum(1, axis)`` is the portable spelling and stays static)."""
+    from jax import lax
+
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)

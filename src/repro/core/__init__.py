@@ -5,7 +5,10 @@
 - routing: CoinChangeMod (Alg. 4), k-shortest MP routes, bandwidth tax
 - demand / workloads: traffic demand extraction per strategy
 - strategy_search / alternating: MCMC + alternating optimization (Fig. 6)
-- netsim / packetsim / fabrics / ocs_reconfig: FlexNet & FlexNetPacket analogues
+- simengine: unified scenario-driven simulator (SimEngine facade; vectorized
+  max-min-fair flows, shared clusters, failures, OCS reconfiguration epochs)
+- netsim / packetsim / fabrics / ocs_reconfig: FlexNet & FlexNetPacket
+  analogues (netsim/packetsim/ocs_reconfig are shims behind simengine now)
 - costmodel: §5.2 cost analysis
 - collectives / device_order: JAX-native multi-ring AllReduce + mesh ordering
 """

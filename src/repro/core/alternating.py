@@ -12,6 +12,7 @@ from dataclasses import dataclass, field
 
 from .demand import TrafficDemand
 from .netsim import HardwareSpec, compute_time, iteration_time, topoopt_comm_time
+from .simengine import SimEngine
 from .strategy_search import SearchResult, Strategy, mcmc_search
 from .topology_finder import Topology, topology_finder
 from .workloads import JobSpec
@@ -40,10 +41,15 @@ def evaluate(
     hw: HardwareSpec,
     overlap: float = 0.0,
 ) -> float:
+    """Iteration time of (strategy, topology) — thin shim over
+    :meth:`repro.core.simengine.SimEngine.iteration_time`."""
     demand = strategy.demand(job, topo.n)
-    comm = topoopt_comm_time(topo, demand, hw)["comm_time"]
-    comp = compute_time(job.flops_per_sample * job.batch_per_gpu * topo.n, topo.n, hw)
-    return iteration_time(comm, comp, overlap=overlap)
+    return SimEngine(hw).iteration_time(
+        topo,
+        demand,
+        flops_per_iteration=job.flops_per_sample * job.batch_per_gpu * topo.n,
+        overlap=overlap,
+    )
 
 
 def alternating_optimize(

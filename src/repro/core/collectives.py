@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import axis_size
+
 
 def _mod_inverse(p: int, n: int) -> int:
     if math.gcd(p, n) != 1:
@@ -41,7 +43,7 @@ def ring_all_reduce(x: jax.Array, axis_name: str, p: int = 1) -> jax.Array:
 
     Must be called inside ``shard_map``.  Equivalent to ``lax.psum(x, axis)``.
     """
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         return x
     inv_p = _mod_inverse(p, n)
@@ -89,7 +91,7 @@ def ring_reduce_scatter(x: jax.Array, axis_name: str, p: int = 1) -> jax.Array:
     (n * chunk,) flattened; returns this device's reduced chunk, ordered so
     that ``ring_all_gather`` reassembles ``psum(x)``.  Device at ring position
     j returns segment (j+1) % n mapped back to device order."""
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         return x.reshape(-1)
     inv_p = _mod_inverse(p, n)
@@ -165,7 +167,7 @@ def all_to_all_ring(x: jax.Array, axis_name: str, p: int = 1) -> jax.Array:
     around a stride-``p`` ring — the host-based-forwarding analogue for EP
     traffic on a direct-connect fabric.  ``x``: (n, ...) per-destination data;
     returns (n, ...) per-source data.  Equivalent to lax.all_to_all."""
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         return x
     me = lax.axis_index(axis_name)

@@ -1,18 +1,19 @@
-"""FlexNet-style flow-level network simulation (§5.1).
+"""Fluid bottleneck-link comm-time model (§5.1, FlexNet analogue).
 
-Estimates a training iteration's communication time for a demand on a given
-fabric.  Two granularities:
+The preferred entry point is :class:`repro.core.simengine.SimEngine`, which
+re-exports everything here and unifies the three simulation granularities
+(fluid analysis, event-driven max-min-fair flows, scenario runs with
+arrivals / failures / OCS reconfiguration).  This module keeps the fluid
+primitives themselves:
 
-* ``iteration_time`` — fluid bottleneck-link model: every flow follows its
-  routes, link loads accumulate, comm time = max link (bytes / bandwidth);
-  AllReduce groups ride their permutation rings with the canonical ring cost
+* ``topoopt_comm_time`` — every flow follows its routes, link loads
+  accumulate, comm time = max link (bytes / bandwidth); AllReduce groups
+  ride their permutation rings with the canonical ring cost
   ``2 (k-1)/k * M`` split over the group's rings.
-* :mod:`repro.core.packetsim` — event-driven max-min-fair flow simulator for
-  the shared-cluster and reconfiguration studies.
+* ``ideal_switch_comm_time`` / ``fat_tree_comm_time`` — §5.1 baselines.
 
-Fabrics other than TopoOpt (ideal switch, fat-tree, oversub, expander,
-SiP-ML ring) are built in :mod:`repro.core.fabrics` and consumed here through
-the same interface.
+Fabrics other than TopoOpt (expander, SiP-ML ring) are built in
+:mod:`repro.core.fabrics` and consumed here through the same interface.
 """
 
 from __future__ import annotations

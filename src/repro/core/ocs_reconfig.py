@@ -5,6 +5,10 @@ Periodically (every 50 ms) rebuilds the direct-connect topology from the
 pair, discounting served demand by 1/2 per parallel link (Eq. 2's
 exponential Discount), then 2-edge-replacement to restore connectivity.
 A 10 ms reconfiguration pause is charged on every rebuild (§5.1).
+
+The epoch scheduling itself lives in :class:`repro.core.simengine.SimEngine`
+(``OCSPolicy`` scenarios and ``reconfig_drain``); this module only builds
+one topology from one demand snapshot.
 """
 
 from __future__ import annotations

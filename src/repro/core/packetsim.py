@@ -1,151 +1,26 @@
-"""FlexNetPacket-style event-driven simulator (§5.1), at flow granularity.
+"""Deprecated shim — the event-driven flow simulator lives in
+:mod:`repro.core.simengine` now.
 
-Simulates a task graph of compute tasks and network flows over a fabric with
-per-link capacities.  Flow rates follow progressive-filling max-min fairness,
-recomputed at every arrival/finish event — the fluid limit of the paper's
-htsim packet simulation, adequate for iteration-time and shared-cluster
-studies while staying fast enough to sweep configurations.
+``FlowSim`` remains importable with its original interface, but it is a
+thin wrapper over :class:`repro.core.simengine.FlowSimVec`, the vectorized
+rewrite (flows x links incidence arrays instead of per-flow dicts).  New
+code should use :class:`repro.core.simengine.SimEngine` directly, which
+also expresses the shared-cluster / failure / reconfiguration scenarios
+this module never could.
 """
 
 from __future__ import annotations
 
-import heapq
-from dataclasses import dataclass, field
-
-PROPAGATION_DELAY = 1e-6  # §5.1: link propagation delay 1 us
-
-
-@dataclass
-class Task:
-    """A schedulable unit.  Either compute (duration) or comm (bytes+route)."""
-
-    tid: int
-    kind: str  # "compute" | "flow"
-    duration: float = 0.0  # compute seconds
-    nbytes: float = 0.0  # flow size
-    route: tuple[int, ...] = ()  # node path for flows
-    deps: tuple[int, ...] = ()
+from .simengine import (  # noqa: F401  (re-exported for compatibility)
+    PROPAGATION_DELAY,
+    FlowSimVec,
+    SimResult,
+    Task,
+)
 
 
-@dataclass
-class _FlowState:
-    task: Task
-    remaining: float
-    rate: float = 0.0
-
-
-@dataclass
-class SimResult:
-    makespan: float
-    finish_times: dict[int, float] = field(default_factory=dict)
-
-
-class FlowSim:
-    """Event-driven max-min fair flow simulator."""
-
-    def __init__(self, link_bandwidth: dict[tuple[int, int], float]):
-        self.link_bw = dict(link_bandwidth)
-
-    def _max_min_rates(self, flows: list[_FlowState]) -> None:
-        remaining_bw = dict(self.link_bw)
-        unfrozen = [f for f in flows if f.task.route]
-        for f in flows:
-            f.rate = 0.0
-        # Progressive filling.
-        while unfrozen:
-            # bottleneck link: min over links of (available / #flows crossing)
-            link_users: dict[tuple[int, int], list[_FlowState]] = {}
-            for f in unfrozen:
-                for link in zip(f.task.route[:-1], f.task.route[1:]):
-                    link_users.setdefault(link, []).append(f)
-            if not link_users:
-                break
-            bottleneck, users = min(
-                link_users.items(),
-                key=lambda kv: remaining_bw.get(kv[0], float("inf")) / len(kv[1]),
-            )
-            fair = remaining_bw.get(bottleneck, float("inf")) / len(users)
-            for f in users:
-                f.rate += fair
-                for link in zip(f.task.route[:-1], f.task.route[1:]):
-                    remaining_bw[link] = remaining_bw.get(link, float("inf")) - fair
-            frozen_ids = {id(f) for f in users}
-            unfrozen = [f for f in unfrozen if id(f) not in frozen_ids]
-
-    def run(self, tasks: list[Task], start_time: float = 0.0) -> SimResult:
-        by_id = {t.tid: t for t in tasks}
-        pending_deps = {t.tid: set(t.deps) for t in tasks}
-        ready = [t for t in tasks if not t.deps]
-        finish_times: dict[int, float] = {}
-        active_flows: list[_FlowState] = []
-        # (finish_time, tid) heap for compute tasks.
-        compute_heap: list[tuple[float, int]] = []
-        now = start_time
-
-        def release(tid: int, t_done: float) -> list[Task]:
-            finish_times[tid] = t_done
-            out = []
-            for t in tasks:
-                if tid in pending_deps[t.tid]:
-                    pending_deps[t.tid].discard(tid)
-                    if not pending_deps[t.tid] and t.tid not in finish_times:
-                        out.append(t)
-            return out
-
-        def admit(t: Task) -> None:
-            if t.kind == "compute":
-                heapq.heappush(compute_heap, (now + t.duration, t.tid))
-            else:
-                active_flows.append(
-                    _FlowState(task=t, remaining=max(t.nbytes, 1e-9))
-                )
-
-        for t in ready:
-            admit(t)
-
-        while active_flows or compute_heap:
-            self._max_min_rates(active_flows)
-            # Next flow completion.
-            t_flow = float("inf")
-            next_flow = None
-            for f in active_flows:
-                if f.rate > 0:
-                    eta = now + f.remaining / f.rate + PROPAGATION_DELAY * (
-                        len(f.task.route) - 1
-                    )
-                else:
-                    eta = float("inf")
-                if eta < t_flow:
-                    t_flow, next_flow = eta, f
-            t_comp = compute_heap[0][0] if compute_heap else float("inf")
-
-            if t_comp == float("inf") and t_flow == float("inf"):
-                # Deadlock (disconnected route): finish flows instantly to
-                # avoid hanging; callers treat this as a routing bug.
-                for f in active_flows:
-                    for nt in release(f.task.tid, now):
-                        admit(nt)
-                active_flows.clear()
-                continue
-
-            t_next = min(t_flow, t_comp)
-            # Progress all flows to t_next.
-            dt = t_next - now
-            for f in active_flows:
-                f.remaining = max(0.0, f.remaining - f.rate * dt)
-            now = t_next
-
-            newly: list[Task] = []
-            if t_comp <= t_flow and compute_heap:
-                _, tid = heapq.heappop(compute_heap)
-                newly.extend(release(tid, now))
-            else:
-                active_flows.remove(next_flow)
-                newly.extend(release(next_flow.task.tid, now))
-            for t in newly:
-                admit(t)
-
-        return SimResult(makespan=now - start_time, finish_times=finish_times)
+class FlowSim(FlowSimVec):
+    """Deprecated alias of :class:`repro.core.simengine.FlowSimVec`."""
 
 
 def links_of(topology_graph) -> dict[tuple[int, int], float]:

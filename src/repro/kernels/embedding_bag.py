@@ -52,9 +52,13 @@ def embedding_bag(
         in_specs=[pl.BlockSpec((1, 1, E), table_map)],
         out_specs=pl.BlockSpec((1, 1, E), out_map),
     )
-    return pl.pallas_call(
+    # Accumulate in fp32 regardless of table dtype (the revisited output
+    # block is the accumulator, so its dtype is the accumulation dtype).
+    acc_dtype = jnp.promote_types(tables.dtype, jnp.float32)
+    out = pl.pallas_call(
         _bag_kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, T, E), tables.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, T, E), acc_dtype),
         interpret=interpret,
     )(indices, tables)
+    return out.astype(tables.dtype)

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import axis_size
+
 
 def gpipe_forward(stage_fn, stage_params, microbatches, axis_name: str = "pipe"):
     """Run microbatches through the pipeline.
@@ -27,7 +29,7 @@ def gpipe_forward(stage_fn, stage_params, microbatches, axis_name: str = "pipe")
       stage 0 consumes it.
     Returns (M, mb, ...) outputs, valid on the LAST stage (zeros elsewhere).
     """
-    S = lax.axis_size(axis_name)
+    S = axis_size(axis_name)
     sid = lax.axis_index(axis_name)
     M = microbatches.shape[0]
     fwd_perm = [(i, i + 1) for i in range(S - 1)]
@@ -53,8 +55,9 @@ def gpipe_forward(stage_fn, stage_params, microbatches, axis_name: str = "pipe")
 def make_gpipe_step(stage_fn, mesh, axis_name: str = "pipe"):
     """jit(shard_map(...)) wrapper: params sharded over the stage axis,
     microbatches replicated in, outputs gathered from the last stage."""
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from ..compat import shard_map_compat
 
     S = mesh.shape[axis_name]
 
@@ -65,10 +68,10 @@ def make_gpipe_step(stage_fn, mesh, axis_name: str = "pipe"):
         # outs are zero except on the last stage: psum broadcasts them.
         return lax.psum(outs, axis_name)
 
-    smapped = shard_map(
+    smapped = shard_map_compat(
         run, mesh=mesh,
         in_specs=(P(axis_name), P()),
         out_specs=P(),
-        check_vma=False,
+        check_replication=False,
     )
     return jax.jit(smapped)

@@ -153,16 +153,16 @@ def make_shardmap_dp_train_step(
         total = jax.lax.pmean(total, axis_name)
         return new_params, new_state, total, residual
 
-    from jax import shard_map
+    from ..compat import shard_map_compat
 
     rep = P()
     sharded = P(axis_name)
-    smapped = shard_map(
+    smapped = shard_map_compat(
         step,
         mesh=mesh,
         in_specs=(rep, rep, sharded, rep, sharded if compressor else rep),
         out_specs=(rep, rep, rep, sharded if compressor else rep),
-        check_vma=False,
+        check_replication=False,
     )
     return jax.jit(smapped)
 

@@ -1,0 +1,141 @@
+"""Hermetic stand-in for ``hypothesis`` so property tests run everywhere.
+
+When the real ``hypothesis`` package is installed it is used unchanged.
+Otherwise a minimal shim provides the subset this repo's tests need —
+``given``/``settings`` decorators and ``st.integers/floats/lists/
+sampled_from/data`` strategies — backed by seeded numpy sampling, so the
+property tests still sweep a deterministic batch of random examples
+instead of being skipped.
+
+Usage in tests::
+
+    from _hypothesis_compat import given, settings, st
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis exists
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import zlib
+
+    import numpy as np
+
+    _DEFAULT_MAX_EXAMPLES = 25
+
+    class _Strategy:
+        """A sampler: ``example(rng)`` draws one value."""
+
+        def __init__(self, sample):
+            self._sample = sample
+
+        def example(self, rng):
+            return self._sample(rng)
+
+    class _DataObject:
+        """Interactive draws inside a test body (``st.data()``)."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.example(self._rng)
+
+    class _DataStrategy(_Strategy):
+        def __init__(self):
+            super().__init__(lambda rng: _DataObject(rng))
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_ignored):
+            span = (min_value, max_value)
+
+            def sample(rng):
+                # Bias toward the bounds now and then, like hypothesis does.
+                r = rng.random()
+                if r < 0.05:
+                    return float(span[0])
+                if r < 0.10:
+                    return float(span[1])
+                return float(rng.uniform(span[0], span[1]))
+
+            return _Strategy(sample)
+
+        @staticmethod
+        def sampled_from(elements):
+            pool = list(elements)
+
+            def sample(rng):
+                return pool[int(rng.integers(len(pool)))]
+
+            return _Strategy(sample)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, unique=False):
+            def sample(rng):
+                size = int(rng.integers(min_size, max_size + 1))
+                if not unique:
+                    return [elements.example(rng) for _ in range(size)]
+                out, seen = [], set()
+                for _ in range(50 * max(size, 1)):
+                    if len(out) >= size:
+                        break
+                    v = elements.example(rng)
+                    if v not in seen:
+                        seen.add(v)
+                        out.append(v)
+                return out
+
+            return _Strategy(sample)
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+        def deco(fn):
+            fn._hc_max_examples = max_examples
+            return fn
+
+        return deco
+
+    import inspect
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                n = getattr(wrapper, "_hc_max_examples", _DEFAULT_MAX_EXAMPLES)
+                base_seed = zlib.crc32(fn.__qualname__.encode())
+                for i in range(n):
+                    rng = np.random.default_rng((base_seed, i))
+                    args = [s.example(rng) for s in arg_strategies]
+                    kwargs = {k: s.example(rng) for k, s in kw_strategies.items()}
+                    try:
+                        fn(*args, **kwargs)
+                    except Exception as e:  # noqa: BLE001 - re-raise annotated
+                        raise AssertionError(
+                            f"property falsified on example {i}: "
+                            f"args={args!r} kwargs={kwargs!r}"
+                        ) from e
+
+            # pytest must see a zero-arg test, not the wrapped signature
+            # (it would demand fixtures for the strategy parameters).
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco

@@ -13,6 +13,10 @@ from repro.checkpoint.ckpt import (
     save_checkpoint,
 )
 
+# Multi-minute subprocess tests (fresh jax init per case); quick loop:
+# python -m pytest -m "not slow"
+pytestmark = pytest.mark.slow
+
 
 def _tree(seed=0):
     k = jax.random.PRNGKey(seed)
@@ -84,7 +88,6 @@ import jax, numpy as np
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.checkpoint.ckpt import load_checkpoint
-
 mesh = jax.make_mesh((8,), ("data",))
 specs = {{
     "a": jax.ShapeDtypeStruct((4, 8), jnp.float32),

@@ -3,6 +3,12 @@ subprocess-isolated)."""
 
 from _subproc import run_with_devices
 
+import pytest
+
+# Multi-minute subprocess tests (fresh jax init per case); quick loop:
+# python -m pytest -m "not slow"
+pytestmark = pytest.mark.slow
+
 
 def test_ring_and_multiring_allreduce_match_psum():
     out = run_with_devices(
@@ -10,7 +16,10 @@ def test_ring_and_multiring_allreduce_match_psum():
 import jax, numpy as np
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+try:
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
 from repro.core.collectives import ring_all_reduce, multi_ring_all_reduce
 
 mesh = jax.make_mesh((8,), ("x",))
@@ -34,7 +43,10 @@ def test_all_to_all_ring_matches_transpose():
 import jax, numpy as np
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+try:
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
 from repro.core.collectives import all_to_all_ring
 
 mesh = jax.make_mesh((8,), ("x",))
@@ -56,7 +68,10 @@ def test_reduce_scatter_owns_correct_segment():
 import jax, numpy as np
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+try:
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
 from repro.core.collectives import ring_reduce_scatter
 
 mesh = jax.make_mesh((8,), ("x",))
@@ -85,7 +100,10 @@ def test_int_exactness_of_multiring():
 import jax, numpy as np
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+try:
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
 from repro.core.collectives import multi_ring_all_reduce
 
 mesh = jax.make_mesh((8,), ("x",))
@@ -105,7 +123,6 @@ def test_device_order_mesh():
         """
 import jax, numpy as np
 from repro.core.device_order import permuted_axis_order, topoopt_mesh
-
 order = permuted_axis_order(8, 3)
 assert sorted(order) == list(range(8))
 assert order[1] == 3  # position j holds device (j * p) % n

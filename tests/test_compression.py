@@ -3,10 +3,16 @@ accuracy + error-feedback convergence (subprocess, 8 devices)."""
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from _subproc import run_with_devices
 from repro.parallel.compression import dequantize_block, quantize_block
+
+import pytest
+
+# Multi-minute subprocess tests (fresh jax init per case); quick loop:
+# python -m pytest -m "not slow"
+pytestmark = pytest.mark.slow
 
 
 def test_quantize_roundtrip_error_bound():
@@ -40,7 +46,10 @@ def test_compressed_allreduce_close_to_exact():
 import jax, numpy as np
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+try:
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
 from repro.parallel.compression import compressed_ring_all_reduce
 
 mesh = jax.make_mesh((8,), ("x",))
@@ -73,9 +82,8 @@ def test_error_feedback_converges_on_quadratic():
 import jax, numpy as np
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map_compat
 from repro.parallel.compression import Compressor
-
 mesh = jax.make_mesh((8,), ("x",))
 rng = np.random.default_rng(0)
 target = jnp.array(rng.standard_normal(64), jnp.float32)
@@ -87,10 +95,10 @@ def make_step():
         g_sync, new_res = comp.sync({"w": g}, {"w": residual[0]}, "x",
                                     strides=(1, 3))
         return w - 0.3 * g_sync["w"], new_res["w"][None]
-    return jax.jit(shard_map(step, mesh=mesh,
-                             in_specs=(P(), P("x"), P("x")),
-                             out_specs=(P(), P("x")),
-                             check_vma=False))
+    return jax.jit(shard_map_compat(step, mesh=mesh,
+                                    in_specs=(P(), P("x"), P("x")),
+                                    out_specs=(P(), P("x")),
+                                    check_replication=False))
 
 step = make_step()
 w = jnp.zeros(64)

@@ -112,7 +112,14 @@ def test_embedding_bag_vs_ref(T, R, E, B, NNZ):
     idx = jnp.array(RNG.integers(0, R, (B, T, NNZ)), jnp.int32)
     out = embedding_bag(tables, idx, interpret=True)
     expect = ref.ref_embedding_bag(tables, idx)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-6)
+    # Kernel sums the bag sequentially, the reference via XLA's tree reduce;
+    # both in fp32, so they differ only by summation order: bounded by
+    # ~NNZ ulps of the partial-sum magnitude, which an atol floor covers for
+    # bags whose terms nearly cancel (|sum| << |terms|).
+    atol = NNZ * np.finfo(np.float32).eps * float(np.abs(np.asarray(tables)).max())
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(expect), rtol=1e-6, atol=atol
+    )
 
 
 def test_xla_fallback_matches_kernel_mamba():

@@ -2,6 +2,12 @@
 
 from _subproc import run_with_devices
 
+import pytest
+
+# Multi-minute subprocess tests (fresh jax init per case); quick loop:
+# python -m pytest -m "not slow"
+pytestmark = pytest.mark.slow
+
 
 def test_gpipe_matches_sequential():
     out = run_with_devices(
@@ -44,7 +50,6 @@ def test_gpipe_bubble_schedule_lengths():
 import jax, numpy as np
 import jax.numpy as jnp
 from repro.parallel.pipeline import make_gpipe_step
-
 for M in (1, 2, 5):
     S, MB, D = 4, 4, 8
     mesh = jax.make_mesh((S,), ("pipe",))

@@ -5,7 +5,7 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.routing import coin_change_mod
 from repro.core.select_perms import coin_change_diameter, select_permutations

@@ -3,6 +3,12 @@ assigned architecture (subprocess with a (2, 4) mesh)."""
 
 from _subproc import run_with_devices
 
+import pytest
+
+# Multi-minute subprocess tests (fresh jax init per case); quick loop:
+# python -m pytest -m "not slow"
+pytestmark = pytest.mark.slow
+
 
 def test_param_specs_cover_all_archs():
     out = run_with_devices(
@@ -70,7 +76,6 @@ import jax
 from jax.sharding import PartitionSpec as P
 from repro.configs.base import all_configs, input_specs, DECODE_32K, TRAIN_4K, shape_applicability
 from repro.parallel.sharding import ShardingPlan, batch_spec_tree
-
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 plan = ShardingPlan()
 for name, cfg in all_configs().items():

@@ -17,6 +17,10 @@ from repro.core import (
 from repro.core.netsim import fat_tree_comm_time, ideal_switch_comm_time, topoopt_comm_time
 from repro.core.workloads import DLRM, job_demand
 
+# Multi-minute subprocess tests (fresh jax init per case); quick loop:
+# python -m pytest -m "not slow"
+pytestmark = pytest.mark.slow
+
 
 def test_cooptimization_beats_similar_cost_fat_tree():
     """Headline claim (Fig. 11d): TopoOpt's co-optimized plan beats the
@@ -88,7 +92,6 @@ import jax, json
 from repro.configs.base import get_config, ShapeSpec
 from repro.parallel.sharding import ShardingPlan
 from repro.launch.dryrun import dryrun_cell
-
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 cfg = get_config("qwen3-moe-30b-a3b").smoke()
 for shape in (ShapeSpec("t", 64, 8, "train"), ShapeSpec("d", 64, 8, "decode")):
