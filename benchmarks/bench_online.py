@@ -1,0 +1,100 @@
+"""Online re-optimization: static plan vs reactive replanning.
+
+Runs :func:`repro.core.online.run_online` on failure and load-shift
+(churn) traces and compares three operators over the same disruptions:
+
+* **static** — ``ReoptPolicy.never()``: the offline plan runs unmodified;
+  failures get route repair over the survivors, nothing else.
+* **reactive** — replan on every failure / load shift (warm-started
+  alternating optimization, dead pairs forbidden, OCS-style pause charged).
+* **degradation** — replan only when a periodic probe sees the estimated
+  iteration time exceed 1.3x the adoption-time baseline.
+
+``derived`` reports total-makespan ratios (static/reactive > 1 means
+reactive replanning won despite paying the replan pauses).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.alternating import alternating_optimize
+from repro.core.netsim import HardwareSpec
+from repro.core.online import ReoptPolicy, TraceEvent, run_online
+from repro.core.workloads import DLRM, VGG16
+
+N = 16
+DEGREE = 4
+N_ITERS = 8
+
+
+# Fiber pairs die under a running job; one failure lands mid-iteration so
+# the engine swaps the fabric under live flows.
+FAILURES = (
+    TraceEvent(iteration=1, kind="fail", link=(0, 1)),
+    TraceEvent(iteration=2, kind="fail", link=(3, 7), frac=0.4),
+    TraceEvent(iteration=4, kind="fail", link=(2, 6)),
+)
+
+# Load shift: the cluster's resident workload changes from a pure-DP CNN to
+# DLRM at iteration 2 (then a fiber dies).  A static operator keeps the old
+# DP strategy, which replicates the embedding tables and AllReduces them
+# every iteration (the paper's Fig. 1a pathology); reactive replanning
+# re-runs the strategy search and moves the tables to hybrid placement.
+CHURN = (
+    TraceEvent(iteration=2, kind="load", job=DLRM),
+    TraceEvent(iteration=4, kind="fail", link=(1, 5)),
+)
+
+
+def run() -> list[dict]:
+    hw = HardwareSpec(link_bandwidth=12.5e9, degree=DEGREE)
+    policies = {
+        "static": ReoptPolicy.never(),
+        "reactive": ReoptPolicy.reactive(),
+        "degradation": ReoptPolicy.degradation(
+            threshold=1.3, check_interval=0.05
+        ),
+    }
+    rows = []
+    cases = [
+        (DLRM, "failures", FAILURES),
+        (VGG16, "failures", FAILURES),
+        (VGG16, "churn", CHURN),
+    ]
+    plans = {
+        job.name: alternating_optimize(job, N, hw, rounds=3, mcmc_iters=80,
+                                       seed=1)
+        for job in (DLRM, VGG16)
+    }
+    for job, trace_name, trace in cases:
+        plan = plans[job.name]
+        results = {}
+        for pol_name, pol in policies.items():
+            t0 = time.perf_counter()
+            results[pol_name] = (
+                run_online(job, N, hw, policy=pol, trace=trace,
+                           n_iters=N_ITERS, seed=0, plan=plan),
+                (time.perf_counter() - t0) * 1e6,
+            )
+        static, us = results["static"]
+        reactive, _ = results["reactive"]
+        degr, _ = results["degradation"]
+        rows.append(dict(
+            name=f"online_{job.name}_{trace_name}",
+            us_per_call=us,
+            derived=(
+                f"static/reactive={static.total_time / reactive.total_time:.2f};"
+                f"static/degradation={static.total_time / degr.total_time:.2f};"
+                f"replans={reactive.n_replans}"
+            ),
+            static_s=static.total_time,
+            reactive_s=reactive.total_time,
+            degradation_s=degr.total_time,
+            reactive_replans=reactive.n_replans,
+            degradation_replans=degr.n_replans,
+            n_failures=reactive.n_failures,
+            iter_times_static=static.iter_times,
+            iter_times_reactive=reactive.iter_times,
+        ))
+    return rows

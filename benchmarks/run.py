@@ -19,6 +19,7 @@ BENCHES = [
     ("pathlen", "Fig. 14/15 path length + link utilization"),
     ("shared", "Fig. 16 shared 432-server cluster"),
     ("reconfig", "Fig. 17 reconfiguration latency"),
+    ("online", "Online re-optimization: static vs reactive replanning"),
     ("roofline", "Roofline dry-run terms"),
 ]
 

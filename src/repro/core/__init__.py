@@ -1,12 +1,16 @@
 """TopoOpt core: the paper's contribution.
 
 - totient / select_perms: TotientPerms + SelectPermutations (Alg. 2/3)
-- topology_finder: TopologyFinder (Alg. 1) + failure repair
+- topology_finder: TopologyFinder (Alg. 1) + failure repair/degradation
 - routing: CoinChangeMod (Alg. 4), k-shortest MP routes, bandwidth tax
 - demand / workloads: traffic demand extraction per strategy
-- strategy_search / alternating: MCMC + alternating optimization (Fig. 6)
+- strategy_search / alternating: MCMC + alternating optimization (Fig. 6),
+  warm-startable from an incumbent plan for online re-optimization
 - simengine: unified scenario-driven simulator (SimEngine facade; vectorized
-  max-min-fair flows, shared clusters, failures, OCS reconfiguration epochs)
+  max-min-fair flows, shared clusters, failures, OCS reconfiguration epochs,
+  observer hooks for mid-run plan mutation)
+- online: ReoptPolicy/ReoptController/run_online — dynamic TopoOpt reacting
+  to failures and load shifts, plus topology-aware job placement
 - netsim / packetsim / fabrics / ocs_reconfig: FlexNet & FlexNetPacket
   analogues (netsim/packetsim/ocs_reconfig are shims behind simengine now)
 - costmodel: §5.2 cost analysis
@@ -16,10 +20,17 @@
 from .alternating import CoOptResult, alternating_optimize, initial_topology
 from .demand import AllReduceGroup, TrafficDemand
 from .netsim import HardwareSpec, compute_time, iteration_time
+from .online import (
+    ReoptController,
+    ReoptPolicy,
+    TraceEvent,
+    place_arrival,
+    run_online,
+)
 from .routing import bandwidth_tax, coin_change_mod, path_length_stats
 from .select_perms import coin_change_diameter, select_permutations, theorem1_bound
 from .strategy_search import Strategy, mcmc_search
-from .topology_finder import Topology, repair_topology, topology_finder
+from .topology_finder import Topology, remove_pair, repair_topology, topology_finder
 from .totient import RingPermutation, coprimes, prime_coprimes, ring_edges, totient_perms
 from .workloads import PAPER_JOBS, JobSpec, job_demand
 
@@ -29,9 +40,12 @@ __all__ = [
     "HardwareSpec",
     "JobSpec",
     "PAPER_JOBS",
+    "ReoptController",
+    "ReoptPolicy",
     "RingPermutation",
     "Strategy",
     "Topology",
+    "TraceEvent",
     "TrafficDemand",
     "alternating_optimize",
     "bandwidth_tax",
@@ -44,9 +58,12 @@ __all__ = [
     "job_demand",
     "mcmc_search",
     "path_length_stats",
+    "place_arrival",
     "prime_coprimes",
+    "remove_pair",
     "repair_topology",
     "ring_edges",
+    "run_online",
     "select_permutations",
     "theorem1_bound",
     "topology_finder",

@@ -1,9 +1,32 @@
-"""Alternating optimization (§4.1, Fig. 6).
+"""Alternating optimization (paper §4.1, Fig. 6) — TopoOpt's outer loop.
 
-Alternates between the two planes until convergence or ``k`` rounds:
+The paper frames co-optimization as a search over three coupled dimensions
+(computation, communication, topology) and alternates between two planes
+until convergence or ``rounds`` iterations:
 
-  Comp x Comm : MCMC strategy search with the topology held fixed,
-  Comm x Topo : TopologyFinder on the demand the strategy induces.
+  Comp x Comm : parallelization-strategy search (FlexFlow-style MCMC,
+                :func:`repro.core.strategy_search.mcmc_search`) with the
+                network topology held fixed;
+  Comm x Topo : TopologyFinder (Algorithm 1,
+                :func:`repro.core.topology_finder.topology_finder`) on the
+                traffic demand the chosen strategy induces.
+
+Notation mapping (paper -> code):
+
+  =====================  ==================================================
+  paper                  here
+  =====================  ==================================================
+  ``S`` (strategy)       :class:`repro.core.strategy_search.Strategy`
+  ``G`` (topology)       :class:`repro.core.topology_finder.Topology`
+  ``T`` (traffic)        :class:`repro.core.demand.TrafficDemand`
+  ``t_iter`` (Eq. 1)     :func:`repro.core.netsim.iteration_time`
+  ``k`` rounds           ``rounds`` argument
+  =====================  ==================================================
+
+Online re-optimization (:mod:`repro.core.online`) re-enters this loop with
+``warm_topology`` / ``warm_strategy`` (seed both planes from the incumbent
+plan) and ``forbidden`` (failed fiber pairs excluded from every rebuild);
+the cold-start defaults reproduce the paper's offline pipeline exactly.
 """
 
 from __future__ import annotations
@@ -27,11 +50,17 @@ class CoOptResult:
     rounds: list[float] = field(default_factory=list)
 
 
-def initial_topology(n: int, degree: int) -> Topology:
-    """Start from the naive stride-1 multi-ring (pure DP assumption)."""
+def initial_topology(
+    n: int, degree: int, forbidden: tuple[tuple[int, int], ...] = ()
+) -> Topology:
+    """Start from the naive stride-1 multi-ring (pure DP assumption).
+
+    ``forbidden`` pairs (e.g. failed fibers) are excluded so the starting
+    point is realizable on a degraded fabric."""
     from .demand import data_parallel_demand
 
-    return topology_finder(data_parallel_demand(n, 1.0), degree)
+    return topology_finder(data_parallel_demand(n, 1.0), degree,
+                           forbidden=forbidden)
 
 
 def evaluate(
@@ -61,12 +90,31 @@ def alternating_optimize(
     overlap: float = 0.0,
     seed: int = 0,
     rel_tol: float = 1e-3,
+    warm_topology: Topology | None = None,
+    warm_strategy: Strategy | None = None,
+    forbidden: tuple[tuple[int, int], ...] = (),
 ) -> CoOptResult:
-    """TopoOpt's off-line co-optimization loop."""
-    topo = initial_topology(n, hw.degree)
+    """TopoOpt's off-line co-optimization loop.
+
+    Online re-optimization (:mod:`repro.core.online`) re-enters this loop
+    mid-run with a **warm start**: ``warm_topology`` / ``warm_strategy``
+    seed both planes from the incumbent plan instead of the naive stride-1
+    ring, and ``forbidden`` pins failed fiber pairs out of every topology
+    rebuild.  A warm-started call also threads the incumbent into
+    :func:`topology_finder`'s ``warm_start`` so ring strides that survived
+    the disruption are kept (less physical churn on the patch panel).
+    Cold calls (all three defaults) are byte-identical to the offline PR-1
+    behaviour.
+    """
+    warm = warm_topology is not None
+    topo = (
+        warm_topology
+        if warm
+        else initial_topology(n, hw.degree, forbidden=forbidden)
+    )
     best: CoOptResult | None = None
     round_times: list[float] = []
-    strategy_init: Strategy | None = None
+    strategy_init: Strategy | None = warm_strategy
 
     for r in range(rounds):
         # Comp x Comm plane: search strategy on the fixed topology.
@@ -75,7 +123,10 @@ def alternating_optimize(
             seed=seed + r, init=strategy_init,
         )
         # Comm x Topo plane: rebuild the topology for the found demand.
-        new_topo = topology_finder(res.demand, hw.degree)
+        new_topo = topology_finder(
+            res.demand, hw.degree, forbidden=forbidden,
+            warm_start=topo if warm else None,
+        )
         t_new = evaluate(res.strategy, new_topo, job, hw, overlap)
         round_times.append(t_new)
 

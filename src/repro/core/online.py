@@ -1,0 +1,598 @@
+"""Online re-optimization: dynamic TopoOpt reacting to failures and load
+shifts (ROADMAP "online re-optimization" + "topology-aware job placement").
+
+The offline pipeline (:func:`repro.core.alternating.alternating_optimize`)
+computes one (strategy, topology, routing) plan and assumes the cluster never
+changes.  :class:`repro.core.simengine.SimEngine` already models the events
+that make such a plan stale — fiber failures, job arrivals/departures,
+stragglers — so this module closes the loop:
+
+* :class:`ReoptPolicy` — *when* to re-optimize: on failure, on job
+  arrival/departure (load shifts), periodically, or when a degradation probe
+  sees the estimated iteration time exceed a tracked baseline, all gated by a
+  hysteresis ``min_interval``.
+* :class:`ReoptController` — *how*: a
+  :class:`~repro.core.simengine.ScenarioObserver` that pauses the fluid
+  simulation (an OCS-style ``replan_latency`` stall), re-runs the alternating
+  optimizer **warm-started from the incumbent plan** against the surviving
+  fiber pairs and resident job, and resumes in-flight flows on the new
+  topology/routes via a :class:`~repro.core.simengine.PlanUpdate`.  When no
+  replan triggers it still maintains the paper's §7 quick fix
+  (:func:`~repro.core.topology_finder.repair_topology`) as the static
+  operator's incumbent.
+* :func:`run_online` — an iteration-granularity driver: each training
+  iteration's flows are regenerated from the *current* plan, a
+  failure/load-shift trace is injected (at iteration boundaries or
+  mid-iteration through the engine's failure events), and the policy decides
+  between static repair and reactive replanning.  ``benchmarks/bench_online.py``
+  compares the two.
+* :func:`place_arrival` — topology-aware placement of newly arriving jobs:
+  pick the free servers with the most surviving pairwise capacity instead of
+  the lowest ids.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .alternating import CoOptResult, alternating_optimize
+from .netsim import HardwareSpec, compute_time
+from .ocs_reconfig import RECONFIG_LATENCY
+from .simengine import (
+    EngineView,
+    LinkFailure,
+    PlanUpdate,
+    Scenario,
+    ScenarioObserver,
+    SimEngine,
+    SimJob,
+    iteration_tasks,
+    links_from_topology,
+)
+from .strategy_search import Strategy
+from .topology_finder import Topology, remove_pair
+from .workloads import JobSpec
+
+__all__ = [
+    "ReoptPolicy",
+    "ReoptController",
+    "TraceEvent",
+    "OnlineRunResult",
+    "run_online",
+    "place_arrival",
+]
+
+
+@dataclass(frozen=True)
+class ReoptPolicy:
+    """Trigger rules for online re-optimization.
+
+    Any combination of triggers may be enabled:
+
+    * ``on_failure`` — replan when a fiber pair dies.
+    * ``on_arrival`` / ``on_departure`` — replan on load shifts (a job
+      joining or leaving the fabric, or :func:`run_online` swapping the
+      resident job's spec).
+    * ``period`` — unconditional periodic replanning every ``period`` s.
+    * ``degradation_threshold`` + ``check_interval`` — every
+      ``check_interval`` s, estimate the incumbent's fluid iteration time on
+      the (repaired) surviving fabric; replan when it exceeds
+      ``degradation_threshold`` x the baseline recorded at plan adoption.
+
+    ``min_interval`` is hysteresis: replans closer than this to the previous
+    one are suppressed (failed triggers leave the static repair in place).
+    Every applied replan charges ``replan_latency`` seconds of OCS-style
+    traffic pause.
+    """
+
+    on_failure: bool = True
+    on_arrival: bool = False
+    on_departure: bool = False
+    period: float | None = None
+    check_interval: float | None = None
+    degradation_threshold: float | None = None
+    min_interval: float = 0.0
+    replan_latency: float = RECONFIG_LATENCY
+    # Warm-started optimizer budget per replan (smaller than offline: the
+    # incumbent is already good, we only adapt it).
+    rounds: int = 2
+    mcmc_iters: int = 40
+
+    @classmethod
+    def never(cls) -> "ReoptPolicy":
+        """Static plan: no trigger ever fires (PR-1 engine semantics)."""
+        return cls(on_failure=False, replan_latency=0.0)
+
+    @classmethod
+    def reactive(cls, min_interval: float = 0.0, **kw) -> "ReoptPolicy":
+        """Replan on every failure and load shift (subject to hysteresis)."""
+        return cls(on_failure=True, on_arrival=True, on_departure=True,
+                   min_interval=min_interval, **kw)
+
+    @classmethod
+    def periodic(cls, period: float, **kw) -> "ReoptPolicy":
+        return cls(on_failure=False, period=period, **kw)
+
+    @classmethod
+    def degradation(
+        cls, threshold: float, check_interval: float, **kw
+    ) -> "ReoptPolicy":
+        return cls(on_failure=False, degradation_threshold=threshold,
+                   check_interval=check_interval, **kw)
+
+    @property
+    def check_period(self) -> float | None:
+        """Interval between observer checks, if any trigger needs them."""
+        if self.period is not None:
+            return self.period
+        if (
+            self.check_interval is not None
+            and self.degradation_threshold is not None
+        ):
+            return self.check_interval
+        return None
+
+
+@dataclass
+class ReplanRecord:
+    """One controller decision, for logs and benchmarks."""
+
+    time: float
+    trigger: str  # "failure" | "arrival" | "departure" | "periodic" | ...
+    replanned: bool
+    est_before: float = float("nan")  # incumbent (repaired) iteration time
+    est_after: float = float("nan")  # adopted plan's iteration time
+
+
+class ReoptController(ScenarioObserver):
+    """Couples :func:`alternating_optimize` into a running scenario.
+
+    The controller tracks three things across events:
+
+    * ``dead`` — fiber pairs that failed so far; every replanned topology is
+      searched with these pairs ``forbidden``.
+    * the **incumbent plan** (``plan``/``topology``/``demand``) — after a
+      failure with no replan trigger, the incumbent topology is degraded in
+      place (:func:`~repro.core.topology_finder.remove_pair`: dead pair
+      gone, routes re-pathed over the survivors) — the plan a static
+      operator keeps running; after a replan it is the freshly optimized
+      plan, warm-started from the old one.
+    * ``baseline`` — the one-iteration simulated makespan recorded when the
+      incumbent was adopted, against which the degradation trigger compares.
+
+    As a :class:`ScenarioObserver` it turns replans into
+    :class:`PlanUpdate`s: new fabric links + a ``replan_latency`` pause, so
+    in-flight flows resume (bytes preserved) on the new topology mid-run.
+    A controller whose policy never triggers returns ``None`` from every
+    hook, leaving the engine bit-identical to an observer-less run.
+    """
+
+    def __init__(
+        self,
+        job: JobSpec,
+        n: int,
+        hw: HardwareSpec | None = None,
+        policy: ReoptPolicy | None = None,
+        seed: int = 0,
+        plan: CoOptResult | None = None,
+    ):
+        self.job = job
+        self.n = n
+        self.hw = hw or HardwareSpec()
+        self.policy = policy or ReoptPolicy()
+        self.seed = seed
+        self.dead: set[tuple[int, int]] = set()
+        self.n_replans = 0
+        self.last_replan = -np.inf
+        self.log: list[ReplanRecord] = []
+        self._plan: CoOptResult | None = plan
+        self._topology: Topology | None = plan.topology if plan else None
+        self._baseline: float | None = None
+        self._probe_engine: SimEngine | None = None
+        # Hook clock = engine-local time + clock_offset.  Drivers that run a
+        # sequence of scenarios (run_online: one per training iteration) set
+        # the offset so hysteresis spans scenario boundaries.
+        self.clock_offset = 0.0
+        # run_online admits one SimJob per iteration; those admissions are
+        # not load shifts, so the driver mutes the arrival/departure hooks
+        # and feeds genuine load shifts through set_job instead.
+        self.suppress_job_hooks = False
+        interval = self.policy.check_period
+        # Global-clock time of the next periodic/degradation check.
+        self._next_check_global = interval if interval is not None else np.inf
+
+    # -- incumbent plan ------------------------------------------------------
+
+    def ensure_plan(self) -> CoOptResult:
+        """Cold-start the offline optimizer once, lazily (a controller whose
+        policy never fires should cost nothing)."""
+        if self._plan is None:
+            self._plan = alternating_optimize(
+                self.job, self.n, self.hw,
+                rounds=max(self.policy.rounds, 2),
+                mcmc_iters=max(self.policy.mcmc_iters, 40),
+                seed=self.seed,
+                forbidden=tuple(self.dead),
+            )
+            self._topology = self._plan.topology
+        return self._plan
+
+    @property
+    def plan(self) -> CoOptResult:
+        return self.ensure_plan()
+
+    @property
+    def topology(self) -> Topology:
+        """The live physical plan: replanned, or incumbent + §7 repairs."""
+        self.ensure_plan()
+        assert self._topology is not None
+        return self._topology
+
+    @property
+    def strategy(self) -> Strategy:
+        return self.plan.strategy
+
+    @property
+    def demand(self):
+        return self.strategy.demand(self.job, self.n)
+
+    @property
+    def baseline(self) -> float:
+        """Iteration-time estimate the degradation trigger compares against.
+
+        Established on first access (and re-pinned by every replan) — read it
+        once while the fabric is still healthy when using the degradation
+        trigger; :func:`run_online` does this before applying any trace."""
+        if self._baseline is None:
+            self.ensure_plan()
+            self._baseline = self.estimated_iter_time()
+        return self._baseline
+
+    def links(self) -> dict[tuple[int, int], float]:
+        """Directed link capacities of the current topology on the surviving
+        fabric (dead pairs carry nothing, whatever the plan says)."""
+        return self._links_for(self.topology)
+
+    def _links_for(self, topo: Topology) -> dict[tuple[int, int], float]:
+        caps = links_from_topology(topo, self.hw)
+        for a, b in list(caps):
+            if (min(a, b), max(a, b)) in self.dead:
+                del caps[(a, b)]
+        return caps
+
+    def estimated_iter_time(
+        self,
+        topo: Topology | None = None,
+        strategy: Strategy | None = None,
+    ) -> float:
+        """One-iteration simulated makespan of ``strategy`` on ``topo``
+        restricted to the surviving fabric (defaults: the incumbent).
+
+        A flow-level probe rather than the fluid formula: the fluid model
+        charges AllReduce rings by the *planned* ring edges, so it cannot see
+        a dead ring link; the scenario engine re-routes those flows over the
+        survivors and prices the resulting contention."""
+        topo = topo if topo is not None else self.topology
+        strategy = strategy if strategy is not None else self.strategy
+        demand = strategy.demand(self.job, self.n)
+        comp = compute_time(
+            self.job.flops_per_sample * self.job.batch_per_gpu * self.n,
+            self.n, self.hw,
+        )
+        tasks = iteration_tasks(topo, demand, compute_duration=comp)
+        if self._probe_engine is None:
+            self._probe_engine = SimEngine(self.hw)
+        sc = Scenario(
+            links=self._links_for(topo),
+            jobs=[SimJob("probe", tasks)],
+            n=self.n,
+        )
+        res = self._probe_engine.run(sc)
+        if res.stalled:
+            # Unroutable demand stall-finishes instantly in the engine; a
+            # disconnected fabric must probe as unusable, not as fast.
+            return np.inf
+        return res.makespan
+
+    # -- mutations -----------------------------------------------------------
+
+    def set_job(self, job: JobSpec, now: float = 0.0) -> float:
+        """Load shift: the resident job's spec changes (new batch size, new
+        tables, a different model).  Returns the pause charged (seconds) if
+        the arrival trigger replanned."""
+        self.job = job
+        if self.policy.on_arrival:
+            update = self._maybe_replan(now, "arrival")
+            if update is not None:
+                return update.pause
+        return 0.0
+
+    def fail(self, link: tuple[int, int], now: float = 0.0) -> float:
+        """A node pair dies.  Always records the pair and degrades the
+        incumbent (routes re-pathed over survivors); replans when the policy
+        says so.  Returns the pause charged (seconds)."""
+        pair = (min(link), max(link))
+        if pair in self.dead:
+            return 0.0
+        self.dead.add(pair)
+        if self._topology is not None:
+            self._topology = remove_pair(self._topology, pair)
+        if self.policy.on_failure:
+            update = self._maybe_replan(now, "failure")
+            if update is not None:
+                return update.pause
+        return 0.0
+
+    def replan(self, now: float, trigger: str) -> PlanUpdate:
+        """Re-run the alternating optimizer warm-started from the incumbent,
+        forbidding dead pairs; adopt whichever of {new plan, degraded
+        incumbent} probes faster.  Returns the PlanUpdate to apply."""
+        self.ensure_plan()
+        est_before = self.estimated_iter_time()
+        res = alternating_optimize(
+            self.job, self.n, self.hw,
+            rounds=self.policy.rounds,
+            mcmc_iters=self.policy.mcmc_iters,
+            seed=self.seed + 1 + self.n_replans,
+            warm_topology=self.topology,
+            warm_strategy=self.strategy,
+            forbidden=tuple(self.dead),
+        )
+        est_new = self.estimated_iter_time(
+            topo=res.topology, strategy=res.strategy
+        )
+        if est_new <= est_before:
+            self._plan = res
+            self._topology = res.topology
+            self._baseline = est_new
+        else:
+            # The warm search couldn't beat the degraded incumbent — keep it
+            # (still counts as a replan: the pause was spent deciding) and
+            # re-baseline so the degradation trigger doesn't fire forever.
+            self._baseline = est_before
+        self.n_replans += 1
+        self.last_replan = now
+        self.log.append(ReplanRecord(
+            time=now, trigger=trigger, replanned=True,
+            est_before=est_before, est_after=min(est_new, est_before),
+        ))
+        return PlanUpdate(
+            links=self.links(),
+            pause=self.policy.replan_latency,
+            label=f"reopt:{trigger}",
+        )
+
+    def _maybe_replan(self, now: float, trigger: str) -> PlanUpdate | None:
+        if now - self.last_replan < self.policy.min_interval:
+            self.log.append(ReplanRecord(time=now, trigger=trigger,
+                                         replanned=False))
+            return None
+        return self.replan(now, trigger)
+
+    # -- ScenarioObserver hooks ---------------------------------------------
+
+    def next_check(self, now: float) -> float:
+        # The engine speaks scenario-local time; the schedule is global.
+        return self._next_check_global - self.clock_offset
+
+    def on_failure(
+        self, view: EngineView, link: tuple[int, int]
+    ) -> PlanUpdate | None:
+        pair = (min(link), max(link))
+        if pair in self.dead:
+            return None
+        self.dead.add(pair)
+        if self._topology is not None:
+            self._topology = remove_pair(self._topology, pair)
+        if not self.policy.on_failure:
+            return None
+        return self._maybe_replan(view.now + self.clock_offset, "failure")
+
+    def on_arrival(self, view: EngineView, job: SimJob) -> PlanUpdate | None:
+        if not self.policy.on_arrival or self.suppress_job_hooks:
+            return None
+        return self._maybe_replan(view.now + self.clock_offset, "arrival")
+
+    def on_departure(self, view: EngineView, job_name: str) -> PlanUpdate | None:
+        if not self.policy.on_departure or self.suppress_job_hooks:
+            return None
+        return self._maybe_replan(view.now + self.clock_offset, "departure")
+
+    def on_check(self, view: EngineView) -> PlanUpdate | None:
+        interval = self.policy.check_period
+        if interval is None:
+            return None
+        now = view.now + self.clock_offset
+        self._next_check_global = now + interval
+        if self.policy.period is not None:
+            return self._maybe_replan(now, "periodic")
+        # Degradation probe: estimated iteration time on the degraded
+        # incumbent vs the baseline recorded at adoption.
+        est = self.estimated_iter_time()
+        if est > self.policy.degradation_threshold * self.baseline:
+            return self._maybe_replan(now, "degradation")
+        self.log.append(ReplanRecord(time=now, trigger="check",
+                                     replanned=False, est_before=est))
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Iteration-granularity driver: static plan vs reactive replanning
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TraceEvent:
+    """One disruption in an online trace.
+
+    ``kind="fail"``: the fiber pair ``link`` dies when iteration
+    ``iteration`` starts (``frac=0``) or ``frac`` of the way through it.
+    ``kind="load"``: the resident job's spec becomes ``job`` (a load shift —
+    bigger batch, more tables, a different model) at that iteration boundary.
+    """
+
+    iteration: int
+    kind: str  # "fail" | "load"
+    link: tuple[int, int] | None = None
+    frac: float = 0.0
+    job: JobSpec | None = None
+
+
+@dataclass
+class OnlineRunResult:
+    total_time: float
+    iter_times: list[float] = field(default_factory=list)
+    n_replans: int = 0
+    n_failures: int = 0
+    log: list[ReplanRecord] = field(default_factory=list)
+    final_plan: CoOptResult | None = None
+
+
+def run_online(
+    job: JobSpec,
+    n: int,
+    hw: HardwareSpec | None = None,
+    policy: ReoptPolicy | None = None,
+    trace: tuple[TraceEvent, ...] = (),
+    n_iters: int = 8,
+    seed: int = 0,
+    plan: CoOptResult | None = None,
+    engine: SimEngine | None = None,
+) -> OnlineRunResult:
+    """Simulate ``n_iters`` training iterations under a disruption trace.
+
+    Every iteration's flow graph is regenerated from the controller's
+    *current* plan (so a replan changes the traffic of all later iterations,
+    not just the routes of in-flight flows), then run through
+    :meth:`SimEngine.run` with the controller attached as observer:
+    mid-iteration failures hit the engine's failure event, the controller
+    replans, and the engine swaps the fabric under the surviving flows.
+
+    Pass ``policy=ReoptPolicy.never()`` for the static baseline — the same
+    trace, but failures only get the paper's §7 repair — and share ``plan``
+    between the two calls so both start from the identical offline optimum.
+    """
+    hw = hw or HardwareSpec()
+    ctrl = ReoptController(job, n, hw=hw, policy=policy, seed=seed, plan=plan)
+    ctrl.ensure_plan()
+    if ctrl.policy.degradation_threshold is not None:
+        ctrl.baseline  # pin the healthy-fabric baseline before disruptions
+    # One SimJob per iteration: its admission is not a load shift.  Genuine
+    # load shifts arrive through TraceEvent(kind="load") -> set_job below.
+    ctrl.suppress_job_hooks = True
+    eng = engine or SimEngine(hw)
+
+    by_iter: dict[int, list[TraceEvent]] = {}
+    for ev in trace:
+        by_iter.setdefault(ev.iteration, []).append(ev)
+
+    total = 0.0
+    result = OnlineRunResult(total_time=0.0)
+    for it in range(n_iters):
+        mid_iter: list[TraceEvent] = []
+        for ev in by_iter.get(it, ()):
+            if ev.kind == "load" and ev.job is not None:
+                total += ctrl.set_job(ev.job, now=total)
+            elif ev.kind == "fail" and ev.link is not None:
+                if ev.frac <= 0.0:
+                    total += ctrl.fail(ev.link, now=total)
+                    result.n_failures += 1
+                else:
+                    mid_iter.append(ev)
+
+        cur_job = ctrl.job
+        comp = compute_time(
+            cur_job.flops_per_sample * cur_job.batch_per_gpu * n, n, hw
+        )
+        tasks = iteration_tasks(ctrl.topology, ctrl.demand,
+                                compute_duration=comp)
+        failures = []
+        if mid_iter:  # probe only when a failure needs an in-iteration time
+            est = ctrl.estimated_iter_time()
+            if not np.isfinite(est):
+                # Disconnected fabric: the iteration stall-finishes at t=0,
+                # so land mid-iteration failures at the start.
+                est = result.iter_times[-1] if result.iter_times else 0.0
+            est = max(est, 1e-12)
+            for ev in mid_iter:
+                failures.append(LinkFailure(time=ev.frac * est, link=ev.link))
+                result.n_failures += 1
+        sc = Scenario(
+            links=ctrl.links(),
+            jobs=[SimJob(cur_job.name, tasks)],
+            failures=tuple(sorted(failures, key=lambda f: f.time)),
+            n=n,
+        )
+        ctrl.clock_offset = total  # hooks see the global training clock
+        res = eng.run(sc, observer=ctrl)
+        iter_time = res.makespan
+        if res.replan_times:
+            # A replan near the end of the iteration can leave part of its
+            # pause hanging past the last task finish; charge the overhang
+            # so reactive policies don't get the tail of the pause free.
+            overhang = (
+                res.replan_times[-1] + ctrl.policy.replan_latency
+                - res.makespan
+            )
+            if overhang > 0:
+                iter_time += overhang
+        total += iter_time
+        result.iter_times.append(iter_time)
+
+    result.total_time = total
+    result.n_replans = ctrl.n_replans
+    result.log = ctrl.log
+    result.final_plan = ctrl.plan
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Topology-aware placement of arriving jobs
+# ---------------------------------------------------------------------------
+
+
+def place_arrival(
+    k: int,
+    free: set[int] | frozenset[int],
+    links: dict[tuple[int, int], float],
+) -> tuple[int, ...]:
+    """Pick ``k`` free servers for a newly arriving job, topology-aware.
+
+    Greedy capacity packing: seed with the free server carrying the most
+    surviving capacity toward other free servers, then repeatedly add the
+    free server with the highest live capacity toward the chosen set.  On a
+    degraded fabric this steers new jobs away from servers whose fibers died;
+    on a healthy one it reduces fabric fragmentation versus lowest-id
+    first-fit.  Falls back to lowest ids to break ties deterministically.
+    """
+    free = set(free)
+    if k > len(free):
+        raise ValueError(f"need {k} servers, only {len(free)} free")
+    if k == 0:
+        return ()
+    cap_to: dict[int, dict[int, float]] = {v: {} for v in free}
+    for (a, b), c in links.items():
+        if a in free and b in free and c > 0:
+            cap_to[a][b] = cap_to[a].get(b, 0.0) + c
+            cap_to[b][a] = cap_to[b].get(a, 0.0) + c
+
+    seed = min(
+        free,
+        key=lambda v: (-sum(cap_to.get(v, {}).values()), v),
+    )
+    chosen = [seed]
+    pool = free - {seed}
+    while len(chosen) < k:
+        nxt = min(
+            pool,
+            key=lambda v: (
+                -sum(cap_to.get(v, {}).get(u, 0.0) for u in chosen),
+                -sum(cap_to.get(v, {}).values()),
+                v,
+            ),
+        )
+        chosen.append(nxt)
+        pool.discard(nxt)
+    return tuple(sorted(chosen))

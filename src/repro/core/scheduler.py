@@ -11,12 +11,20 @@ This module simulates that policy: job arrivals -> server allocation ->
 (pre-provision on look-ahead) -> flip at start -> release at completion,
 charging the patch-panel latency only when a job starts before its
 pre-provisioning finished.
+
+Server selection is pluggable (``placement=``): lowest-id first fit (the
+seed behaviour), best-fit ``"contiguous"`` blocks (fragmentation-resistant —
+TotientPerms groups of contiguous ids map to physically adjacent patch-panel
+ports), or any callable ``(free, k) -> servers`` — e.g. a closure over
+:func:`repro.core.online.place_arrival` for live-fabric-aware placement on a
+degraded cluster.
 """
 
 from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
+from typing import Callable, Sequence
 
 PATCH_PANEL_RECONFIG_S = 120.0  # minutes-scale robotic reconfiguration
 FLIP_S = 1e-6  # 1x2 mechanical switch flip
@@ -53,11 +61,51 @@ class ClusterState:
             self.free = set(range(self.n_servers))
 
 
+def first_fit(free: set, k: int) -> tuple[int, ...]:
+    """Lowest-id servers (the seed policy)."""
+    return tuple(sorted(free))[:k]
+
+
+def contiguous_fit(free: set, k: int) -> tuple[int, ...]:
+    """Best-fit contiguous block of server ids.
+
+    Prefers the *smallest* free run that fits (classic best-fit, leaves big
+    runs intact for big jobs); when no single run fits, gathers from the
+    largest runs first to minimize the number of fragments the job spans.
+    """
+    ids = sorted(free)
+    runs: list[tuple[int, int]] = []  # (length, start)
+    start = prev = None
+    for v in ids:
+        if prev is None or v != prev + 1:
+            if start is not None:
+                runs.append((prev - start + 1, start))
+            start = v
+        prev = v
+    if start is not None:
+        runs.append((prev - start + 1, start))
+    fitting = [r for r in runs if r[0] >= k]
+    if fitting:
+        _, s = min(fitting)
+        return tuple(range(s, s + k))
+    out: list[int] = []
+    for length, s in sorted(runs, key=lambda r: (-r[0], r[1])):
+        take = min(k - len(out), length)
+        out.extend(range(s, s + take))
+        if len(out) == k:
+            break
+    return tuple(sorted(out))
+
+
+_PLACEMENTS = {"first_fit": first_fit, "contiguous": contiguous_fit}
+
+
 def simulate(
     n_servers: int,
     jobs: list[JobRequest],
     lookahead: bool = True,
     reconfig_s: float = PATCH_PANEL_RECONFIG_S,
+    placement: str | Callable[[set, int], Sequence[int]] = "first_fit",
 ) -> list[JobRecord]:
     """Event-driven shard scheduler.
 
@@ -65,7 +113,12 @@ def simulate(
     spare plane as soon as its servers are *identifiable* (enough free or
     soon-to-free servers), so its start pays only the 1x2 flip.  Without it
     (single-plane), every start pays the full patch-panel reconfiguration.
+
+    ``placement`` picks which free servers a starting job gets: a name from
+    ``{"first_fit", "contiguous"}`` or a callable ``(free, k) -> servers``
+    (must return ``k`` distinct members of ``free``).
     """
+    place = _PLACEMENTS[placement] if isinstance(placement, str) else placement
     state = ClusterState(n_servers=n_servers)
     pending: list[JobRequest] = sorted(jobs, key=lambda j: j.arrival_s)
     running: list[tuple[float, int]] = []  # (end_time, jid) heap
@@ -91,7 +144,14 @@ def simulate(
             started = False
             req = queue[0]
             if len(state.free) >= req.n_servers:
-                servers = tuple(sorted(state.free))[: req.n_servers]
+                servers = tuple(place(state.free, req.n_servers))
+                if len(set(servers)) != req.n_servers or not (
+                    set(servers) <= state.free
+                ):
+                    raise ValueError(
+                        f"placement returned {servers!r}; need "
+                        f"{req.n_servers} distinct servers from the free set"
+                    )
                 state.free -= set(servers)
                 rec = records[req.jid]
                 rec.servers = servers

@@ -1,9 +1,19 @@
-"""SelectPermutations (Algorithm 3) — pick ``d_k`` ring strides per group.
+"""SelectPermutations (paper Algorithm 3, §4.2) — pick ``d_k`` ring strides.
 
 Goal (Theorem 1): choose strides close to a geometric sequence with ratio
 ``x = n^(1/d_k)`` so that the AllReduce sub-topology's diameter is bounded by
 ``O(d_k * n^(1/d_k))`` — every node reaches every other within a small number
 of coin-change hops (App. E.2), Chord-style.
+
+Notation mapping (paper -> code): the candidate set ``P`` from TotientPerms
+-> :class:`repro.core.totient.PermutationSet`; the per-group degree budget
+``d_k`` -> the ``d_k`` argument; the geometric targets ``x^0..x^(d_k-1)`` ->
+:func:`geometric_targets` (with the paper's App. E.2 correction to ratio 2
+when ``n^(1/d_k) < 2``); the greedy L1-nearest projection of targets onto
+available strides (without replacement) -> :func:`select_permutations`;
+Theorem 1's diameter quantity -> :func:`coin_change_diameter` (exact BFS
+over Z_n treating the chosen strides as +coins) and its analytic bound ->
+:func:`theorem1_bound`.
 """
 
 from __future__ import annotations

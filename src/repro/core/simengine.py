@@ -52,6 +52,9 @@ __all__ = [
     "SimJob",
     "LinkFailure",
     "OCSPolicy",
+    "PlanUpdate",
+    "EngineView",
+    "ScenarioObserver",
     "Scenario",
     "ScenarioResult",
     "SimEngine",
@@ -343,6 +346,82 @@ class OCSPolicy:
 
 
 @dataclass
+class PlanUpdate:
+    """A mid-run plan mutation, returned by :class:`ScenarioObserver` hooks.
+
+    ``links`` (when not ``None``) replaces the live fabric wholesale: the
+    engine refreshes link capacities, clears the route cache, and re-resolves
+    the path of every in-flight flow against the new fabric (endpoints are
+    contractual, paths are not — flows keep their remaining bytes).  ``pause``
+    charges an OCS-style reconfiguration stall: no flow makes progress for
+    ``pause`` seconds from the moment the update is applied.
+    """
+
+    links: dict[tuple[int, int], float] | None = None
+    pause: float = 0.0
+    label: str = ""
+
+
+@dataclass(frozen=True)
+class EngineView:
+    """Read-only snapshot handed to observer hooks.
+
+    ``active_flows`` rows are ``(job, tid, src, dst, remaining_bytes)`` —
+    enough to rebuild an unsatisfied-demand matrix for replanning.  Treat
+    ``links`` and ``delivered`` as read-only; mutate the fabric only through
+    a returned :class:`PlanUpdate`.
+    """
+
+    now: float
+    links: dict[tuple[int, int], float]
+    resident: tuple[str, ...]  # arrived jobs with outstanding tasks
+    active_flows: tuple[tuple[str, int, int, int, float], ...]
+    delivered: dict[str, float]
+    n: int | None
+
+    def unsatisfied_demand(self) -> np.ndarray:
+        """(n, n) matrix of remaining bytes per in-flight endpoint pair."""
+        assert self.n is not None, "EngineView.n required for demand matrix"
+        m = np.zeros((self.n, self.n))
+        for _, _, src, dst, rem in self.active_flows:
+            m[src, dst] += rem
+        return m
+
+
+class ScenarioObserver:
+    """Hook interface making plan mutation a first-class scenario event.
+
+    :meth:`SimEngine.run` calls these at the matching event; any hook may
+    return a :class:`PlanUpdate` to swap the fabric and/or charge a
+    reconfiguration pause.  The default implementation is a no-op, so a
+    scenario run with a silent observer is bit-identical to one without.
+
+    ``next_check`` schedules observer-initiated events (periodic replans,
+    degradation probes): return the absolute time of the next check, or
+    ``inf`` for none.  After a check fires, the engine re-queries; return a
+    strictly later time to avoid a stuck clock (the engine additionally
+    refuses to fire two checks at the same instant).
+    """
+
+    def next_check(self, now: float) -> float:
+        return float("inf")
+
+    def on_arrival(self, view: EngineView, job: "SimJob") -> PlanUpdate | None:
+        return None
+
+    def on_departure(self, view: EngineView, job_name: str) -> PlanUpdate | None:
+        return None
+
+    def on_failure(
+        self, view: EngineView, link: tuple[int, int]
+    ) -> PlanUpdate | None:
+        return None
+
+    def on_check(self, view: EngineView) -> PlanUpdate | None:
+        return None
+
+
+@dataclass
 class Scenario:
     """Everything one simulation needs: fabric, offered load, disruptions.
 
@@ -369,6 +448,8 @@ class ScenarioResult:
     delivered: dict[str, float]  # job -> network bytes completed
     n_reconfigs: int = 0
     stalled: tuple[tuple[str, int], ...] = ()  # flows finished by deadlock
+    n_replans: int = 0  # observer-applied PlanUpdates
+    replan_times: tuple[float, ...] = ()
 
 
 class _ScenarioFlow(_FlowState):
@@ -431,10 +512,19 @@ class SimEngine:
 
     # -- scenario runs ------------------------------------------------------
 
-    def run(self, scenario: Scenario) -> ScenarioResult:
+    def run(
+        self, scenario: Scenario, observer: ScenarioObserver | None = None
+    ) -> ScenarioResult:
         """Simulate a full scenario: staggered job arrivals sharing the
         fabric max-min fairly, link failures with k-shortest-path reroute,
-        straggler-skewed compute, and optional OCS reconfiguration epochs."""
+        straggler-skewed compute, and optional OCS reconfiguration epochs.
+
+        ``observer`` (a :class:`ScenarioObserver`) receives arrival /
+        departure / failure / check events and may return a
+        :class:`PlanUpdate` to mutate the fabric mid-run — the mechanism
+        behind :class:`repro.core.online.ReoptController`.  With no observer
+        (or a silent one) the run is identical to the plain PR-1 engine.
+        """
         table = _LinkTable(scenario.links)
         live = {l: c for l, c in scenario.links.items() if c > 0}
         reconfig = scenario.reconfig
@@ -469,10 +559,23 @@ class SimEngine:
         seq = 0
         now = 0.0
         n_reconfigs = 0
+        n_replans = 0
+        replan_times: list[float] = []
+        # Observer bookkeeping: departure detection + check scheduling.
+        outstanding: dict[str, int] = {j.name: len(j.tasks) for j in jobs}
+        arrived: set[str] = set()
+        departed: list[str] = []
+        last_check = -np.inf
 
         # OCS epoch state: next rebuild boundary and pause end.
         next_rebuild = 0.0 if reconfig else np.inf
         pause_until = -np.inf
+        # When no engine-side event can ever fire again (every flow
+        # unroutable, nothing scheduled), the observer gets at most one
+        # immediate rescue check per stall episode — enough for a replan to
+        # reconnect the fabric, but scheduled checks alone cannot keep a
+        # dead simulation spinning forever.
+        stall_rescues = 1
 
         import networkx as nx
 
@@ -536,6 +639,9 @@ class SimEngine:
 
         def release(job_name: str, tid: int, t_done: float) -> None:
             finish[(job_name, tid)] = t_done
+            outstanding[job_name] -= 1
+            if outstanding[job_name] == 0:
+                departed.append(job_name)
             job = jobs_by_name[job_name]
             for t in dependents.get((job_name, tid), ()):
                 deps = pending[(job_name, t.tid)]
@@ -543,20 +649,13 @@ class SimEngine:
                 if not deps and (job_name, t.tid) not in finish:
                     admit(job, t)
 
-        def rebuild_topology() -> None:
-            """Algorithm 5 rebuild from unsatisfied demand (active flows)."""
-            nonlocal n_reconfigs
-            n = scenario.n
-            assert n is not None, "Scenario.n required for OCS reconfiguration"
-            remaining = np.zeros((n, n))
-            for f in active:
-                src, dst = f.task.route[0], f.task.route[-1]
-                remaining[src, dst] += f.remaining
-            g = ocs_topology(n, remaining, reconfig.degree)
+        def set_links(new_links: dict[tuple[int, int], float]) -> None:
+            """Swap the live fabric: refresh capacities (dead links -> 0,
+            new links appended), drop stale routes, re-path in-flight flows."""
             live.clear()
-            for a, b in g.edges():
-                live[(a, b)] = live.get((a, b), 0.0) + reconfig.link_bandwidth
-            # Refresh the capacity table: dead links -> 0, new links added.
+            for link, c in new_links.items():
+                if c > 0:
+                    live[link] = live.get(link, 0.0) + float(c)
             for link in list(table.index):
                 table.cap[table.index[link]] = live.get(link, 0.0)
             for link, c in live.items():
@@ -568,6 +667,60 @@ class SimEngine:
             route_cache.clear()
             for f in active:
                 install_route(f)
+
+        def make_view() -> EngineView:
+            return EngineView(
+                now=now,
+                links=dict(live),
+                # Arrival order, not set order: observers must see the same
+                # tuple regardless of PYTHONHASHSEED.
+                resident=tuple(
+                    j.name for j in jobs
+                    if j.name in arrived and outstanding[j.name] > 0
+                ),
+                active_flows=tuple(
+                    (f.job, f.task.tid, f.task.route[0], f.task.route[-1],
+                     f.remaining)
+                    for f in active
+                ),
+                delivered=dict(delivered),
+                n=scenario.n,
+            )
+
+        def apply_update(update: PlanUpdate | None) -> None:
+            nonlocal pause_until, n_replans
+            if update is None:
+                return
+            if update.links is not None:
+                set_links(update.links)
+            if update.pause > 0:
+                pause_until = max(pause_until, now + update.pause)
+            n_replans += 1
+            replan_times.append(now)
+
+        def notify_departures() -> None:
+            """Drain jobs that just finished their last task (observer hook)."""
+            while departed:
+                name = departed.pop(0)
+                if observer is not None:
+                    apply_update(observer.on_departure(make_view(), name))
+
+        def rebuild_topology() -> None:
+            """Algorithm 5 rebuild from unsatisfied demand (active flows)."""
+            nonlocal n_reconfigs
+            n = scenario.n
+            assert n is not None, "Scenario.n required for OCS reconfiguration"
+            remaining = np.zeros((n, n))
+            for f in active:
+                src, dst = f.task.route[0], f.task.route[-1]
+                remaining[src, dst] += f.remaining
+            g = ocs_topology(n, remaining, reconfig.degree)
+            new_links: dict[tuple[int, int], float] = {}
+            for a, b in g.edges():
+                new_links[(a, b)] = (
+                    new_links.get((a, b), 0.0) + reconfig.link_bandwidth
+                )
+            set_links(new_links)
             n_reconfigs += 1
 
         def apply_failure(link: tuple[int, int]) -> None:
@@ -621,15 +774,45 @@ class SimEngine:
                 else np.inf
             )
             t_pause_end = pause_until if in_pause else np.inf
+            # Observer checks (periodic replans / degradation probes) only
+            # fire while work remains; a check already fired at this time is
+            # not re-armed until the observer advances its schedule.
+            t_check = np.inf
+            if observer is not None and (
+                active or compute_heap or arr_i < len(arrivals)
+            ):
+                tc = observer.next_check(now)
+                if tc > last_check:
+                    t_check = max(tc, now)
 
-            t_next = min(t_flow, t_comp, t_arr, t_fail, t_reconf, t_pause_end)
-            if not np.isfinite(t_next):
-                # Deadlock: every remaining flow is unroutable.
+            t_work = min(t_flow, t_comp, t_arr, t_fail, t_reconf, t_pause_end)
+            t_next = min(t_work, t_check)
+            if not np.isfinite(t_work):
+                if (
+                    observer is not None
+                    and np.isfinite(t_check)
+                    and stall_rescues > 0
+                ):
+                    # One immediate rescue check: a replanning observer may
+                    # reconnect the fabric; a silent one falls through to
+                    # the stall-finish on the next pass.
+                    stall_rescues -= 1
+                    last_check = now
+                    apply_update(observer.on_check(make_view()))
+                    notify_departures()
+                    continue
+                # Deadlock: every remaining flow is unroutable.  Drop any
+                # failure events that can never fire (non-finite times) —
+                # they would otherwise keep the loop's while-condition true
+                # with no event left to make progress.
+                fail_i = len(failures)
                 for f in active:
                     stalled.append((f.job, f.task.tid))
                     release(f.job, f.task.tid, now)
                 active.clear()
+                notify_departures()
                 continue
+            stall_rescues = 1
 
             dt = t_next - now
             if active and not in_pause and dt > 0:
@@ -639,17 +822,23 @@ class SimEngine:
             now = t_next
 
             # Event priority at equal times: arrival, failure, reconfig,
-            # pause-end, compute, flow — deterministic and arrival-first so
-            # new jobs contend for bandwidth immediately.
+            # check, pause-end, compute, flow — deterministic and
+            # arrival-first so new jobs contend for bandwidth immediately.
             if t_arr <= t_next:
                 job = jobs[arrivals[arr_i][1]]
                 arr_i += 1
+                arrived.add(job.name)
                 for t in job.tasks:
                     if not t.deps:
                         admit(job, t)
+                if observer is not None:
+                    apply_update(observer.on_arrival(make_view(), job))
             elif t_fail <= t_next:
-                apply_failure(failures[fail_i].link)
+                failed_link = failures[fail_i].link
+                apply_failure(failed_link)
                 fail_i += 1
+                if observer is not None:
+                    apply_update(observer.on_failure(make_view(), failed_link))
             elif reconfig is not None and t_reconf <= t_next:
                 if n_reconfigs >= reconfig.max_epochs:
                     for f in active:
@@ -657,10 +846,14 @@ class SimEngine:
                         release(f.job, f.task.tid, now)
                     active.clear()
                     next_rebuild = np.inf
+                    notify_departures()
                     continue
                 pause_until = now + reconfig.latency
                 rebuild_topology()
                 next_rebuild = now + reconfig.window
+            elif observer is not None and t_check <= t_next:
+                last_check = now
+                apply_update(observer.on_check(make_view()))
             elif in_pause and t_pause_end <= t_next:
                 pass  # pause over; next iteration recomputes rates
             elif t_comp <= t_flow and compute_heap:
@@ -670,6 +863,7 @@ class SimEngine:
                 done = active.pop(next_idx)
                 delivered[done.job] += done.task.nbytes
                 release(done.job, done.task.tid, now)
+            notify_departures()
 
         job_finish = {}
         job_makespans = {}
@@ -685,6 +879,8 @@ class SimEngine:
             delivered=delivered,
             n_reconfigs=n_reconfigs,
             stalled=tuple(stalled),
+            n_replans=n_replans,
+            replan_times=tuple(replan_times),
         )
 
     # -- vectorized benchmark inner loops -----------------------------------

@@ -1,20 +1,40 @@
-"""TopologyFinder (Algorithm 1).
+"""TopologyFinder (paper Algorithm 1, §4.2) + failure handling (§7).
 
 Given ``n`` servers of degree ``d`` and a :class:`TrafficDemand`, construct:
 
-1. degree split ``d_A``/``d_MP`` proportional to AllReduce vs MP bytes,
+1. degree split ``d_A``/``d_MP`` proportional to AllReduce vs MP bytes
+   (Alg. 1 line 2: ``d_A = max(1, ceil(d * sum_AR / (sum_AR + sum_MP)))``),
 2. the AllReduce sub-topology — ``d_k`` TotientPerms rings per group chosen
-   by SelectPermutations (geometric-stride, small diameter),
+   by SelectPermutations (geometric-stride, small diameter; Alg. 2/3 in
+   :mod:`repro.core.totient` / :mod:`repro.core.select_perms`),
 3. the MP sub-topology — repeated Blossom max-weight matching with
    demand-halving (diminishing returns, App. E.4 Discount),
-4. combined topology + routing: CoinChangeMod on the ring strides for
-   AllReduce, k-shortest-path on the combined graph for MP.
+4. combined topology + routing: CoinChangeMod (Alg. 4,
+   :mod:`repro.core.routing`) on the ring strides for AllReduce,
+   k-shortest-path on the combined graph for MP.
+
+Notation mapping (paper -> code): ``d`` -> ``degree``, ``d_A`` ->
+``Topology.d_allreduce``, ``d_MP`` -> ``Topology.d_mp``, ``d_k`` (per-group
+ring budget) -> computed per :class:`AllReduceGroup` from its byte share,
+``T_MP`` -> ``TrafficDemand.mp``, the permutation set ``P`` ->
+:class:`repro.core.totient.PermutationSet`.
+
+Two degradation paths serve the failure story:
+
+* :func:`repair_topology` — the paper's §7 quick fix for a cut *fiber*:
+  donate the lowest-value MP link to close a broken AllReduce ring and
+  re-route around the cut (the pair itself may be re-patched).
+* :func:`remove_pair` — a dead node *pair* (port/transceiver loss): both
+  directions disappear for good; :mod:`repro.core.online` keeps this as the
+  static operator's incumbent and passes the same pairs to
+  ``topology_finder(forbidden=...)`` when re-optimizing.
 """
 
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+from typing import Iterable
 
 import networkx as nx
 import numpy as np
@@ -22,7 +42,7 @@ import numpy as np
 from .demand import AllReduceGroup, TrafficDemand
 from .routing import RoutingTable, allreduce_routes, k_shortest_mp_routes
 from .select_perms import coin_change_diameter, select_permutations
-from .totient import RingPermutation, totient_perms
+from .totient import PermutationSet, RingPermutation, totient_perms
 
 
 @dataclass
@@ -61,14 +81,34 @@ def _add_duplex(graph: nx.MultiDiGraph, a: int, b: int) -> None:
     graph.add_edge(b, a, kind="mp")
 
 
+def _norm_pair(a: int, b: int) -> tuple[int, int]:
+    return (a, b) if a <= b else (b, a)
+
+
 def topology_finder(
     demand: TrafficDemand,
     degree: int,
     prime_only: bool | None = None,
     mp_route_k: int = 2,
+    forbidden: Iterable[tuple[int, int]] = (),
+    warm_start: Topology | None = None,
 ) -> Topology:
-    """Algorithm 1 (paper §4.2)."""
+    """Algorithm 1 (paper §4.2).
+
+    ``forbidden`` is a set of node pairs (either direction) that physically
+    cannot carry a link — e.g. fiber pairs that failed mid-run.  Ring
+    permutations crossing a forbidden pair are excluded from SelectPermutations
+    and the Blossom matching skips those pairs, so the returned topology is
+    realizable on the surviving fabric.
+
+    ``warm_start`` seeds the ring selection from an incumbent topology
+    (online re-optimization): strides the incumbent already uses for a group
+    are kept when still valid, and only the remainder of the degree budget is
+    re-searched.  This both converges faster and minimizes physical link
+    churn when the plan is swapped on a live OCS/patch-panel fabric.
+    """
     n = demand.n
+    forb = {_norm_pair(a, b) for a, b in forbidden}
     graph = nx.MultiDiGraph()
     graph.add_nodes_from(range(n))
 
@@ -104,7 +144,37 @@ def topology_finder(
             d_k = 1
         d_k = min(d_k, d_a_budget)
         perm_set = totient_perms(g.members, prime_only=prime_only)
-        chosen = select_permutations(perm_set, d_k)
+        if forb:
+            perm_set = PermutationSet(
+                group=perm_set.group,
+                perms=[
+                    r
+                    for r in perm_set.perms
+                    if not any(_norm_pair(a, b) in forb for a, b in r.edges())
+                ],
+            )
+        chosen: list[RingPermutation] = []
+        if warm_start is not None:
+            # Keep incumbent strides that are still valid (warm start).
+            still = {r.p: r for r in perm_set.perms}
+            for r in warm_start.rings.get(g.members, []):
+                if r.p in still and len(chosen) < d_k:
+                    chosen.append(still[r.p])
+        if len(chosen) < d_k:
+            rest = PermutationSet(
+                group=perm_set.group,
+                perms=[r for r in perm_set.perms if r not in chosen],
+            )
+            chosen = chosen + select_permutations(rest, d_k - len(chosen))
+        if forb and chosen and len(chosen) < d_k:
+            # Replanning on a degraded fabric: the forbidden pairs thinned
+            # the permutation set below the ring budget.  Refill with
+            # parallel copies of the surviving strides — on a max-min-fair
+            # fabric a second ring of the same stride doubles that ring's
+            # capacity, which beats leaving NIC ports dark.
+            base = list(chosen)
+            while len(chosen) < d_k:
+                chosen.append(base[(len(chosen) - len(base)) % len(base)])
         if not chosen and len(g.members) >= 2:
             chosen = [perm_set.perms[0]] if perm_set.perms else []
         for ring in chosen:
@@ -121,7 +191,7 @@ def topology_finder(
         und = nx.Graph()
         srcs, dsts = np.nonzero(sym)
         for i, j in zip(srcs.tolist(), dsts.tolist()):
-            if i < j:
+            if i < j and (i, j) not in forb:
                 und.add_edge(i, j, weight=float(sym[i, j]))
         matching = nx.max_weight_matching(und, maxcardinality=False)
         if not matching:
@@ -211,6 +281,14 @@ def repair_topology(topo: Topology, failed: tuple[int, int]) -> Topology:
     # Recompute routing on the surviving graph (shortest paths for every pair
     # previously routed through a removed link — the failure AND the donated
     # MP link).
+    repaired.routing = _reroute_around(topo, g, removed)
+    return repaired
+
+
+def _reroute_around(topo: Topology, g: nx.MultiDiGraph,
+                    removed: set) -> RoutingTable:
+    """Keep routes that avoid ``removed`` links; re-path the rest by
+    shortest path on ``g`` (drop pairs that became unreachable)."""
     simple = nx.DiGraph(g)
     new_routing = RoutingTable()
     for pair, rs in topo.routing.routes.items():
@@ -226,5 +304,30 @@ def repair_topology(topo: Topology, failed: tuple[int, int]) -> Topology:
             new_routing.add(pair[0], pair[1], tuple(path))
         except (nx.NetworkXNoPath, nx.NodeNotFound):
             continue
-    repaired.routing = new_routing
-    return repaired
+    return new_routing
+
+
+def remove_pair(topo: Topology, pair: tuple[int, int]) -> Topology:
+    """Degrade a topology by a dead node pair (no §7 donation).
+
+    Unlike :func:`repair_topology` — which models a cut *fiber* that a
+    patch panel can re-create from a donated MP link — this models the pair
+    itself becoming unusable (port/transceiver loss): both directions
+    disappear, no replacement link may touch the pair, and routes that
+    crossed it are re-pathed over the survivors.  This is the incumbent a
+    static operator keeps running in :mod:`repro.core.online`, and the same
+    constraint re-optimization passes to ``topology_finder(forbidden=...)``.
+    """
+    u, v = pair
+    g = topo.graph.copy()
+    removed = {(u, v), (v, u)}
+    for a, b in ((u, v), (v, u)):
+        if g.has_edge(a, b):
+            for key in list(g[a][b]):
+                g.remove_edge(a, b, key=key)
+    degraded = Topology(
+        n=topo.n, degree=topo.degree, graph=g, rings=topo.rings,
+        d_allreduce=topo.d_allreduce, d_mp=topo.d_mp,
+    )
+    degraded.routing = _reroute_around(topo, g, removed)
+    return degraded

@@ -1,13 +1,25 @@
-"""TotientPerms (Algorithm 2) — ring-AllReduce permutation generation.
+"""TotientPerms (paper Algorithm 2, §4.2) — ring-AllReduce permutations.
 
 Theorem 2 (paper, App. E.1): for a cluster of ``n`` nodes, every integer
 ``p < n`` with ``gcd(p, n) == 1`` generates a unique *regular* ring
 permutation ``S_i -> S_{(i+p) mod n}``.  These are exactly the generators of
-the cyclic group Z_n^+.
+the cyclic group Z_n^+, and their count is Euler's totient ``phi(n)`` —
+hence the algorithm's name.  At large ``n`` the paper prunes the stride set
+to the primes (plus 1), shrinking it to ``O(n / ln n)`` by the Prime Number
+Theorem (:func:`prime_coprimes`).
 
-The AllReduce group may be a subset of the cluster (hybrid strategies
-replicate a layer over ``k`` of ``n`` servers); permutations are generated in
-the *group-local* index space and mapped back onto the member node ids.
+Notation mapping (paper -> code): servers ``S_i`` -> group-local indices
+``0..k-1``; a permutation ``p`` -> :class:`RingPermutation` (``.p`` is the
+stride, ``.members`` maps local index -> cluster node id); the output set
+``P`` of Algorithm 2 -> :class:`PermutationSet`.  The AllReduce group may be
+a subset of the cluster (hybrid strategies replicate a layer over ``k`` of
+``n`` servers); permutations are generated in the *group-local* index space
+and mapped back onto the member node ids, so a stride's physical edges come
+from :meth:`RingPermutation.edges`.
+
+Downstream: :func:`repro.core.select_perms.select_permutations` (Alg. 3)
+picks ``d_k`` of these strides per group; CoinChangeMod (Alg. 4) then routes
+arbitrary pairs over the chosen rings.
 """
 
 from __future__ import annotations

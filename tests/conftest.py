@@ -12,7 +12,11 @@ import os
 import sys
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-for _p in (os.path.join(_ROOT, "src"), os.path.dirname(os.path.abspath(__file__))):
+for _p in (
+    os.path.join(_ROOT, "src"),
+    os.path.dirname(os.path.abspath(__file__)),
+    _ROOT,  # `import benchmarks.*` under a bare `pytest` invocation
+):
     if _p not in sys.path:
         sys.path.insert(0, _p)
 

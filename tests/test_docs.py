@@ -1,0 +1,45 @@
+"""Executable documentation.
+
+Every fenced ``python`` code block in README.md and docs/simengine.md runs
+here, with ``DeprecationWarning`` promoted to an error — documentation that
+drifts from the code (or from the pinned dependency versions) fails CI
+instead of rotting silently.  Blocks within one file share a namespace, so
+later snippets may build on earlier imports (doctest-style).
+"""
+
+from __future__ import annotations
+
+import re
+import warnings
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = ["README.md", "docs/simengine.md"]
+FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def _python_blocks(rel: str) -> list[str]:
+    return FENCE.findall((ROOT / rel).read_text())
+
+
+@pytest.mark.parametrize("rel", DOC_FILES)
+def test_doc_snippets_execute(rel):
+    blocks = _python_blocks(rel)
+    assert blocks, f"no ```python snippets found in {rel}"
+    ns: dict = {"__name__": f"docsnippet_{rel.replace('/', '_')}"}
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        for i, src in enumerate(blocks):
+            code = compile(src, f"{rel}[snippet {i}]", "exec")
+            exec(code, ns)  # asserts inside the snippets are the checks
+
+
+def test_docs_cover_all_benchmarks():
+    """The README results table must list every registered bench."""
+    from benchmarks.run import BENCHES
+
+    readme = (ROOT / "README.md").read_text()
+    for bench, _ in BENCHES:
+        assert f"`{bench}`" in readme, f"README bench table misses {bench}"

@@ -1,0 +1,388 @@
+"""Online re-optimization invariants.
+
+* Golden: a ``ReoptPolicy.never()`` controller attached as observer leaves
+  every PR-1 SimEngine scenario bit-identical (makespans to 1e-9).
+* Replanned topologies respect the degree budget and avoid dead pairs.
+* Flow bytes are conserved across a mid-run plan swap.
+* Trigger semantics: hysteresis, periodic scheduling, degradation baseline.
+* Warm start: incumbent ring strides survive a replan when still valid.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.alternating import alternating_optimize
+from repro.core.netsim import HardwareSpec
+from repro.core.online import (
+    ReoptController,
+    ReoptPolicy,
+    TraceEvent,
+    place_arrival,
+    run_online,
+)
+from repro.core.simengine import (
+    LinkFailure,
+    OCSPolicy,
+    Scenario,
+    SimEngine,
+    SimJob,
+    Task,
+    iteration_tasks,
+)
+from repro.core.topology_finder import remove_pair, topology_finder
+from repro.core.workloads import DLRM, VGG16, job_demand
+
+HW = HardwareSpec(link_bandwidth=12.5e9, degree=4)
+
+
+@pytest.fixture(scope="module")
+def dlrm_plan():
+    """One cheap co-optimized plan shared by every test in the module."""
+    return alternating_optimize(DLRM, 8, HW, rounds=2, mcmc_iters=20, seed=2)
+
+
+def _never_controller(n=4):
+    return ReoptController(VGG16, n, hw=HW, policy=ReoptPolicy.never())
+
+
+def _flow_job(name, arrival, nbytes=1000.0, route=(0, 1)):
+    return SimJob(
+        name=name, arrival=arrival,
+        tasks=[Task(tid=0, kind="flow", nbytes=nbytes, route=route)],
+    )
+
+
+# ---------------------------------------------------------------------------
+# Golden: never-policy == PR 1 engine
+# ---------------------------------------------------------------------------
+
+GOLDEN_SCENARIOS = {
+    "shared": lambda: Scenario(
+        links={(0, 1): 100.0},
+        jobs=[_flow_job("a", 0.0), _flow_job("b", 5.0)],
+        n=2,
+    ),
+    "failure_reroute": lambda: Scenario(
+        links={(0, 1): 100.0, (0, 2): 100.0, (2, 1): 100.0},
+        jobs=[_flow_job("j", 0.0, nbytes=1000.0, route=(0, 1))],
+        failures=(LinkFailure(time=5.0, link=(0, 1)),),
+        n=3,
+    ),
+    "ocs": lambda: Scenario(
+        links={}, n=4,
+        jobs=[SimJob("o", [
+            Task(tid=0, kind="flow", nbytes=1e6, route=(0, 3)),
+            Task(tid=1, kind="flow", nbytes=1e6, route=(1, 2)),
+        ])],
+        reconfig=OCSPolicy(window=50e-3, latency=1e-3, degree=2,
+                           link_bandwidth=1e6),
+    ),
+    "stragglers": lambda: Scenario(
+        links={}, n=2, stragglers={1: 3.0},
+        jobs=[SimJob("s", [
+            Task(tid=0, kind="compute", duration=2.0, node=0),
+            Task(tid=1, kind="compute", duration=2.0, node=1),
+        ])],
+    ),
+}
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN_SCENARIOS))
+def test_never_policy_reproduces_plain_engine(name):
+    make = GOLDEN_SCENARIOS[name]
+    plain = SimEngine().run(make())
+    ctrl = _never_controller(n=4)
+    observed = SimEngine().run(make(), observer=ctrl)
+    assert observed.makespan == pytest.approx(plain.makespan, rel=1e-9)
+    assert observed.n_replans == 0
+    assert observed.job_finish.keys() == plain.job_finish.keys()
+    for job, t in plain.job_finish.items():
+        assert observed.job_finish[job] == pytest.approx(t, rel=1e-9)
+    assert observed.delivered == plain.delivered
+    assert ctrl.n_replans == 0
+
+
+def test_never_policy_golden_shared_values():
+    """Pin the PR-1 numbers themselves, not just the diff."""
+    r = SimEngine().run(GOLDEN_SCENARIOS["shared"](), observer=_never_controller())
+    assert r.job_makespans["a"] == pytest.approx(15.0, rel=1e-5)
+    assert r.job_finish["b"] == pytest.approx(20.0, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Replanned topology invariants
+# ---------------------------------------------------------------------------
+
+
+def test_replan_respects_degree_and_dead_pairs(dlrm_plan):
+    ctrl = ReoptController(
+        DLRM, 8, hw=HW,
+        policy=ReoptPolicy(on_failure=True, replan_latency=1e-3),
+        plan=dlrm_plan,
+    )
+    ctrl.fail((0, 1), now=0.0)
+    ctrl.fail((2, 5), now=1.0)
+    assert ctrl.n_replans == 2
+    topo = ctrl.topology
+    assert max(topo.out_degrees()) <= HW.degree
+    dead = {(0, 1), (1, 0), (2, 5), (5, 2)}
+    assert not dead & set(topo.graph.edges()), "replanned topology uses dead pair"
+    assert not dead & set(ctrl.links()), "live links include dead pair"
+
+
+def test_forbidden_pairs_excluded_by_topology_finder():
+    dem = job_demand(DLRM, 8, table_hosts=(0, 4))
+    topo = topology_finder(dem, 4, forbidden=[(0, 1), (3, 7)])
+    banned = {(0, 1), (1, 0), (3, 7), (7, 3)}
+    assert not banned & set(topo.graph.edges())
+    assert max(topo.out_degrees()) <= 4
+
+
+def test_warm_start_keeps_surviving_strides():
+    from repro.core.totient import ring_edges
+
+    dem = job_demand(VGG16, 8)
+    cold = topology_finder(dem, 4)
+    members = tuple(range(8))
+    warm = topology_finder(dem, 4, warm_start=cold)
+    assert warm.ring_strides(members) == cold.ring_strides(members)
+    # Forbid a pair: every incumbent stride whose ring avoids it must be
+    # retained by the warm-started search.
+    warm2 = topology_finder(dem, 4, forbidden=[(0, 1)], warm_start=cold)
+
+    def uses_pair(p):
+        return any({a, b} == {0, 1} for a, b in ring_edges(8, p))
+
+    survivors = [p for p in cold.ring_strides(members) if not uses_pair(p)]
+    assert survivors, "fixture must leave some incumbent strides valid"
+    for p in survivors:
+        assert p in warm2.ring_strides(members), f"stride {p} not retained"
+    assert (0, 1) not in set(warm2.graph.edges())
+
+
+def test_remove_pair_drops_links_and_reroutes():
+    dem = job_demand(DLRM, 8, table_hosts=(0, 4))
+    topo = topology_finder(dem, 4)
+    degraded = remove_pair(topo, (0, 1))
+    assert not {(0, 1), (1, 0)} & set(degraded.graph.edges())
+    for rs in degraded.routing.routes.values():
+        for r in rs:
+            assert (0, 1) not in zip(r.path[:-1], r.path[1:])
+            assert (1, 0) not in zip(r.path[:-1], r.path[1:])
+
+
+# ---------------------------------------------------------------------------
+# Conservation across a mid-run plan swap
+# ---------------------------------------------------------------------------
+
+
+def test_byte_conservation_across_midrun_replan(dlrm_plan):
+    ctrl = ReoptController(
+        DLRM, 8, hw=HW,
+        policy=ReoptPolicy(on_failure=True, replan_latency=1e-3),
+        plan=dlrm_plan,
+    )
+    tasks = iteration_tasks(ctrl.topology, ctrl.demand)
+    offered = sum(t.nbytes for t in tasks if t.kind == "flow")
+    # Pick a pair the plan actually uses so the failure bites mid-run.
+    link = next(iter(ctrl.links()))
+    sc = Scenario(
+        links=ctrl.links(),
+        jobs=[SimJob("dlrm", tasks)],
+        failures=(LinkFailure(time=1e-4, link=link),),
+        n=8,
+    )
+    r = SimEngine(HW).run(sc, observer=ctrl)
+    assert r.n_replans == 1
+    assert ctrl.n_replans == 1
+    assert not r.stalled
+    assert r.delivered["dlrm"] == pytest.approx(offered, rel=1e-12)
+    assert len(r.finish_times) == len(tasks)
+    # The replan pause is charged inside the run.
+    assert r.replan_times and 0 <= r.replan_times[0] <= r.makespan
+
+
+# ---------------------------------------------------------------------------
+# Trigger semantics
+# ---------------------------------------------------------------------------
+
+
+def test_scheduled_checks_cannot_stall_a_dead_simulation():
+    """Regression: an unroutable flow plus a periodic check schedule must
+    stall-finish (one rescue check allowed), not spin the engine forever."""
+    from repro.core.simengine import PlanUpdate, ScenarioObserver
+
+    class Probe(ScenarioObserver):
+        def __init__(self, rescue_links=None):
+            self.checks = 0
+            self.rescue_links = rescue_links
+
+        def next_check(self, now):
+            return now + 0.5  # always another check scheduled
+
+        def on_check(self, view):
+            self.checks += 1
+            if self.rescue_links is not None:
+                return PlanUpdate(links=self.rescue_links)
+            return None
+
+    def scenario():
+        return Scenario(
+            links={(0, 1): 100.0},
+            jobs=[_flow_job("j", 0.0, nbytes=1000.0, route=(0, 1))],
+            failures=(LinkFailure(time=1.0, link=(0, 1)),),
+            n=2,
+        )
+
+    silent = Probe()
+    r = SimEngine().run(scenario(), observer=silent)
+    assert ("j", 0) in r.stalled  # terminated, flow reported stalled
+    assert silent.checks >= 1  # the rescue check was offered
+
+    # A rescuing observer reconnects the fabric and the flow completes.
+    rescuer = Probe(rescue_links={(0, 1): 100.0})
+    r2 = SimEngine().run(scenario(), observer=rescuer)
+    assert not r2.stalled
+    assert r2.delivered["j"] == pytest.approx(1000.0)
+
+
+def test_unreachable_failure_events_do_not_hang_the_engine():
+    """Regression: a LinkFailure at a non-finite time can never fire; it must
+    not keep the event loop's while-condition alive after a stall-finish."""
+    r = SimEngine().run(Scenario(
+        links={(0, 1): 100.0},
+        jobs=[_flow_job("j", 0.0, nbytes=1000.0, route=(0, 1))],
+        failures=(LinkFailure(time=1.0, link=(0, 1)),
+                  LinkFailure(time=float("inf"), link=(0, 1))),
+        n=2,
+    ))
+    assert ("j", 0) in r.stalled
+
+
+def test_run_online_disconnected_fabric_with_midrun_failure_terminates():
+    """Regression: frac>0 failures used to schedule at frac*inf when the
+    probe saw a disconnected fabric, hanging the engine."""
+    plan = alternating_optimize(VGG16, 2, HW, rounds=1, mcmc_iters=5, seed=0)
+    trace = (TraceEvent(iteration=0, kind="fail", link=(0, 1)),
+             TraceEvent(iteration=1, kind="fail", link=(0, 1), frac=0.5))
+    r = run_online(VGG16, 2, HW, policy=ReoptPolicy.never(), trace=trace,
+                   n_iters=3, seed=0, plan=plan)
+    assert len(r.iter_times) == 3  # completed, did not hang
+
+
+def test_hysteresis_suppresses_back_to_back_replans(dlrm_plan):
+    ctrl = ReoptController(
+        DLRM, 8, hw=HW,
+        policy=ReoptPolicy(on_failure=True, min_interval=10.0,
+                           replan_latency=1e-3),
+        plan=dlrm_plan,
+    )
+    ctrl.fail((0, 1), now=0.0)
+    ctrl.fail((2, 5), now=0.5)  # within min_interval: suppressed
+    ctrl.fail((3, 6), now=20.0)  # outside: replans again
+    assert ctrl.n_replans == 2
+    suppressed = [r for r in ctrl.log if not r.replanned]
+    assert len(suppressed) == 1 and suppressed[0].trigger == "failure"
+    # All three pairs are still dead regardless of replan decisions.
+    assert ctrl.dead == {(0, 1), (2, 5), (3, 6)}
+
+
+def test_periodic_schedule_advances_past_fires():
+    pol = ReoptPolicy.periodic(period=0.5)
+    assert pol.check_period == 0.5
+    ctrl = _never_controller()
+    assert ctrl.next_check(0.0) == np.inf  # never-policy: no checks
+    assert ReoptPolicy.never().check_period is None
+
+
+def test_degradation_baseline_pinned_at_adoption(dlrm_plan):
+    ctrl = ReoptController(
+        DLRM, 8, hw=HW,
+        policy=ReoptPolicy.degradation(threshold=1.25, check_interval=0.05,
+                                       replan_latency=1e-3),
+        plan=dlrm_plan,
+    )
+    healthy = ctrl.baseline
+    # Kill a pair the plan uses: the probe estimate must exceed the baseline.
+    link = next(iter(ctrl.links()))
+    ctrl.fail(link, now=0.0)  # degradation policy: records, no replan
+    assert ctrl.n_replans == 0
+    assert ctrl.baseline == healthy
+    assert ctrl.estimated_iter_time() > healthy
+
+
+# ---------------------------------------------------------------------------
+# run_online driver
+# ---------------------------------------------------------------------------
+
+
+def test_run_online_reactive_beats_static_under_failures(dlrm_plan):
+    trace = (
+        TraceEvent(iteration=1, kind="fail", link=(0, 1)),
+        TraceEvent(iteration=2, kind="fail", link=(2, 5), frac=0.5),
+    )
+    static = run_online(DLRM, 8, HW, policy=ReoptPolicy.never(),
+                        trace=trace, n_iters=5, seed=0, plan=dlrm_plan)
+    reactive = run_online(DLRM, 8, HW, policy=ReoptPolicy(replan_latency=1e-3),
+                          trace=trace, n_iters=5, seed=0, plan=dlrm_plan)
+    assert static.n_replans == 0
+    assert reactive.n_replans >= 1
+    assert reactive.n_failures == static.n_failures == 2
+    assert len(static.iter_times) == len(reactive.iter_times) == 5
+    assert reactive.total_time < static.total_time
+
+
+def test_run_online_never_trace_free_is_flat(dlrm_plan):
+    r = run_online(DLRM, 8, HW, policy=ReoptPolicy.never(), trace=(),
+                   n_iters=3, seed=0, plan=dlrm_plan)
+    assert r.n_replans == 0 and r.n_failures == 0
+    assert r.iter_times[0] == pytest.approx(r.iter_times[-1], rel=1e-9)
+    assert r.total_time == pytest.approx(sum(r.iter_times), rel=1e-12)
+
+
+def test_run_online_load_shift_triggers_arrival_replan(dlrm_plan):
+    trace = (TraceEvent(iteration=1, kind="load", job=VGG16),)
+    r = run_online(DLRM, 8, HW,
+                   policy=ReoptPolicy.reactive(replan_latency=1e-3),
+                   trace=trace, n_iters=3, seed=0, plan=dlrm_plan)
+    assert r.n_replans >= 1
+    assert r.log[0].trigger == "arrival"
+
+
+# ---------------------------------------------------------------------------
+# Topology-aware placement
+# ---------------------------------------------------------------------------
+
+
+def test_place_arrival_prefers_connected_servers():
+    links = {(0, 1): 1.0, (1, 2): 1.0, (0, 2): 1.0, (4, 5): 1.0}
+    chosen = place_arrival(3, set(range(8)), links)
+    assert chosen == (0, 1, 2)
+
+
+def test_place_arrival_avoids_failed_island():
+    # Nodes 0-3 form a clique; 4-7 have no surviving capacity at all.
+    links = {(a, b): 1.0 for a in range(4) for b in range(4) if a < b}
+    chosen = place_arrival(4, set(range(8)), links)
+    assert chosen == (0, 1, 2, 3)
+
+
+def test_place_arrival_requires_enough_free():
+    with pytest.raises(ValueError):
+        place_arrival(3, {0, 1}, {})
+
+
+def test_place_arrival_zero_request_is_empty():
+    assert place_arrival(0, {0, 1}, {(0, 1): 1.0}) == ()
+
+
+def test_disconnected_probe_estimates_unusable():
+    """A fabric whose surviving links cannot carry the demand must probe as
+    unusable (inf), not as instantly-stall-finished (fast)."""
+    plan = alternating_optimize(VGG16, 2, HW, rounds=1, mcmc_iters=5, seed=0)
+    ctrl = ReoptController(VGG16, 2, hw=HW, policy=ReoptPolicy.never(),
+                           plan=plan)
+    healthy = ctrl.estimated_iter_time()
+    assert np.isfinite(healthy) and healthy > 0
+    ctrl.fail((0, 1), now=0.0)  # the only pair: fabric fully disconnected
+    assert ctrl.estimated_iter_time() == np.inf

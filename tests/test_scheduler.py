@@ -1,4 +1,5 @@
-"""Appendix C: shard scheduling with look-ahead pre-provisioning."""
+"""Appendix C: shard scheduling with look-ahead pre-provisioning, plus the
+pluggable (topology-aware) placement policies."""
 
 import pytest
 
@@ -6,6 +7,8 @@ from repro.core.scheduler import (
     FLIP_S,
     PATCH_PANEL_RECONFIG_S,
     JobRequest,
+    contiguous_fit,
+    first_fit,
     mean_queueing_overhead,
     simulate,
 )
@@ -51,3 +54,51 @@ def test_all_jobs_complete():
     jobs = _burst(10, size=16, duration=50.0, gap=10.0)
     recs = simulate(48, jobs, lookahead=True)
     assert all(r.end_s > r.start_s >= r.req.arrival_s for r in recs)
+
+
+# ---------------------------------------------------------------------------
+# Placement policies
+# ---------------------------------------------------------------------------
+
+
+def test_first_fit_picks_lowest_ids():
+    assert first_fit({9, 3, 7, 1}, 2) == (1, 3)
+
+
+def test_contiguous_fit_best_fit_block():
+    free = set(range(0, 4)) | {8, 9} | set(range(12, 16))
+    # Smallest adequate run wins: the 2-run at 8.
+    assert contiguous_fit(free, 2) == (8, 9)
+    # Two 4-runs fit; ties break toward the lower start.
+    assert contiguous_fit(free, 4) == (0, 1, 2, 3)
+
+
+def test_contiguous_fit_gathers_when_fragmented():
+    free = {0, 1, 4, 5, 6, 9}
+    chosen = contiguous_fit(free, 5)
+    assert len(chosen) == 5 and set(chosen) <= free
+    assert {4, 5, 6} <= set(chosen)  # largest fragment used first
+
+
+def test_simulate_with_contiguous_placement():
+    jobs = _burst(4, size=16, duration=1e6)
+    recs = simulate(64, jobs, lookahead=True, placement="contiguous")
+    seen = set()
+    for r in recs:
+        ids = sorted(r.servers)
+        assert ids == list(range(ids[0], ids[0] + 16))  # one solid block
+        assert not (seen & set(ids))
+        seen |= set(ids)
+
+
+def test_simulate_with_callable_placement():
+    calls = []
+
+    def reversed_fit(free, k):
+        calls.append(k)
+        return tuple(sorted(free, reverse=True)[:k])
+
+    recs = simulate(32, _burst(2, size=8, duration=10.0),
+                    placement=reversed_fit)
+    assert calls and all(len(r.servers) == 8 for r in recs)
+    assert 31 in recs[0].servers
