@@ -1,0 +1,170 @@
+"""Multi-tenant shared fabric: JobSet co-optimization under churn.
+
+The §6 deployment story is a fleet of concurrent jobs contending for one
+direct-connect fabric.  This benchmark drives
+:func:`repro.core.online.run_online_jobset` over a mixed
+DLRM + DP-transformer + MoE churn trace (a job arriving mid-run, a tenant
+departing, fibers dying) and compares:
+
+* **static** — one shared plan computed offline
+  (:func:`~repro.core.alternating.co_optimize_jobset`), never touched; the
+  arriving MoE job rides the connectivity ring, failures get route repair.
+* **reactive** — replan the union demand on every arrival / departure /
+  failure, warm-started, with churn-proportional pauses
+  (``fiber_move_latency`` x edges moved) and the adaptive benefit-vs-cost
+  gate.
+
+A second experiment pins the fairness story: the same *contending* jobset
+(an un-replanned MoE arrival riding the shared fabric plus a
+failure-induced reroute, so tenants genuinely share links) run with unit
+weights vs ``weight=2`` on the DLRM tenant — weighted max-min must speed
+the weighted job up, never slow it down.
+
+``derived`` reports the static/reactive makespan ratio (> 1 means reactive
+shared-fabric re-optimization won despite paying for every moved fiber)
+and the weighted-fairness speedup.  A perf record lands in
+``experiments/bench/BENCH_multitenant.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core.alternating import co_optimize_jobset
+from repro.core.costmodel import OCS_FIBER_MOVE_S, fiber_move_cost
+from repro.core.netsim import HardwareSpec
+from repro.core.online import ReoptPolicy, TraceEvent, run_online_jobset
+from repro.core.workloads import BERT, DLRM, MOE_16E, JobSet, TenantJob
+
+DEGREE = 4
+PERF_RECORD = os.path.join("experiments", "bench", "BENCH_multitenant.json")
+
+
+def _jobset(n: int, dlrm_weight: float = 1.0) -> JobSet:
+    third = n // 3
+    return JobSet(n=n, tenants=[
+        TenantJob(spec=DLRM, servers=tuple(range(0, third)),
+                  weight=dlrm_weight, name="dlrm"),
+        TenantJob(spec=BERT, servers=tuple(range(third, 2 * third)),
+                  name="bert"),
+    ])
+
+
+def _churn_trace(n: int, moe_k: int) -> tuple[TraceEvent, ...]:
+    return (
+        TraceEvent(iteration=1, kind="arrive", job=MOE_16E, k=moe_k,
+                   name="moe"),
+        TraceEvent(iteration=2, kind="fail", link=(0, 3)),
+        TraceEvent(iteration=3, kind="depart", name="bert"),
+        TraceEvent(iteration=4, kind="fail", link=(1, n // 3), frac=0.5),
+    )
+
+
+def run(smoke: bool = False) -> list[dict]:
+    n = 12 if smoke else 18
+    n_iters = 4 if smoke else 8
+    rounds, iters = (1, 15) if smoke else (2, 60)
+    hw = HardwareSpec(link_bandwidth=12.5e9, degree=DEGREE)
+    rows: list[dict] = []
+
+    # -- churn: static shared plan vs reactive union re-optimization --------
+    jobset = _jobset(n)
+    plan = co_optimize_jobset(jobset, hw, rounds=rounds, mcmc_iters=iters,
+                              seed=1)
+    trace = _churn_trace(n, moe_k=max(2, n - 2 * (n // 3)))
+    t0 = time.perf_counter()
+    static = run_online_jobset(
+        jobset, hw, policy=ReoptPolicy.never(), trace=trace,
+        n_iters=n_iters, seed=0, plan=plan)
+    reactive = run_online_jobset(
+        jobset, hw,
+        policy=ReoptPolicy.reactive(
+            fiber_move_latency=OCS_FIBER_MOVE_S, adaptive=True),
+        trace=trace, n_iters=n_iters, seed=0, plan=plan)
+    us = (time.perf_counter() - t0) * 1e6
+    ratio = static.total_time / reactive.total_time
+    rows.append(dict(
+        name="multitenant_churn",
+        us_per_call=us,
+        derived=(
+            f"static/reactive={ratio:.2f};replans={reactive.n_replans};"
+            f"edges_moved={reactive.edges_moved}"
+        ),
+        static_s=static.total_time,
+        reactive_s=reactive.total_time,
+        reactive_replans=reactive.n_replans,
+        edges_moved=reactive.edges_moved,
+        churn_usd=fiber_move_cost(reactive.edges_moved),
+        n_failures=reactive.n_failures,
+        job_times_static=static.job_times,
+        job_times_reactive=reactive.job_times,
+        iter_times_static=static.iter_times,
+        iter_times_reactive=reactive.iter_times,
+    ))
+
+    # -- fairness: unit weights vs weight=2 on the DLRM tenant --------------
+    # Contention is what makes weights matter: a static (never-replan)
+    # operator admits the MoE job onto the incumbent fabric (its traffic
+    # rides shared reroute paths) and loses a DLRM fiber (reroutes cross
+    # other tenants' links).
+    contention = (
+        TraceEvent(iteration=0, kind="arrive", job=MOE_16E,
+                   k=max(2, n - 2 * (n // 3)), name="moe"),
+        TraceEvent(iteration=1, kind="fail", link=(0, 2)),
+        TraceEvent(iteration=1, kind="fail", link=(1, 3)),
+    )
+    t0 = time.perf_counter()
+    flat_plan = co_optimize_jobset(_jobset(n), hw, rounds=rounds,
+                                   mcmc_iters=iters, seed=1)
+    unweighted = run_online_jobset(
+        _jobset(n), hw, policy=ReoptPolicy.never(), trace=contention,
+        n_iters=max(2, n_iters // 2), seed=0, plan=flat_plan)
+    weighted = run_online_jobset(
+        _jobset(n, dlrm_weight=2.0), hw, policy=ReoptPolicy.never(),
+        trace=contention, n_iters=max(2, n_iters // 2), seed=0,
+        plan=flat_plan)
+    us = (time.perf_counter() - t0) * 1e6
+    speedup = (
+        unweighted.job_times["dlrm"] / max(weighted.job_times["dlrm"], 1e-12)
+    )
+    rows.append(dict(
+        name="multitenant_weighted",
+        us_per_call=us,
+        derived=f"dlrm_unweighted/weighted={speedup:.3f}",
+        dlrm_unweighted_s=unweighted.job_times["dlrm"],
+        dlrm_weighted_s=weighted.job_times["dlrm"],
+        job_times_unweighted=unweighted.job_times,
+        job_times_weighted=weighted.job_times,
+    ))
+
+    _write_perf_record(rows, smoke=smoke)
+    return rows
+
+
+def _write_perf_record(rows: list[dict], smoke: bool) -> None:
+    """BENCH_multitenant.json: the headline numbers CI tracks over time."""
+    os.makedirs(os.path.dirname(PERF_RECORD), exist_ok=True)
+    churn = rows[0]
+    weighted = rows[1]
+    record = dict(
+        bench="multitenant",
+        smoke=smoke,
+        static_over_reactive=churn["static_s"] / churn["reactive_s"],
+        reactive_replans=churn["reactive_replans"],
+        edges_moved=churn["edges_moved"],
+        churn_usd=churn["churn_usd"],
+        dlrm_weighted_speedup=(
+            weighted["dlrm_unweighted_s"]
+            / max(weighted["dlrm_weighted_s"], 1e-12)
+        ),
+        wall_us=churn["us_per_call"] + weighted["us_per_call"],
+    )
+    with open(PERF_RECORD, "w") as f:
+        json.dump(record, f, indent=1)
+
+
+if __name__ == "__main__":
+    for row in run(smoke=True):
+        print(row["name"], row["derived"])

@@ -20,6 +20,7 @@ BENCHES = [
     ("shared", "Fig. 16 shared 432-server cluster"),
     ("reconfig", "Fig. 17 reconfiguration latency"),
     ("online", "Online re-optimization: static vs reactive replanning"),
+    ("multitenant", "Multi-tenant shared fabric: JobSet churn + fairness"),
     ("roofline", "Roofline dry-run terms"),
 ]
 
@@ -28,6 +29,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated bench names")
     ap.add_argument("--out", default="experiments/bench")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for CI (benches that support it)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -39,7 +42,15 @@ def main() -> None:
             continue
         try:
             mod = __import__(f"benchmarks.bench_{bench}", fromlist=["run"])
-            rows = mod.run()
+            import inspect
+
+            kwargs = (
+                {"smoke": True}
+                if args.smoke
+                and "smoke" in inspect.signature(mod.run).parameters
+                else {}
+            )
+            rows = mod.run(**kwargs)
             with open(os.path.join(args.out, f"{bench}.json"), "w") as f:
                 json.dump(rows, f, indent=1, default=str)
             for row in rows:

@@ -17,55 +17,78 @@
 - collectives / device_order: JAX-native multi-ring AllReduce + mesh ordering
 """
 
-from .alternating import CoOptResult, alternating_optimize, initial_topology
-from .demand import AllReduceGroup, TrafficDemand
+from .alternating import (
+    CoOptResult,
+    JobSetPlan,
+    alternating_optimize,
+    co_optimize_jobset,
+    initial_topology,
+)
+from .demand import AllReduceGroup, TrafficDemand, remap_demand, union_demand
 from .netsim import HardwareSpec, compute_time, iteration_time
 from .online import (
+    JobSetController,
     ReoptController,
     ReoptPolicy,
     TraceEvent,
+    edge_churn,
     place_arrival,
     run_online,
+    run_online_jobset,
 )
 from .routing import bandwidth_tax, coin_change_mod, path_length_stats
 from .select_perms import coin_change_diameter, select_permutations, theorem1_bound
-from .strategy_search import Strategy, mcmc_search
+from .simengine import DeadlineFairness, FairnessPolicy, WeightedFairness
+from .strategy_search import Strategy, mcmc_search, mcmc_search_jobset
 from .topology_finder import Topology, remove_pair, repair_topology, topology_finder
 from .totient import RingPermutation, coprimes, prime_coprimes, ring_edges, totient_perms
-from .workloads import PAPER_JOBS, JobSpec, job_demand
+from .workloads import PAPER_JOBS, JobSet, JobSpec, TenantJob, job_demand
 
 __all__ = [
     "AllReduceGroup",
     "CoOptResult",
+    "DeadlineFairness",
+    "FairnessPolicy",
     "HardwareSpec",
+    "JobSet",
+    "JobSetController",
+    "JobSetPlan",
     "JobSpec",
     "PAPER_JOBS",
     "ReoptController",
     "ReoptPolicy",
     "RingPermutation",
     "Strategy",
+    "TenantJob",
     "Topology",
     "TraceEvent",
     "TrafficDemand",
+    "WeightedFairness",
     "alternating_optimize",
     "bandwidth_tax",
+    "co_optimize_jobset",
     "coin_change_diameter",
     "coin_change_mod",
     "compute_time",
     "coprimes",
+    "edge_churn",
     "initial_topology",
     "iteration_time",
     "job_demand",
     "mcmc_search",
+    "mcmc_search_jobset",
     "path_length_stats",
     "place_arrival",
     "prime_coprimes",
+    "remap_demand",
     "remove_pair",
     "repair_topology",
     "ring_edges",
     "run_online",
+    "run_online_jobset",
     "select_permutations",
     "theorem1_bound",
     "topology_finder",
     "totient_perms",
+    "union_demand",
 ]

@@ -36,9 +36,17 @@ from dataclasses import dataclass, field
 from .demand import TrafficDemand
 from .netsim import HardwareSpec, compute_time, iteration_time, topoopt_comm_time
 from .simengine import SimEngine
-from .strategy_search import SearchResult, Strategy, mcmc_search
+from .strategy_search import (
+    JobSetSearchResult,
+    SearchResult,
+    Strategy,
+    default_strategy,
+    evaluate_jobset,
+    mcmc_search,
+    mcmc_search_jobset,
+)
 from .topology_finder import Topology, topology_finder
-from .workloads import JobSpec
+from .workloads import JobSet, JobSpec
 
 
 @dataclass
@@ -48,6 +56,26 @@ class CoOptResult:
     iter_time: float
     demand: TrafficDemand
     rounds: list[float] = field(default_factory=list)
+
+
+@dataclass
+class JobSetPlan:
+    """A shared-cluster plan: one strategy per tenant + one shared topology.
+
+    Duck-compatible with :class:`CoOptResult` where the online layer needs it
+    (``topology`` / ``demand`` / ``iter_time``; ``strategy`` is the
+    per-tenant dict)."""
+
+    strategies: dict[str, Strategy]
+    topology: Topology
+    iter_time: float  # weighted mean of per-job iteration times
+    demand: TrafficDemand  # union demand, cluster index space
+    per_job: dict[str, float] = field(default_factory=dict)
+    rounds: list[float] = field(default_factory=list)
+
+    @property
+    def strategy(self) -> dict[str, Strategy]:
+        return self.strategies
 
 
 def initial_topology(
@@ -143,6 +171,85 @@ def alternating_optimize(
             break
         topo = new_topo
         strategy_init = res.strategy
+
+    assert best is not None
+    best.rounds = round_times
+    return best
+
+
+def co_optimize_jobset(
+    jobset: JobSet,
+    hw: HardwareSpec,
+    rounds: int = 4,
+    mcmc_iters: int = 150,
+    overlap: float = 0.0,
+    seed: int = 0,
+    rel_tol: float = 1e-3,
+    warm_topology: Topology | None = None,
+    warm_strategies: dict[str, Strategy] | None = None,
+    forbidden: tuple[tuple[int, int], ...] = (),
+) -> JobSetPlan:
+    """Multi-tenant alternating optimization: co-optimize every resident
+    job's parallelization strategy against one *shared* topology.
+
+    The same two-plane loop as :func:`alternating_optimize`, lifted to a
+    :class:`~repro.core.workloads.JobSet`: the Comp x Comm plane proposes
+    per-job moves (:func:`~repro.core.strategy_search.mcmc_search_jobset`,
+    weighted-mean objective), and the Comm x Topo plane rebuilds one shared
+    topology from the *union* demand with per-node degree packing
+    (``topology_finder(pack="per_node")``) — per-job ring budgets land only
+    on each job's own servers, per-job MP pairs stay pinned to their
+    placements, and idle servers keep a connectivity ring for future
+    arrivals.  ``warm_topology`` / ``warm_strategies`` / ``forbidden``
+    mirror the single-job warm-start contract for online re-optimization.
+    """
+    if not jobset.tenants:
+        raise ValueError("co_optimize_jobset needs at least one tenant")
+    warm = warm_topology is not None
+
+    init: dict[str, Strategy] = {
+        t.label: (warm_strategies or {}).get(t.label) or default_strategy(t.spec)
+        for t in jobset.tenants
+    }
+    topo = (
+        warm_topology
+        if warm
+        else topology_finder(
+            jobset.union_for(init), hw.degree, forbidden=forbidden,
+            pack="per_node",
+        )
+    )
+    best: JobSetPlan | None = None
+    round_times: list[float] = []
+    strategy_init = init
+
+    for r in range(rounds):
+        res: JobSetSearchResult = mcmc_search_jobset(
+            jobset, topo, hw, iters=mcmc_iters, overlap=overlap,
+            seed=seed + r, init=strategy_init,
+        )
+        new_topo = topology_finder(
+            res.demand, hw.degree, forbidden=forbidden,
+            warm_start=topo if warm else None, pack="per_node",
+        )
+        t_new, union, per_job = evaluate_jobset(
+            res.strategies, jobset, new_topo, hw, overlap
+        )
+        round_times.append(t_new)
+
+        if best is None or t_new < best.iter_time:
+            best = JobSetPlan(
+                strategies=dict(res.strategies), topology=new_topo,
+                iter_time=t_new, demand=union, per_job=per_job,
+                rounds=round_times,
+            )
+        if len(round_times) >= 2 and (
+            abs(round_times[-2] - round_times[-1])
+            <= rel_tol * max(round_times[-2], 1e-12)
+        ):
+            break
+        topo = new_topo
+        strategy_init = res.strategies
 
     assert best is not None
     best.rounds = round_times

@@ -23,6 +23,23 @@ OCS_PORT = 520.0
 SWITCH_1X2 = 25.0
 EXPECTED_FIBER = 0.3 * 500.0  # $/m * E[U(0,1000)]
 
+# -- Churn pricing (online re-optimization) ---------------------------------
+# A replan does not pay a flat reconfiguration fee: the patch panel moves
+# each *changed* fiber individually.  Robotic patch panels need seconds per
+# move (scheduler.PATCH_PANEL_RECONFIG_S ~ 120 s for a full n*d ~ 64-fiber
+# rebuild); an OCS-backed fabric amortizes its RECONFIG_LATENCY (10 ms)
+# across a typical 16-circuit swing.
+FIBER_MOVE_S = 2.0  # robotic patch panel, seconds per moved fiber
+OCS_FIBER_MOVE_S = 10e-3 / 16  # OCS port retarget, seconds per moved fiber
+FIBER_MOVE_WEAR = 0.01  # fraction of port+fiber capex consumed per re-patch
+
+
+def fiber_move_cost(edges_moved: int) -> float:
+    """Operational cost (USD) of re-patching ``edges_moved`` fibers: each
+    move touches two patch-panel ports and wears the fiber/connectors by
+    ``FIBER_MOVE_WEAR`` of their capex."""
+    return edges_moved * FIBER_MOVE_WEAR * (2 * PATCH_PANEL_PORT + EXPECTED_FIBER)
+
 
 def _table2(link_gbps: float) -> dict:
     key = link_gbps * 1e9

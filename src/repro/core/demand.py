@@ -10,6 +10,13 @@ A parallelization strategy + device placement induces two demand kinds:
   embedding broadcast/incast, PP stage edges).  *Immutable* node pairs.
 
 Units: bytes per training iteration.
+
+Multi-tenant clusters (§6 shared-cluster deployment) aggregate several
+jobs' demands on one fabric: :func:`remap_demand` embeds a job-local demand
+into cluster index space under a placement, and :func:`union_demand` sums
+the embedded demands into one cluster-level :class:`TrafficDemand` (the
+union the shared TopologyFinder packs).  The :class:`repro.core.workloads.JobSet`
+abstraction drives both.
 """
 
 from __future__ import annotations
@@ -76,6 +83,76 @@ class TrafficDemand:
         for i in srcs:
             if i != dst:
                 self.mp[i, dst] += nbytes
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant aggregation: placement remap + union demand
+# ---------------------------------------------------------------------------
+
+
+def remap_demand(
+    demand: TrafficDemand, servers: Sequence[int], n_cluster: int
+) -> TrafficDemand:
+    """Embed a job-local demand into cluster index space.
+
+    ``servers[i]`` is the cluster node hosting the job's local node ``i``;
+    AllReduce group members are relabelled and the MP matrix lands on the
+    ``servers x servers`` block.  Mutability is preserved: the relabelled
+    groups stay ring-permutable, the relabelled MP pairs stay pinned.
+    """
+    servers = tuple(int(s) for s in servers)
+    if len(servers) != demand.n:
+        raise ValueError(
+            f"placement has {len(servers)} servers for a demand on {demand.n}"
+        )
+    if len(set(servers)) != len(servers):
+        raise ValueError(f"placement {servers!r} repeats a server")
+    if servers and not (0 <= min(servers) and max(servers) < n_cluster):
+        raise ValueError(f"placement {servers!r} outside cluster of {n_cluster}")
+    out = TrafficDemand(n=n_cluster)
+    for g in demand.allreduce:
+        out.allreduce.append(
+            AllReduceGroup(
+                members=tuple(servers[m] for m in g.members), nbytes=g.nbytes
+            )
+        )
+    if servers:
+        idx = np.asarray(servers, dtype=np.int64)
+        out.mp[np.ix_(idx, idx)] += demand.mp
+    return out
+
+
+def union_demand(
+    parts: Iterable[TrafficDemand], n: int | None = None
+) -> TrafficDemand:
+    """Sum cluster-level demands into one (MP matrices add; AllReduce groups
+    concatenate, merging groups with identical member tuples).
+
+    The union preserves totals exactly: ``sum_mp`` and ``sum_allreduce`` of
+    the result equal the sums over ``parts`` — the invariant
+    ``tests/test_multitenant.py`` pins.
+    """
+    parts = list(parts)
+    if n is None:
+        if not parts:
+            raise ValueError("union_demand needs parts or an explicit n")
+        n = parts[0].n
+    out = TrafficDemand(n=n)
+    merged: dict[tuple[int, ...], float] = {}
+    order: list[tuple[int, ...]] = []
+    for p in parts:
+        if p.n != n:
+            raise ValueError(f"demand on {p.n} nodes in a union over {n}")
+        out.mp += p.mp
+        for g in p.allreduce:
+            if g.members not in merged:
+                order.append(g.members)
+                merged[g.members] = 0.0
+            merged[g.members] += g.nbytes
+    out.allreduce = [
+        AllReduceGroup(members=m, nbytes=merged[m]) for m in order
+    ]
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -29,40 +29,73 @@ stragglers — so this module closes the loop:
 * :func:`place_arrival` — topology-aware placement of newly arriving jobs:
   pick the free servers with the most surviving pairwise capacity instead of
   the lowest ids.
+
+Multi-tenant shared fabrics (ROADMAP "extend to multi-job shared fabrics"):
+:class:`JobSetController` holds the resident
+:class:`~repro.core.workloads.JobSet` instead of a single job — it
+re-optimizes the *union* demand via
+:func:`~repro.core.alternating.co_optimize_jobset` on arrival / departure /
+failure, admits arrivals through :func:`place_arrival`, and probes with
+per-tenant flow graphs under the set's weighted fairness.
+:func:`run_online_jobset` drives a churn trace (jobs arriving, departing,
+fibers dying) against it; ``benchmarks/bench_multitenant.py`` compares
+static vs reactive shared plans.
 """
 
 from __future__ import annotations
 
+from collections import Counter
 from dataclasses import dataclass, field
 
 import numpy as np
 
-from .alternating import CoOptResult, alternating_optimize
+from .alternating import (
+    CoOptResult,
+    JobSetPlan,
+    alternating_optimize,
+    co_optimize_jobset,
+)
+from .demand import remap_demand
 from .netsim import HardwareSpec, compute_time
 from .ocs_reconfig import RECONFIG_LATENCY
 from .simengine import (
     EngineView,
+    FairnessPolicy,
     LinkFailure,
     PlanUpdate,
     Scenario,
     ScenarioObserver,
     SimEngine,
     SimJob,
+    WeightedFairness,
     iteration_tasks,
     links_from_topology,
 )
-from .strategy_search import Strategy
+from .strategy_search import Strategy, default_strategy
 from .topology_finder import Topology, remove_pair
-from .workloads import JobSpec
+from .workloads import JobSet, JobSpec, TenantJob
 
 __all__ = [
     "ReoptPolicy",
     "ReoptController",
+    "JobSetController",
     "TraceEvent",
     "OnlineRunResult",
+    "JobSetRunResult",
     "run_online",
+    "run_online_jobset",
     "place_arrival",
+    "edge_churn",
 ]
+
+
+def edge_churn(old: Topology, new: Topology) -> int:
+    """Fibers the patch panel must re-seat to turn ``old`` into ``new``:
+    the directed-edge multiset difference (each graph edge is one physical
+    port-to-port fiber; edges present in both plans stay patched)."""
+    c_old = Counter(old.graph.edges())
+    c_new = Counter(new.graph.edges())
+    return int(sum((c_new - c_old).values()))
 
 
 @dataclass(frozen=True)
@@ -85,6 +118,29 @@ class ReoptPolicy:
     one are suppressed (failed triggers leave the static repair in place).
     Every applied replan charges ``replan_latency`` seconds of OCS-style
     traffic pause.
+
+    Churn-proportional cost (``fiber_move_latency``): real patch panels
+    charge per *moved fiber*, not a flat fee.  When set, an adopted replan's
+    pause is ``fiber_move_latency * edges_moved`` (the directed-edge diff
+    between incumbent and replanned topology, :func:`edge_churn`) and a
+    replan that keeps the incumbent pauses nothing; ``None`` keeps the flat
+    ``replan_latency`` (the pre-churn behaviour).  Constants to plug in live
+    in :mod:`repro.core.costmodel` (``FIBER_MOVE_S``, ``OCS_FIBER_MOVE_S``).
+
+    Adaptive hysteresis (``adaptive``): a triggered replan is *skipped* —
+    no pause, no fabric change — when the probed marginal win over the
+    degraded incumbent, amortized over ``payback_horizon`` iterations, is
+    below its (churn-proportional) pause cost; each skip doubles the
+    controller's effective ``min_interval`` (reset on the next adopted
+    replan), so hopeless replanning backs off instead of burning pauses.
+
+    ``probe_slack`` tunes the incremental degradation probe: after a full
+    one-iteration flow probe the controller caches the estimate together
+    with the link set whose planned utilization exceeds ``probe_slack`` x
+    the bottleneck; later probes reuse the cached estimate until a failure
+    touches that hot set (or the demand changes).  ``0.0`` = every loaded
+    link is hot (reuse only across failures of unloaded pairs);
+    ``~0.95`` = only near-bottleneck links invalidate.
     """
 
     on_failure: bool = True
@@ -95,6 +151,13 @@ class ReoptPolicy:
     degradation_threshold: float | None = None
     min_interval: float = 0.0
     replan_latency: float = RECONFIG_LATENCY
+    # Churn-proportional replan cost: seconds per moved fiber (None = flat).
+    fiber_move_latency: float | None = None
+    # Benefit-vs-cost replan gate + min_interval backoff.
+    adaptive: bool = False
+    payback_horizon: float = 8.0  # iterations a replan must amortize over
+    # Incremental probe: bottleneck-set utilization threshold in [0, 1).
+    probe_slack: float = 0.0
     # Warm-started optimizer budget per replan (smaller than offline: the
     # incumbent is already good, we only adapt it).
     rounds: int = 2
@@ -144,6 +207,7 @@ class ReplanRecord:
     replanned: bool
     est_before: float = float("nan")  # incumbent (repaired) iteration time
     est_after: float = float("nan")  # adopted plan's iteration time
+    edges_moved: int = 0  # physical fiber churn of the adopted swap
 
 
 class ReoptController(ScenarioObserver):
@@ -171,7 +235,7 @@ class ReoptController(ScenarioObserver):
 
     def __init__(
         self,
-        job: JobSpec,
+        job: JobSpec | None,
         n: int,
         hw: HardwareSpec | None = None,
         policy: ReoptPolicy | None = None,
@@ -185,12 +249,24 @@ class ReoptController(ScenarioObserver):
         self.seed = seed
         self.dead: set[tuple[int, int]] = set()
         self.n_replans = 0
+        self.total_edges_moved = 0
+        # Pause of the most recent *applied* PlanUpdate (drivers charge the
+        # tail of a pause that hangs past the last task finish).
+        self.last_pause = 0.0
         self.last_replan = -np.inf
         self.log: list[ReplanRecord] = []
         self._plan: CoOptResult | None = plan
         self._topology: Topology | None = plan.topology if plan else None
         self._baseline: float | None = None
         self._probe_engine: SimEngine | None = None
+        # Incremental degradation probe: (estimate, hot undirected pairs)
+        # from the last full flow probe of the incumbent; reused until a
+        # failure touches the hot set or the demand changes.
+        self._probe_cache: tuple[float, frozenset] | None = None
+        self.n_full_probes = 0
+        # Adaptive hysteresis: effective min_interval, doubled per skipped
+        # (benefit < cost) replan, reset on adoption.
+        self._adaptive_interval = self.policy.min_interval
         # Hook clock = engine-local time + clock_offset.  Drivers that run a
         # sequence of scenarios (run_online: one per training iteration) set
         # the offset so hysteresis spans scenario boundaries.
@@ -205,17 +281,33 @@ class ReoptController(ScenarioObserver):
 
     # -- incumbent plan ------------------------------------------------------
 
-    def ensure_plan(self) -> CoOptResult:
-        """Cold-start the offline optimizer once, lazily (a controller whose
-        policy never fires should cost nothing)."""
-        if self._plan is None:
-            self._plan = alternating_optimize(
+    def _run_optimizer(self, warm: bool) -> CoOptResult:
+        """One optimizer run against the current resident workload.
+        Subclasses (:class:`JobSetController`) override this to optimize
+        their own notion of "the resident job"."""
+        if not warm:
+            return alternating_optimize(
                 self.job, self.n, self.hw,
                 rounds=max(self.policy.rounds, 2),
                 mcmc_iters=max(self.policy.mcmc_iters, 40),
                 seed=self.seed,
                 forbidden=tuple(self.dead),
             )
+        return alternating_optimize(
+            self.job, self.n, self.hw,
+            rounds=self.policy.rounds,
+            mcmc_iters=self.policy.mcmc_iters,
+            seed=self.seed + 1 + self.n_replans,
+            warm_topology=self.topology,
+            warm_strategy=self.strategy,
+            forbidden=tuple(self.dead),
+        )
+
+    def ensure_plan(self) -> CoOptResult:
+        """Cold-start the offline optimizer once, lazily (a controller whose
+        policy never fires should cost nothing)."""
+        if self._plan is None:
+            self._plan = self._run_optimizer(warm=False)
             self._topology = self._plan.topology
         return self._plan
 
@@ -262,10 +354,62 @@ class ReoptController(ScenarioObserver):
                 del caps[(a, b)]
         return caps
 
+    def _probe_jobs(self, topo: Topology, strategy) -> list[SimJob]:
+        """The one-iteration flow graph(s) the probe simulates; subclasses
+        build one SimJob per tenant."""
+        demand = strategy.demand(self.job, self.n)
+        comp = compute_time(
+            self.job.flops_per_sample * self.job.batch_per_gpu * self.n,
+            self.n, self.hw,
+        )
+        return [SimJob("probe", iteration_tasks(topo, demand,
+                                                compute_duration=comp))]
+
+    def _probe_fairness(self) -> FairnessPolicy | None:
+        return None
+
+    def _probe_metric(self, res) -> float:
+        """Scalar the probe optimizes for; subclasses weight per-job times."""
+        return res.makespan
+
+    def _hot_pairs(
+        self, jobs: list[SimJob], links: dict[tuple[int, int], float]
+    ) -> frozenset | None:
+        """Undirected pairs whose planned utilization exceeds
+        ``probe_slack`` x the bottleneck; failures outside this set cannot
+        move the cached estimate.  Returns ``None`` — *every* failure
+        invalidates — when any planned hop has no live link: the engine
+        detours such flows over links the plan never names, so the hot set
+        cannot be known from the plan alone."""
+        loads: dict[tuple[int, int], float] = {}
+        for j in jobs:
+            for t in j.tasks:
+                if t.kind != "flow":
+                    continue
+                for hop in zip(t.route[:-1], t.route[1:]):
+                    loads[hop] = loads.get(hop, 0.0) + t.nbytes
+        util: dict[tuple[int, int], float] = {}
+        finite_max = 0.0
+        for link, nbytes in loads.items():
+            cap = links.get(link)
+            if cap:
+                util[link] = nbytes / cap
+                finite_max = max(finite_max, util[link])
+            elif nbytes > 0:
+                return None  # detour-routed flow: hot set unknowable
+        if not util:
+            return frozenset()
+        thresh = self.policy.probe_slack * finite_max
+        return frozenset(
+            (min(a, b), max(a, b))
+            for (a, b), u in util.items()
+            if u > thresh
+        )
+
     def estimated_iter_time(
         self,
         topo: Topology | None = None,
-        strategy: Strategy | None = None,
+        strategy=None,
     ) -> float:
         """One-iteration simulated makespan of ``strategy`` on ``topo``
         restricted to the surviving fabric (defaults: the incumbent).
@@ -273,28 +417,36 @@ class ReoptController(ScenarioObserver):
         A flow-level probe rather than the fluid formula: the fluid model
         charges AllReduce rings by the *planned* ring edges, so it cannot see
         a dead ring link; the scenario engine re-routes those flows over the
-        survivors and prices the resulting contention."""
+        survivors and prices the resulting contention.
+
+        Incumbent probes (both arguments defaulted) are cached together with
+        the hot link set (:meth:`_hot_pairs`): failures that do not touch a
+        hot link, and checks with no intervening change, reuse the cached
+        estimate instead of re-simulating — the incremental probe that keeps
+        shared multi-job scenarios cheap."""
+        incumbent = topo is None and strategy is None
+        if incumbent and self._probe_cache is not None:
+            return self._probe_cache[0]
         topo = topo if topo is not None else self.topology
         strategy = strategy if strategy is not None else self.strategy
-        demand = strategy.demand(self.job, self.n)
-        comp = compute_time(
-            self.job.flops_per_sample * self.job.batch_per_gpu * self.n,
-            self.n, self.hw,
-        )
-        tasks = iteration_tasks(topo, demand, compute_duration=comp)
+        jobs = self._probe_jobs(topo, strategy)
+        links = self._links_for(topo)
         if self._probe_engine is None:
             self._probe_engine = SimEngine(self.hw)
         sc = Scenario(
-            links=self._links_for(topo),
-            jobs=[SimJob("probe", tasks)],
-            n=self.n,
+            links=links, jobs=jobs, n=self.n, fairness=self._probe_fairness()
         )
         res = self._probe_engine.run(sc)
+        self.n_full_probes += 1
         if res.stalled:
             # Unroutable demand stall-finishes instantly in the engine; a
             # disconnected fabric must probe as unusable, not as fast.
-            return np.inf
-        return res.makespan
+            est = float(np.inf)
+        else:
+            est = float(self._probe_metric(res))
+        if incumbent:
+            self._probe_cache = (est, self._hot_pairs(jobs, links))
+        return est
 
     # -- mutations -----------------------------------------------------------
 
@@ -303,11 +455,24 @@ class ReoptController(ScenarioObserver):
         tables, a different model).  Returns the pause charged (seconds) if
         the arrival trigger replanned."""
         self.job = job
+        self._probe_cache = None  # demand changed: cached estimate is stale
         if self.policy.on_arrival:
             update = self._maybe_replan(now, "arrival")
             if update is not None:
                 return update.pause
         return 0.0
+
+    def _note_dead(self, pair: tuple[int, int]) -> None:
+        """Record a dead pair and degrade the incumbent; the probe cache
+        survives only when the pair is outside the cached hot link set
+        (a ``None`` hot set means any failure invalidates)."""
+        if self._probe_cache is not None and (
+            self._probe_cache[1] is None or pair in self._probe_cache[1]
+        ):
+            self._probe_cache = None
+        self.dead.add(pair)
+        if self._topology is not None:
+            self._topology = remove_pair(self._topology, pair)
 
     def fail(self, link: tuple[int, int], now: float = 0.0) -> float:
         """A node pair dies.  Always records the pair and degrades the
@@ -316,56 +481,85 @@ class ReoptController(ScenarioObserver):
         pair = (min(link), max(link))
         if pair in self.dead:
             return 0.0
-        self.dead.add(pair)
-        if self._topology is not None:
-            self._topology = remove_pair(self._topology, pair)
+        self._note_dead(pair)
         if self.policy.on_failure:
             update = self._maybe_replan(now, "failure")
             if update is not None:
                 return update.pause
         return 0.0
 
-    def replan(self, now: float, trigger: str) -> PlanUpdate:
+    def _replan_pause(self, edges_moved: int) -> float:
+        """Churn-proportional pause when the policy prices per moved fiber,
+        the flat ``replan_latency`` otherwise."""
+        if self.policy.fiber_move_latency is not None:
+            return self.policy.fiber_move_latency * edges_moved
+        return self.policy.replan_latency
+
+    def replan(self, now: float, trigger: str) -> PlanUpdate | None:
         """Re-run the alternating optimizer warm-started from the incumbent,
         forbidding dead pairs; adopt whichever of {new plan, degraded
-        incumbent} probes faster.  Returns the PlanUpdate to apply."""
+        incumbent} probes faster.  Returns the PlanUpdate to apply — or
+        ``None`` when the adaptive gate skips (the probed win would not pay
+        for the churn-proportional pause)."""
         self.ensure_plan()
         est_before = self.estimated_iter_time()
-        res = alternating_optimize(
-            self.job, self.n, self.hw,
-            rounds=self.policy.rounds,
-            mcmc_iters=self.policy.mcmc_iters,
-            seed=self.seed + 1 + self.n_replans,
-            warm_topology=self.topology,
-            warm_strategy=self.strategy,
-            forbidden=tuple(self.dead),
-        )
+        res = self._run_optimizer(warm=True)
         est_new = self.estimated_iter_time(
             topo=res.topology, strategy=res.strategy
         )
-        if est_new <= est_before:
+        adopt = est_new <= est_before
+        edges_moved = edge_churn(self.topology, res.topology) if adopt else 0
+        pause = self._replan_pause(edges_moved)
+        if adopt and self.policy.adaptive:
+            benefit = (est_before - est_new) * self.policy.payback_horizon
+            if not np.isfinite(est_before):
+                benefit = np.inf if np.isfinite(est_new) else 0.0
+            if benefit < pause:
+                # Skip: the win doesn't pay for the fiber moves.  No pause,
+                # no fabric change; back off the effective min_interval so
+                # hopeless triggers stop re-running the optimizer.
+                self.last_replan = now
+                self._adaptive_interval = max(
+                    2 * self._adaptive_interval, pause, self.policy.min_interval
+                )
+                self.log.append(ReplanRecord(
+                    time=now, trigger=trigger, replanned=False,
+                    est_before=est_before, est_after=est_new,
+                ))
+                return None
+        if adopt:
             self._plan = res
             self._topology = res.topology
             self._baseline = est_new
+            self._probe_cache = None
+            self._adaptive_interval = self.policy.min_interval
         else:
             # The warm search couldn't beat the degraded incumbent — keep it
             # (still counts as a replan: the pause was spent deciding) and
             # re-baseline so the degradation trigger doesn't fire forever.
             self._baseline = est_before
         self.n_replans += 1
+        self.total_edges_moved += edges_moved
         self.last_replan = now
+        self.last_pause = pause
         self.log.append(ReplanRecord(
             time=now, trigger=trigger, replanned=True,
             est_before=est_before, est_after=min(est_new, est_before),
+            edges_moved=edges_moved,
         ))
         return PlanUpdate(
             links=self.links(),
-            pause=self.policy.replan_latency,
+            pause=pause,
             label=f"reopt:{trigger}",
+            edges_moved=edges_moved,
         )
 
     def _maybe_replan(self, now: float, trigger: str) -> PlanUpdate | None:
-        if now - self.last_replan < self.policy.min_interval:
+        gate = (
+            self._adaptive_interval if self.policy.adaptive
+            else self.policy.min_interval
+        )
+        if now - self.last_replan < gate:
             self.log.append(ReplanRecord(time=now, trigger=trigger,
                                          replanned=False))
             return None
@@ -383,9 +577,7 @@ class ReoptController(ScenarioObserver):
         pair = (min(link), max(link))
         if pair in self.dead:
             return None
-        self.dead.add(pair)
-        if self._topology is not None:
-            self._topology = remove_pair(self._topology, pair)
+        self._note_dead(pair)
         if not self.policy.on_failure:
             return None
         return self._maybe_replan(view.now + self.clock_offset, "failure")
@@ -419,6 +611,165 @@ class ReoptController(ScenarioObserver):
 
 
 # ---------------------------------------------------------------------------
+# Multi-tenant controller: the resident workload is a JobSet
+# ---------------------------------------------------------------------------
+
+
+class JobSetController(ReoptController):
+    """A :class:`ReoptController` whose resident workload is a whole
+    :class:`~repro.core.workloads.JobSet` sharing one fabric.
+
+    Replans re-optimize the *union* demand
+    (:func:`~repro.core.alternating.co_optimize_jobset`, warm-started from
+    the incumbent shared plan, dead pairs forbidden); probes simulate one
+    iteration of every tenant contending under the set's weighted fairness;
+    :meth:`admit` places arrivals on the surviving fabric via
+    :func:`place_arrival` and :meth:`depart` frees a tenant's servers — both
+    are load shifts the policy's arrival/departure triggers may answer with
+    a replan.  Tenants admitted without a replan ride the incumbent fabric:
+    their AllReduce bytes take a synthetic ring over their placement
+    (``iteration_tasks(synth_missing_rings=True)``) until the next replan
+    gives them real rings.
+    """
+
+    def __init__(
+        self,
+        jobset: JobSet,
+        hw: HardwareSpec | None = None,
+        policy: ReoptPolicy | None = None,
+        seed: int = 0,
+        plan: JobSetPlan | None = None,
+    ):
+        self.jobset = jobset
+        super().__init__(job=None, n=jobset.n, hw=hw, policy=policy,
+                         seed=seed, plan=plan)
+
+    # -- plan machinery ------------------------------------------------------
+
+    def _run_optimizer(self, warm: bool) -> JobSetPlan:
+        if not warm:
+            return co_optimize_jobset(
+                self.jobset, self.hw,
+                rounds=max(self.policy.rounds, 2),
+                mcmc_iters=max(self.policy.mcmc_iters, 40),
+                seed=self.seed,
+                forbidden=tuple(self.dead),
+            )
+        return co_optimize_jobset(
+            self.jobset, self.hw,
+            rounds=self.policy.rounds,
+            mcmc_iters=self.policy.mcmc_iters,
+            seed=self.seed + 1 + self.n_replans,
+            warm_topology=self.topology,
+            warm_strategies=self.strategies(),
+            forbidden=tuple(self.dead),
+        )
+
+    def _maybe_replan(self, now: float, trigger: str) -> PlanUpdate | None:
+        if not self.jobset.tenants:
+            return None  # nothing to optimize for (e.g. failure after the
+            # last tenant departed); keep the incumbent fabric as-is.
+        return super()._maybe_replan(now, trigger)
+
+    def strategies(self) -> dict[str, Strategy]:
+        """Per-tenant strategies of the incumbent plan, with cold defaults
+        for tenants admitted after it was computed."""
+        planned = dict(self.plan.strategies)
+        return {
+            t.label: planned.get(t.label) or default_strategy(t.spec)
+            for t in self.jobset.tenants
+        }
+
+    @property
+    def demand(self):
+        """Cluster-level union demand of the resident set under the
+        incumbent (default-extended) strategies."""
+        return self.jobset.union_for(self.strategies())
+
+    # -- probes --------------------------------------------------------------
+
+    def _probe_jobs(self, topo: Topology, strategy) -> list[SimJob]:
+        strategies = dict(strategy) if strategy else {}
+        for t in self.jobset.tenants:
+            strategies.setdefault(t.label, default_strategy(t.spec))
+        jobs = []
+        for t in self.jobset.tenants:
+            dem = remap_demand(
+                strategies[t.label].demand(t.spec, t.k), t.servers, self.n
+            )
+            comp = compute_time(t.flops_per_iteration, t.k, self.hw)
+            jobs.append(SimJob(t.label, iteration_tasks(
+                topo, dem, compute_duration=comp, synth_missing_rings=True,
+            )))
+        return jobs
+
+    def _probe_fairness(self) -> FairnessPolicy | None:
+        return self.fairness()
+
+    def _probe_metric(self, res) -> float:
+        """Weighted mean of per-job one-iteration makespans."""
+        total = self.jobset.total_weight
+        return sum(
+            t.weight * res.job_makespans.get(t.label, 0.0)
+            for t in self.jobset.tenants
+        ) / total
+
+    def iteration_jobs(self) -> list[SimJob]:
+        """One SimJob per resident tenant (flows + compute) for the current
+        plan — what :func:`run_online_jobset` feeds the engine each
+        iteration."""
+        return self._probe_jobs(self.topology, self.strategies())
+
+    def fairness(self) -> WeightedFairness:
+        return WeightedFairness(self.jobset.weights())
+
+    # -- admission / departure ----------------------------------------------
+
+    def admit(
+        self,
+        spec: JobSpec,
+        k: int,
+        weight: float = 1.0,
+        name: str | None = None,
+        now: float = 0.0,
+    ) -> tuple[tuple[int, ...], float]:
+        """Admit an arriving job: place it on the ``k`` free servers with
+        the most surviving capacity (:func:`place_arrival`), then let the
+        arrival trigger replan the shared fabric.  Returns
+        ``(servers, pause_seconds)``."""
+        if k < 1:
+            raise ValueError(f"admit needs k >= 1 servers, got {k}")
+        label = name or spec.name
+        servers = place_arrival(k, self.jobset.free_servers(), self.links())
+        self.jobset = self.jobset.with_tenant(
+            TenantJob(spec=spec, servers=servers, weight=weight, name=label)
+        )
+        self._probe_cache = None
+        pause = 0.0
+        if self.policy.on_arrival:
+            update = self._maybe_replan(now, "arrival")
+            if update is not None:
+                pause = update.pause
+        return servers, pause
+
+    def depart(self, label: str, now: float = 0.0) -> float:
+        """A tenant finishes: free its servers; the departure trigger may
+        compact the shared fabric.  Returns the pause charged (seconds)."""
+        self.jobset = self.jobset.without(label)
+        self._probe_cache = None
+        if self.policy.on_departure:
+            update = self._maybe_replan(now, "departure")
+            if update is not None:
+                return update.pause
+        return 0.0
+
+    def set_job(self, job: JobSpec, now: float = 0.0) -> float:
+        raise TypeError(
+            "JobSetController has no single resident job; use admit/depart"
+        )
+
+
+# ---------------------------------------------------------------------------
 # Iteration-granularity driver: static plan vs reactive replanning
 # ---------------------------------------------------------------------------
 
@@ -431,13 +782,21 @@ class TraceEvent:
     ``iteration`` starts (``frac=0``) or ``frac`` of the way through it.
     ``kind="load"``: the resident job's spec becomes ``job`` (a load shift —
     bigger batch, more tables, a different model) at that iteration boundary.
+
+    Multi-tenant traces (:func:`run_online_jobset`) additionally use
+    ``kind="arrive"`` — job ``job`` joins on ``k`` servers with fairness
+    ``weight`` under label ``name`` (placed by :func:`place_arrival`) — and
+    ``kind="depart"`` — tenant ``name`` finishes and frees its servers.
     """
 
     iteration: int
-    kind: str  # "fail" | "load"
+    kind: str  # "fail" | "load" | "arrive" | "depart"
     link: tuple[int, int] | None = None
     frac: float = 0.0
     job: JobSpec | None = None
+    k: int = 0
+    weight: float = 1.0
+    name: str | None = None
 
 
 @dataclass
@@ -446,6 +805,7 @@ class OnlineRunResult:
     iter_times: list[float] = field(default_factory=list)
     n_replans: int = 0
     n_failures: int = 0
+    edges_moved: int = 0
     log: list[ReplanRecord] = field(default_factory=list)
     final_plan: CoOptResult | None = None
 
@@ -532,10 +892,7 @@ def run_online(
             # A replan near the end of the iteration can leave part of its
             # pause hanging past the last task finish; charge the overhang
             # so reactive policies don't get the tail of the pause free.
-            overhang = (
-                res.replan_times[-1] + ctrl.policy.replan_latency
-                - res.makespan
-            )
+            overhang = res.replan_times[-1] + ctrl.last_pause - res.makespan
             if overhang > 0:
                 iter_time += overhang
         total += iter_time
@@ -543,8 +900,126 @@ def run_online(
 
     result.total_time = total
     result.n_replans = ctrl.n_replans
+    result.edges_moved = ctrl.total_edges_moved
     result.log = ctrl.log
     result.final_plan = ctrl.plan
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant driver: a churn trace against a shared fabric
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class JobSetRunResult:
+    total_time: float
+    iter_times: list[float] = field(default_factory=list)
+    # Tenant -> sum of its per-iteration makespans while resident.
+    job_times: dict[str, float] = field(default_factory=dict)
+    n_replans: int = 0
+    n_failures: int = 0
+    edges_moved: int = 0
+    log: list[ReplanRecord] = field(default_factory=list)
+    final_plan: JobSetPlan | None = None
+    final_jobset: JobSet | None = None
+
+
+def run_online_jobset(
+    jobset: JobSet,
+    hw: HardwareSpec | None = None,
+    policy: ReoptPolicy | None = None,
+    trace: tuple[TraceEvent, ...] = (),
+    n_iters: int = 8,
+    seed: int = 0,
+    plan: JobSetPlan | None = None,
+    engine: SimEngine | None = None,
+) -> JobSetRunResult:
+    """Simulate ``n_iters`` training iterations of a *shared* cluster under
+    a churn trace: jobs arriving (placed via :func:`place_arrival`) and
+    departing, fibers dying at or inside iteration boundaries.
+
+    Each iteration regenerates one SimJob per resident tenant from the
+    controller's current shared plan and runs them through
+    :meth:`SimEngine.run` contending under the set's weighted fairness, with
+    the :class:`JobSetController` attached as observer.  Pass
+    ``policy=ReoptPolicy.never()`` for the static shared baseline and share
+    ``plan`` so both operators start from the same offline optimum.
+    """
+    hw = hw or HardwareSpec()
+    ctrl = JobSetController(jobset, hw=hw, policy=policy, seed=seed, plan=plan)
+    ctrl.ensure_plan()
+    if ctrl.policy.degradation_threshold is not None:
+        ctrl.baseline  # pin the healthy-fabric baseline before disruptions
+    ctrl.suppress_job_hooks = True
+    eng = engine or SimEngine(hw)
+
+    by_iter: dict[int, list[TraceEvent]] = {}
+    for ev in trace:
+        by_iter.setdefault(ev.iteration, []).append(ev)
+
+    total = 0.0
+    result = JobSetRunResult(total_time=0.0)
+    for it in range(n_iters):
+        mid_iter: list[TraceEvent] = []
+        for ev in by_iter.get(it, ()):
+            if ev.kind == "arrive" and ev.job is not None:
+                _, pause = ctrl.admit(
+                    ev.job, ev.k, weight=ev.weight, name=ev.name, now=total,
+                )
+                total += pause
+            elif ev.kind == "depart" and ev.name:
+                total += ctrl.depart(ev.name, now=total)
+            elif ev.kind == "fail" and ev.link is not None:
+                if ev.frac <= 0.0:
+                    total += ctrl.fail(ev.link, now=total)
+                    result.n_failures += 1
+                else:
+                    mid_iter.append(ev)
+
+        if not ctrl.jobset.tenants:
+            # No resident work: the iteration is instantaneous, but queued
+            # mid-iteration failures still land on the fabric.
+            for ev in mid_iter:
+                total += ctrl.fail(ev.link, now=total)
+                result.n_failures += 1
+            result.iter_times.append(0.0)
+            continue
+        jobs = ctrl.iteration_jobs()
+        failures = []
+        if mid_iter:
+            est = ctrl.estimated_iter_time()
+            if not np.isfinite(est):
+                est = result.iter_times[-1] if result.iter_times else 0.0
+            est = max(est, 1e-12)
+            for ev in mid_iter:
+                failures.append(LinkFailure(time=ev.frac * est, link=ev.link))
+                result.n_failures += 1
+        sc = Scenario(
+            links=ctrl.links(),
+            jobs=jobs,
+            failures=tuple(sorted(failures, key=lambda f: f.time)),
+            n=jobset.n,
+            fairness=ctrl.fairness(),
+        )
+        ctrl.clock_offset = total
+        res = eng.run(sc, observer=ctrl)
+        iter_time = res.makespan
+        if res.replan_times:
+            overhang = res.replan_times[-1] + ctrl.last_pause - res.makespan
+            if overhang > 0:
+                iter_time += overhang
+        total += iter_time
+        result.iter_times.append(iter_time)
+        for name, ms in res.job_makespans.items():
+            result.job_times[name] = result.job_times.get(name, 0.0) + ms
+
+    result.total_time = total
+    result.n_replans = ctrl.n_replans
+    result.edges_moved = ctrl.total_edges_moved
+    result.log = ctrl.log
+    result.final_plan = ctrl.plan
+    result.final_jobset = ctrl.jobset
     return result
 
 

@@ -52,6 +52,9 @@ __all__ = [
     "SimJob",
     "LinkFailure",
     "OCSPolicy",
+    "FairnessPolicy",
+    "WeightedFairness",
+    "DeadlineFairness",
     "PlanUpdate",
     "EngineView",
     "ScenarioObserver",
@@ -143,7 +146,7 @@ class _FlowState:
 
 
 def _max_min_rates(
-    flows: list[_FlowState], cap: np.ndarray
+    flows: list[_FlowState], cap: np.ndarray, weights: np.ndarray | None = None
 ) -> np.ndarray:
     """Progressive-filling max-min fairness, vectorized.
 
@@ -151,11 +154,18 @@ def _max_min_rates(
     minimizing remaining_bw / n_users, hand each of its users that fair
     share (times traversal multiplicity), charge every link they cross, and
     freeze them.
+
+    ``weights`` (per flow, default all ones) generalizes to *weighted*
+    max-min: a link's fair share is split proportionally to flow weight
+    (users count weight x traversal multiplicity).  With unit weights the
+    arithmetic is bit-identical to the unweighted loop (multiplying by 1.0
+    is exact), which is the ``FairnessPolicy`` golden invariant.
     """
     F = len(flows)
     rates = np.zeros(F)
     if F == 0:
         return rates
+    w = np.ones(F) if weights is None else np.maximum(weights, 1e-12)
     L = cap.size
     rem = cap.astype(np.float64, copy=True)
     users = np.zeros(L)
@@ -163,7 +173,7 @@ def _max_min_rates(
     for i, f in enumerate(flows):
         if f.lids.size:
             alive[i] = True
-            users[f.lids] += f.cnts
+            users[f.lids] += f.cnts * w[i]
 
     # Inverted index link -> (flow, count), sorted by link for O(1) slices.
     fid = np.concatenate(
@@ -196,15 +206,23 @@ def _max_min_rates(
             share = float(rem[b] / users[b])
             lo = np.searchsorted(lid_s, b, side="left")
             hi = np.searchsorted(lid_s, b, side="right")
+            froze_any = False
             for fi, c_b in zip(fid_s[lo:hi], cnt_s[lo:hi]):
                 if not alive[fi]:
                     continue
                 f = flows[fi]
-                rates[fi] += share * c_b
-                rem[f.lids] -= share * c_b * f.cnts
-                users[f.lids] -= f.cnts
+                rates[fi] += share * w[fi] * c_b
+                rem[f.lids] -= share * w[fi] * c_b * f.cnts
+                users[f.lids] -= f.cnts * w[fi]
                 alive[fi] = False
                 n_alive -= 1
+                froze_any = True
+            if not froze_any:
+                # Float residue: non-integer weights can leave a dust user
+                # count on a link whose flows all froze (integer counts
+                # subtract exactly, so the unweighted path never gets here).
+                # Clear it or the filling loop would spin forever.
+                users[b] = 0.0
     return rates
 
 
@@ -345,6 +363,62 @@ class OCSPolicy:
     max_epochs: int = 10_000  # safety: stall-finish whatever is left after
 
 
+class FairnessPolicy:
+    """Per-job bandwidth weights for the progressive-filling loop.
+
+    Static policies (``time_varying`` False) are queried once per flow at
+    admission; set ``time_varying`` True (deadline-aware policies) to be
+    re-queried on every rate recomputation with the current clock.  The
+    base policy weighs every job 1.0 — by the weighted-filling arithmetic
+    that is bit-identical to no policy at all (the golden invariant
+    ``tests/test_multitenant.py`` pins).
+    """
+
+    time_varying = False
+
+    def weight(self, job: str, now: float) -> float:
+        return 1.0
+
+
+@dataclass(frozen=True)
+class WeightedFairness(FairnessPolicy):
+    """Static per-job weights (e.g. :meth:`repro.core.workloads.JobSet.weights`);
+    jobs missing from the map get ``default``."""
+
+    weights: dict[str, float] = field(default_factory=dict)
+    default: float = 1.0
+
+    def weight(self, job: str, now: float) -> float:
+        return self.weights.get(job, self.default)
+
+
+@dataclass(frozen=True)
+class DeadlineFairness(FairnessPolicy):
+    """Deadline-aware priority: a job's weight ramps from ``base`` up to
+    ``base * max_boost`` linearly over the last ``horizon`` seconds before
+    its deadline (and stays at the ceiling past it).  Jobs without a
+    deadline keep ``base``."""
+
+    time_varying = True
+
+    deadlines: dict[str, float] = field(default_factory=dict)
+    horizon: float = 1.0
+    max_boost: float = 8.0
+    base: float = 1.0
+
+    def weight(self, job: str, now: float) -> float:
+        deadline = self.deadlines.get(job)
+        if deadline is None:
+            return self.base
+        slack = deadline - now
+        if slack >= self.horizon:
+            return self.base
+        if slack <= 0:
+            return self.base * self.max_boost
+        ramp = 1.0 + (self.max_boost - 1.0) * (1.0 - slack / self.horizon)
+        return self.base * ramp
+
+
 @dataclass
 class PlanUpdate:
     """A mid-run plan mutation, returned by :class:`ScenarioObserver` hooks.
@@ -354,12 +428,15 @@ class PlanUpdate:
     the path of every in-flight flow against the new fabric (endpoints are
     contractual, paths are not — flows keep their remaining bytes).  ``pause``
     charges an OCS-style reconfiguration stall: no flow makes progress for
-    ``pause`` seconds from the moment the update is applied.
+    ``pause`` seconds from the moment the update is applied.  ``edges_moved``
+    is the physical churn behind the update (fibers the patch panel had to
+    re-seat) — reported, summed, in ``ScenarioResult.edges_moved``.
     """
 
     links: dict[tuple[int, int], float] | None = None
     pause: float = 0.0
     label: str = ""
+    edges_moved: int = 0
 
 
 @dataclass(frozen=True)
@@ -437,6 +514,8 @@ class Scenario:
     stragglers: dict[int, float] = field(default_factory=dict)
     reconfig: OCSPolicy | None = None
     n: int | None = None  # node count (required for reconfig rebuilds)
+    # Per-job bandwidth weights (weighted max-min); None = plain max-min.
+    fairness: FairnessPolicy | None = None
 
 
 @dataclass
@@ -450,6 +529,7 @@ class ScenarioResult:
     stalled: tuple[tuple[str, int], ...] = ()  # flows finished by deadlock
     n_replans: int = 0  # observer-applied PlanUpdates
     replan_times: tuple[float, ...] = ()
+    edges_moved: int = 0  # physical fiber churn summed over PlanUpdates
 
 
 class _ScenarioFlow(_FlowState):
@@ -460,6 +540,7 @@ class _ScenarioFlow(_FlowState):
                          lids=lids, cnts=cnts, hops=hops)
         self.job = job
         self.path: tuple[int, ...] = task.route
+        self.weight = 1.0  # fairness weight (set at admission)
 
 
 class SimEngine:
@@ -560,7 +641,9 @@ class SimEngine:
         now = 0.0
         n_reconfigs = 0
         n_replans = 0
+        edges_moved = 0
         replan_times: list[float] = []
+        fairness = scenario.fairness
         # Observer bookkeeping: departure detection + check scheduling.
         outstanding: dict[str, int] = {j.name: len(j.tasks) for j in jobs}
         arrived: set[str] = set()
@@ -635,6 +718,8 @@ class SimEngine:
                 f = _ScenarioFlow(job.name, t, np.empty(0, dtype=np.int64),
                                   np.empty(0), 0)
                 install_route(f)
+                if fairness is not None:
+                    f.weight = fairness.weight(job.name, now)
                 active.append(f)
 
         def release(job_name: str, tid: int, t_done: float) -> None:
@@ -688,7 +773,7 @@ class SimEngine:
             )
 
         def apply_update(update: PlanUpdate | None) -> None:
-            nonlocal pause_until, n_replans
+            nonlocal pause_until, n_replans, edges_moved
             if update is None:
                 return
             if update.links is not None:
@@ -696,6 +781,7 @@ class SimEngine:
             if update.pause > 0:
                 pause_until = max(pause_until, now + update.pause)
             n_replans += 1
+            edges_moved += update.edges_moved
             replan_times.append(now)
 
         def notify_departures() -> None:
@@ -740,10 +826,19 @@ class SimEngine:
             fail_i < len(failures)
         ):
             in_pause = now < pause_until
+            flow_w = None
+            if fairness is not None and active and not in_pause:
+                if fairness.time_varying:
+                    for f in active:
+                        f.weight = fairness.weight(f.job, now)
+                flow_w = np.fromiter(
+                    (f.weight for f in active),
+                    dtype=np.float64, count=len(active),
+                )
             rates = (
                 np.zeros(len(active))
                 if in_pause
-                else _max_min_rates(active, table.cap)
+                else _max_min_rates(active, table.cap, weights=flow_w)
             )
             t_flow = np.inf
             next_idx = -1
@@ -881,6 +976,7 @@ class SimEngine:
             stalled=tuple(stalled),
             n_replans=n_replans,
             replan_times=tuple(replan_times),
+            edges_moved=edges_moved,
         )
 
     # -- vectorized benchmark inner loops -----------------------------------
@@ -1107,11 +1203,19 @@ def iteration_tasks(
     demand: TrafficDemand,
     compute_duration: float = 0.0,
     tid_offset: int = 0,
+    synth_missing_rings: bool = False,
 ) -> list[Task]:
     """One training iteration's flows on ``topo``: AllReduce bytes chunked
     across each group's rings, MP bytes split over the routing table (with
     an endpoint-only fallback for unrouted pairs).  Prepend an optional
-    compute task with no dependencies."""
+    compute task with no dependencies.
+
+    ``synth_missing_rings`` covers AllReduce groups the topology was never
+    built for (a tenant admitted onto an incumbent shared fabric without a
+    replan): their bytes ride one synthetic ring over the group members in
+    placement order, each hop an endpoint-only flow the engine routes over
+    whatever fabric survives.  Off by default — the historical behaviour
+    (and the single-job golden paths) silently skip such groups."""
     tasks: list[Task] = []
     tid = tid_offset
     if compute_duration > 0:
@@ -1120,7 +1224,18 @@ def iteration_tasks(
     for group in demand.allreduce:
         rings = topo.rings.get(group.members, [])
         k = len(group.members)
-        if k <= 1 or not rings or group.nbytes == 0.0:
+        if k <= 1 or group.nbytes == 0.0:
+            continue
+        if not rings:
+            if synth_missing_rings:
+                per_link = 2.0 * (k - 1) / k * group.nbytes
+                for i in range(k):
+                    a = group.members[i]
+                    b = group.members[(i + 1) % k]
+                    tasks.append(
+                        Task(tid=tid, kind="flow", nbytes=per_link, route=(a, b))
+                    )
+                    tid += 1
             continue
         per_link = 2.0 * (k - 1) / k * group.nbytes / len(rings)
         for ring in rings:

@@ -7,6 +7,13 @@ matrix, which is exactly what the Comm x Topo plane consumes.
 
 The simulated-annealing proposal/acceptance follows FlexFlow's MCMC: accept
 better strategies always, worse ones with probability exp(-delta/T).
+
+Multi-tenant mode (:func:`mcmc_search_jobset`): the state is one
+:class:`Strategy` per resident tenant of a :class:`~repro.core.workloads.JobSet`;
+each move picks a tenant and proposes a per-job move in its *local* index
+space (its MP pairs stay pinned to its placement), and the objective is the
+weighted mean of per-job iteration times on the *shared* topology under the
+union demand.
 """
 
 from __future__ import annotations
@@ -23,7 +30,7 @@ from .netsim import (
     topoopt_comm_time,
 )
 from .topology_finder import Topology
-from .workloads import JobSpec, job_demand
+from .workloads import JobSet, JobSpec, job_demand
 
 
 @dataclass(frozen=True)
@@ -39,11 +46,27 @@ class Strategy:
         return job_demand(job, n, table_hosts=hosts, ep_group_size=self.ep_group_size)
 
 
+def default_strategy(job: JobSpec) -> Strategy:
+    """The cold-start point of the search: pure DP (EP groups of 8 for MoE)."""
+    return Strategy(mode="dp", ep_group_size=8 if job.n_experts else 0)
+
+
 @dataclass
 class SearchResult:
     strategy: Strategy
     iter_time: float
     demand: TrafficDemand
+    history: list[float] = field(default_factory=list)
+
+
+@dataclass
+class JobSetSearchResult:
+    """Joint strategy search outcome for a shared cluster."""
+
+    strategies: dict[str, Strategy]
+    iter_time: float  # weighted mean of per-job iteration times
+    demand: TrafficDemand  # union demand, cluster index space
+    per_job: dict[str, float] = field(default_factory=dict)
     history: list[float] = field(default_factory=list)
 
 
@@ -106,8 +129,7 @@ def mcmc_search(
     """Search the Comp x Comm plane for a fixed topology (§4.1)."""
     rng = random.Random(seed)
     n = topo.n
-    current = init or Strategy(mode="dp",
-                               ep_group_size=8 if job.n_experts else 0)
+    current = init or default_strategy(job)
     cur_time, cur_demand = _evaluate(current, job, topo, hw, overlap)
     best, best_time, best_demand = current, cur_time, cur_demand
     history = [cur_time]
@@ -126,4 +148,106 @@ def mcmc_search(
 
     return SearchResult(
         strategy=best, iter_time=best_time, demand=best_demand, history=history
+    )
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant: joint per-job strategy search on a shared topology
+# ---------------------------------------------------------------------------
+
+
+def evaluate_jobset(
+    strategies: dict[str, Strategy],
+    jobset: JobSet,
+    topo: Topology,
+    hw: HardwareSpec,
+    overlap: float = 0.0,
+    _demand_cache: dict | None = None,
+) -> tuple[float, TrafficDemand, dict[str, float]]:
+    """(weighted objective, union demand, per-job iteration times).
+
+    The shared fabric serializes the union traffic: every job sees the fluid
+    comm time of the *union* demand on the shared topology, plus its own
+    compute on its shard.  The objective is the tenant-weight-weighted mean
+    of per-job iteration times.
+
+    ``_demand_cache`` memoizes per-tenant demand construction across calls
+    (:class:`Strategy` is frozen/hashable): an MCMC move changes one
+    tenant's strategy, so the other tenants' demands are reused verbatim —
+    the hot loop of :func:`mcmc_search_jobset`."""
+    demands: dict[str, TrafficDemand] = {}
+    for t in jobset.tenants:
+        s = strategies[t.label]
+        if _demand_cache is None:
+            demands[t.label] = s.demand(t.spec, t.k)
+            continue
+        key = (t.label, s, t.k)
+        if key not in _demand_cache:
+            _demand_cache[key] = s.demand(t.spec, t.k)
+        demands[t.label] = _demand_cache[key]
+    union = jobset.union(demands)
+    comm = topoopt_comm_time(topo, union, hw)["comm_time"]
+    per_job: dict[str, float] = {}
+    obj = 0.0
+    for t in jobset.tenants:
+        comp = compute_time(t.flops_per_iteration, t.k, hw)
+        per_job[t.label] = iteration_time(comm, comp, overlap=overlap)
+        obj += t.weight * per_job[t.label]
+    return obj / jobset.total_weight, union, per_job
+
+
+def mcmc_search_jobset(
+    jobset: JobSet,
+    topo: Topology,
+    hw: HardwareSpec,
+    iters: int = 200,
+    temperature: float = 0.1,
+    overlap: float = 0.0,
+    seed: int = 0,
+    init: dict[str, Strategy] | None = None,
+) -> JobSetSearchResult:
+    """Joint Comp x Comm search for a shared cluster (fixed topology).
+
+    Each MCMC move picks one tenant and proposes a per-job move in its local
+    index space (:func:`_propose` — table-host shuffles, EP-group resizes);
+    acceptance follows the single-job annealing rule on the weighted
+    objective.  Per-job MP pairs stay pinned to their placements: only the
+    union's AllReduce groups are ring-mutable downstream.
+    """
+    if not jobset.tenants:
+        raise ValueError("mcmc_search_jobset needs at least one tenant")
+    rng = random.Random(seed)
+    demand_cache: dict = {}
+    current: dict[str, Strategy] = {
+        t.label: (init or {}).get(t.label) or default_strategy(t.spec)
+        for t in jobset.tenants
+    }
+    cur_obj, cur_union, cur_per_job = evaluate_jobset(
+        current, jobset, topo, hw, overlap, _demand_cache=demand_cache
+    )
+    best = dict(current)
+    best_obj, best_union, best_per_job = cur_obj, cur_union, cur_per_job
+    history = [cur_obj]
+
+    for _ in range(iters):
+        t = jobset.tenants[rng.randrange(len(jobset.tenants))]
+        cand = dict(current)
+        cand[t.label] = _propose(current[t.label], t.spec, t.k, rng)
+        cand_obj, cand_union, cand_per_job = evaluate_jobset(
+            cand, jobset, topo, hw, overlap, _demand_cache=demand_cache
+        )
+        temp = temperature * max(cur_obj, 1e-12)
+        if cand_obj <= cur_obj or rng.random() < math.exp(
+            -(cand_obj - cur_obj) / temp
+        ):
+            current, cur_obj = cand, cand_obj
+            cur_union, cur_per_job = cand_union, cand_per_job
+            if cur_obj < best_obj:
+                best, best_obj = dict(current), cur_obj
+                best_union, best_per_job = cur_union, cur_per_job
+        history.append(cur_obj)
+
+    return JobSetSearchResult(
+        strategies=best, iter_time=best_obj, demand=best_union,
+        per_job=best_per_job, history=history,
     )

@@ -85,6 +85,53 @@ def _norm_pair(a: int, b: int) -> tuple[int, int]:
     return (a, b) if a <= b else (b, a)
 
 
+def _select_group_rings(
+    g: AllReduceGroup,
+    d_k: int,
+    forb: set[tuple[int, int]],
+    warm_start: Topology | None,
+    prime_only: bool | None,
+) -> list[RingPermutation]:
+    """Pick up to ``d_k`` ring permutations for one AllReduce group:
+    warm-start strides first, SelectPermutations for the remainder,
+    parallel-copy refill when ``forb`` thinned the set below budget."""
+    perm_set = totient_perms(g.members, prime_only=prime_only)
+    if forb:
+        perm_set = PermutationSet(
+            group=perm_set.group,
+            perms=[
+                r
+                for r in perm_set.perms
+                if not any(_norm_pair(a, b) in forb for a, b in r.edges())
+            ],
+        )
+    chosen: list[RingPermutation] = []
+    if warm_start is not None:
+        # Keep incumbent strides that are still valid (warm start).
+        still = {r.p: r for r in perm_set.perms}
+        for r in warm_start.rings.get(g.members, []):
+            if r.p in still and len(chosen) < d_k:
+                chosen.append(still[r.p])
+    if len(chosen) < d_k:
+        rest = PermutationSet(
+            group=perm_set.group,
+            perms=[r for r in perm_set.perms if r not in chosen],
+        )
+        chosen = chosen + select_permutations(rest, d_k - len(chosen))
+    if forb and chosen and len(chosen) < d_k:
+        # Replanning on a degraded fabric: the forbidden pairs thinned
+        # the permutation set below the ring budget.  Refill with
+        # parallel copies of the surviving strides — on a max-min-fair
+        # fabric a second ring of the same stride doubles that ring's
+        # capacity, which beats leaving NIC ports dark.
+        base = list(chosen)
+        while len(chosen) < d_k:
+            chosen.append(base[(len(chosen) - len(base)) % len(base)])
+    if not chosen and len(g.members) >= 2:
+        chosen = [perm_set.perms[0]] if perm_set.perms else []
+    return chosen
+
+
 def topology_finder(
     demand: TrafficDemand,
     degree: int,
@@ -92,6 +139,7 @@ def topology_finder(
     mp_route_k: int = 2,
     forbidden: Iterable[tuple[int, int]] = (),
     warm_start: Topology | None = None,
+    pack: str = "global",
 ) -> Topology:
     """Algorithm 1 (paper §4.2).
 
@@ -106,7 +154,18 @@ def topology_finder(
     are kept when still valid, and only the remainder of the degree budget is
     re-searched.  This both converges faster and minimizes physical link
     churn when the plan is swapped on a live OCS/patch-panel fabric.
+
+    ``pack`` selects the degree accounting.  ``"global"`` (default) is the
+    paper's single-job Algorithm 1: one global ``d_A``/``d_MP`` split and a
+    shared ring budget across groups — byte-identical to the pre-multi-tenant
+    behaviour.  ``"per_node"`` charges the budget where links actually land
+    (a node only spends degree on rings/MP links it terminates), so the
+    disjoint per-job groups of a multi-tenant union demand each get their own
+    ring budget instead of splitting one global count — this is how per-job
+    ring budgets pack into the shared physical degree.
     """
+    if pack not in ("global", "per_node"):
+        raise ValueError(f"unknown pack mode {pack!r}")
     n = demand.n
     forb = {_norm_pair(a, b) for a, b in forbidden}
     graph = nx.MultiDiGraph()
@@ -130,77 +189,49 @@ def topology_finder(
         d_a = max(1, math.ceil(degree * sum_ar / total))
     d_a = min(d_a, degree)
     d_mp = degree - d_a
-    d_a_budget = d_a
 
-    # -- Step 2: AllReduce sub-topology -------------------------------------
     rings: dict[tuple[int, ...], list[RingPermutation]] = {}
-    group_total = sum(g.total for g in groups)
-    for g in sorted(groups, key=lambda g: -g.total):
-        if d_a_budget <= 0:
-            break
-        if group_total > 0:
-            d_k = math.ceil(d_a * g.total / group_total)
-        else:
-            d_k = 1
-        d_k = min(d_k, d_a_budget)
-        perm_set = totient_perms(g.members, prime_only=prime_only)
-        if forb:
-            perm_set = PermutationSet(
-                group=perm_set.group,
-                perms=[
-                    r
-                    for r in perm_set.perms
-                    if not any(_norm_pair(a, b) in forb for a, b in r.edges())
-                ],
-            )
-        chosen: list[RingPermutation] = []
-        if warm_start is not None:
-            # Keep incumbent strides that are still valid (warm start).
-            still = {r.p: r for r in perm_set.perms}
-            for r in warm_start.rings.get(g.members, []):
-                if r.p in still and len(chosen) < d_k:
-                    chosen.append(still[r.p])
-        if len(chosen) < d_k:
-            rest = PermutationSet(
-                group=perm_set.group,
-                perms=[r for r in perm_set.perms if r not in chosen],
-            )
-            chosen = chosen + select_permutations(rest, d_k - len(chosen))
-        if forb and chosen and len(chosen) < d_k:
-            # Replanning on a degraded fabric: the forbidden pairs thinned
-            # the permutation set below the ring budget.  Refill with
-            # parallel copies of the surviving strides — on a max-min-fair
-            # fabric a second ring of the same stride doubles that ring's
-            # capacity, which beats leaving NIC ports dark.
-            base = list(chosen)
-            while len(chosen) < d_k:
-                chosen.append(base[(len(chosen) - len(base)) % len(base)])
-        if not chosen and len(g.members) >= 2:
-            chosen = [perm_set.perms[0]] if perm_set.perms else []
-        for ring in chosen:
-            _add_ring(graph, ring)
-        rings[g.members] = chosen
-        d_a_budget -= max(len(chosen), 1)
+    if pack == "global":
+        # -- Step 2: AllReduce sub-topology ---------------------------------
+        d_a_budget = d_a
+        group_total = sum(g.total for g in groups)
+        for g in sorted(groups, key=lambda g: -g.total):
+            if d_a_budget <= 0:
+                break
+            if group_total > 0:
+                d_k = math.ceil(d_a * g.total / group_total)
+            else:
+                d_k = 1
+            d_k = min(d_k, d_a_budget)
+            chosen = _select_group_rings(g, d_k, forb, warm_start, prime_only)
+            for ring in chosen:
+                _add_ring(graph, ring)
+            rings[g.members] = chosen
+            d_a_budget -= max(len(chosen), 1)
 
-    # -- Step 3: MP sub-topology (Blossom matching, demand halving) ---------
-    t_mp = demand.mp.copy()
-    for _ in range(d_mp):
-        sym = t_mp + t_mp.T
-        if sym.max() <= 0:
-            break
-        und = nx.Graph()
-        srcs, dsts = np.nonzero(sym)
-        for i, j in zip(srcs.tolist(), dsts.tolist()):
-            if i < j and (i, j) not in forb:
-                und.add_edge(i, j, weight=float(sym[i, j]))
-        matching = nx.max_weight_matching(und, maxcardinality=False)
-        if not matching:
-            break
-        for a, b in matching:
-            _add_duplex(graph, a, b)
-            # Diminishing return: halve served demand (line 17).
-            t_mp[a, b] /= 2.0
-            t_mp[b, a] /= 2.0
+        # -- Step 3: MP sub-topology (Blossom matching, demand halving) -----
+        t_mp = demand.mp.copy()
+        for _ in range(d_mp):
+            sym = t_mp + t_mp.T
+            if sym.max() <= 0:
+                break
+            und = nx.Graph()
+            srcs, dsts = np.nonzero(sym)
+            for i, j in zip(srcs.tolist(), dsts.tolist()):
+                if i < j and (i, j) not in forb:
+                    und.add_edge(i, j, weight=float(sym[i, j]))
+            matching = nx.max_weight_matching(und, maxcardinality=False)
+            if not matching:
+                break
+            for a, b in matching:
+                _add_duplex(graph, a, b)
+                # Diminishing return: halve served demand (line 17).
+                t_mp[a, b] /= 2.0
+                t_mp[b, a] /= 2.0
+    else:
+        d_a, d_mp = _pack_per_node(
+            demand, degree, groups, graph, rings, forb, warm_start, prime_only
+        )
 
     # -- Step 4: final topology + routing ------------------------------------
     topo = Topology(
@@ -221,6 +252,117 @@ def topology_finder(
             routing.routes[pair] = rs
     topo.routing = routing
     return topo
+
+
+def _pack_per_node(
+    demand: TrafficDemand,
+    degree: int,
+    groups: list[AllReduceGroup],
+    graph: nx.MultiDiGraph,
+    rings: dict[tuple[int, ...], list[RingPermutation]],
+    forb: set[tuple[int, int]],
+    warm_start: Topology | None,
+    prime_only: bool | None,
+) -> tuple[int, int]:
+    """Shared-cluster degree packing: charge the budget per node.
+
+    A ring only consumes one out-port on each of *its* members, and an MP
+    duplex only on its two endpoints — so disjoint per-job groups (a
+    multi-tenant union demand) each get a full ring budget instead of
+    splitting one global count.  Per node ``v`` the AllReduce/MP split of
+    Algorithm 1 line 2 is applied to the bytes *terminating at v*; when no
+    group spans every node, one port per node is reserved for a zero-byte
+    global connectivity ring so idle servers (future arrivals) stay
+    reachable.  Returns the ``(d_allreduce, d_mp)`` summary fields.
+    """
+    n = demand.n
+    spans_all = any(set(g.members) == set(range(n)) for g in groups)
+    reserve = 0 if spans_all else 1
+    if degree - reserve < 1:
+        reserve = 0  # degree 1: a connectivity ring would overflow the port
+    budget = degree - reserve
+
+    # Per-node byte split: ring bytes a group would put on one of v's ports
+    # vs MP bytes terminating at v (a duplex serves both directions).
+    per_link = {
+        id(g): 2.0 * (len(g.members) - 1) / len(g.members) * g.nbytes
+        if len(g.members) > 1
+        else 0.0
+        for g in groups
+    }
+    ar_v = np.zeros(n)
+    for g in groups:
+        for v in g.members:
+            ar_v[v] += per_link[id(g)]
+    mp_v = (demand.mp.sum(axis=1) + demand.mp.sum(axis=0)) / 2.0
+    with np.errstate(divide="ignore", invalid="ignore"):
+        frac = np.where(ar_v + mp_v > 0, ar_v / (ar_v + mp_v), 1.0)
+    d_a_v = np.clip(np.ceil(budget * frac), 1, budget).astype(np.int64)
+
+    used = np.zeros(n, dtype=np.int64)
+    for g in sorted(groups, key=lambda g: -g.total):
+        members = np.asarray(g.members, dtype=np.int64)
+        avail = int((budget - used[members]).min()) if members.size else 0
+        if per_link[id(g)] > 0:
+            # The group's share of each member's AllReduce budget; the
+            # tightest member bounds the ring count.
+            share = d_a_v[members] * per_link[id(g)] / ar_v[members]
+            d_k = max(1, int(np.ceil(share.min())))
+        else:
+            d_k = 1 if len(g.members) > 1 else 0
+        d_k = min(d_k, avail)
+        if avail <= 0:
+            chosen = []  # members saturated: even a fallback ring overflows
+        else:
+            chosen = _select_group_rings(
+                g, d_k, forb, warm_start, prime_only
+            )[:avail]
+        for ring in chosen:
+            _add_ring(graph, ring)
+        rings[g.members] = chosen
+        if members.size:
+            used[members] += len(chosen)
+    used_ar = used.copy()
+
+    # MP links fill whatever per-node budget remains.
+    t_mp = demand.mp.copy()
+    for _ in range(degree):
+        sym = t_mp + t_mp.T
+        if sym.max() <= 0:
+            break
+        und = nx.Graph()
+        srcs, dsts = np.nonzero(sym)
+        progress = False
+        for i, j in zip(srcs.tolist(), dsts.tolist()):
+            if (
+                i < j
+                and (i, j) not in forb
+                and used[i] < budget
+                and used[j] < budget
+            ):
+                und.add_edge(i, j, weight=float(sym[i, j]))
+        matching = nx.max_weight_matching(und, maxcardinality=False)
+        for a, b in matching:
+            _add_duplex(graph, a, b)
+            used[a] += 1
+            used[b] += 1
+            t_mp[a, b] /= 2.0
+            t_mp[b, a] /= 2.0
+            progress = True
+        if not progress:
+            break
+
+    if reserve:
+        # Zero-byte global connectivity ring on the reserved port: future
+        # arrivals (and reroutes around failures) always have a path.
+        members = tuple(range(n))
+        conn = AllReduceGroup(members=members, nbytes=0.0)
+        chosen = _select_group_rings(conn, 1, forb, warm_start, prime_only)
+        if chosen:
+            _add_ring(graph, chosen[0])
+            rings.setdefault(members, [chosen[0]])
+    d_allreduce = int(used_ar.max(initial=0)) + reserve
+    return d_allreduce, degree - d_allreduce
 
 
 def effective_diameter(topo: Topology) -> int:

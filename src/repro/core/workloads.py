@@ -4,14 +4,28 @@ and for the assigned architectures (traffic-demand view).
 Each :class:`JobSpec` captures what the co-optimization needs: dense
 (replicated) parameter bytes -> AllReduce demand; embedding tables / experts
 -> MP demand; FLOPs -> compute time.
+
+Multi-tenant clusters (§6 shared-cluster deployment): a :class:`JobSet`
+holds several :class:`TenantJob`\\ s — a spec, a disjoint server placement,
+and a fairness weight each — and aggregates their per-job demands into one
+cluster-level :class:`~repro.core.demand.TrafficDemand` via
+:meth:`JobSet.union`.  That union is what the shared TopologyFinder packs
+into one physical degree budget.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
-from typing import Sequence
+from dataclasses import dataclass, field, replace
+from typing import Mapping, Sequence
 
-from .demand import TrafficDemand, dlrm_demand, data_parallel_demand, moe_demand
+from .demand import (
+    TrafficDemand,
+    data_parallel_demand,
+    dlrm_demand,
+    moe_demand,
+    remap_demand,
+    union_demand,
+)
 
 
 @dataclass(frozen=True)
@@ -81,9 +95,139 @@ NCF = JobSpec(
     n_tables=128, table_rows=1e6, table_dim=96,  # mean of MF 64 / MLP 128
 )
 
+MOE_16E = JobSpec(
+    # Small mixture-of-experts transformer (shared-cluster churn traces):
+    # 16 experts, top-2 routing, 8 MoE layers -> EP all-to-all demand.
+    name="moe16", batch_per_gpu=32, dense_params=200e6,
+    flops_per_sample=6 * 200e6 * 32,
+    n_experts=16, top_k=2, moe_hidden=2048, d_model=1024, n_moe_layers=8,
+)
+
 PAPER_JOBS = {
     j.name: j for j in [VGG16, RESNET50, BERT, CANDLE, DLRM, DLRM_A2A, NCF]
 }
+
+
+# --- Multi-tenant JobSet (shared-cluster co-optimization) -------------------
+
+
+@dataclass(frozen=True)
+class TenantJob:
+    """One resident job of a shared cluster: spec + placement + weight.
+
+    ``servers`` maps the job's local node ids ``0..k-1`` to cluster nodes;
+    placements of distinct tenants must be disjoint.  ``weight`` is the
+    job's fairness weight (weighted max-min share and objective weight in
+    the multi-job co-optimization)."""
+
+    spec: JobSpec
+    servers: tuple[int, ...]
+    weight: float = 1.0
+    name: str = ""
+
+    def __post_init__(self):
+        object.__setattr__(self, "servers", tuple(int(s) for s in self.servers))
+        if len(set(self.servers)) != len(self.servers):
+            raise ValueError(f"tenant placement {self.servers!r} repeats a server")
+        if self.weight <= 0:
+            raise ValueError("tenant weight must be positive")
+
+    @property
+    def label(self) -> str:
+        return self.name or self.spec.name
+
+    @property
+    def k(self) -> int:
+        return len(self.servers)
+
+    @property
+    def flops_per_iteration(self) -> float:
+        return self.spec.flops_per_sample * self.spec.batch_per_gpu * self.k
+
+
+@dataclass
+class JobSet:
+    """The resident jobs of one shared cluster of ``n`` servers.
+
+    Aggregates per-job (job-local) :class:`TrafficDemand`\\ s under each
+    tenant's placement into one cluster-level union demand — the input the
+    shared TopologyFinder packs into a single physical degree budget — and
+    carries the per-job fairness weights every layer above consumes.
+    """
+
+    n: int
+    tenants: list[TenantJob] = field(default_factory=list)
+
+    def __post_init__(self):
+        self.validate()
+
+    def validate(self) -> None:
+        seen: set[int] = set()
+        labels: set[str] = set()
+        for t in self.tenants:
+            if t.label in labels:
+                raise ValueError(f"duplicate tenant label {t.label!r}")
+            labels.add(t.label)
+            s = set(t.servers)
+            if s & seen:
+                raise ValueError(
+                    f"tenant {t.label!r} overlaps servers {sorted(s & seen)}"
+                )
+            if s and (min(s) < 0 or max(s) >= self.n):
+                raise ValueError(
+                    f"tenant {t.label!r} placed outside cluster of {self.n}"
+                )
+            seen |= s
+
+    def tenant(self, label: str) -> TenantJob:
+        for t in self.tenants:
+            if t.label == label:
+                return t
+        raise KeyError(label)
+
+    @property
+    def labels(self) -> tuple[str, ...]:
+        return tuple(t.label for t in self.tenants)
+
+    def weights(self) -> dict[str, float]:
+        return {t.label: t.weight for t in self.tenants}
+
+    @property
+    def total_weight(self) -> float:
+        return float(sum(t.weight for t in self.tenants)) or 1.0
+
+    def free_servers(self) -> set[int]:
+        used = {s for t in self.tenants for s in t.servers}
+        return set(range(self.n)) - used
+
+    def with_tenant(self, tenant: TenantJob) -> "JobSet":
+        return JobSet(n=self.n, tenants=[*self.tenants, tenant])
+
+    def without(self, label: str) -> "JobSet":
+        kept = [t for t in self.tenants if t.label != label]
+        if len(kept) == len(self.tenants):
+            raise KeyError(label)
+        return JobSet(n=self.n, tenants=kept)
+
+    def union(self, demands: Mapping[str, TrafficDemand]) -> TrafficDemand:
+        """Cluster-level union of per-tenant job-local demands.
+
+        ``demands[label]`` is tenant ``label``'s demand on ``tenant.k``
+        local nodes; each is embedded under its placement and summed."""
+        parts = [
+            remap_demand(demands[t.label], t.servers, self.n)
+            for t in self.tenants
+        ]
+        return union_demand(parts, n=self.n)
+
+    def union_for(self, strategies: Mapping[str, object]) -> TrafficDemand:
+        """Union demand under per-tenant strategies: ``strategies[label]``
+        is any object with a ``demand(spec, n)`` method (a
+        :class:`~repro.core.strategy_search.Strategy`)."""
+        return self.union({
+            t.label: strategies[t.label].demand(t.spec, t.k)
+            for t in self.tenants
+        })
 
 
 # --- Demand construction given a strategy ----------------------------------
@@ -101,8 +245,11 @@ def job_demand(
     are replicated and join the AllReduce — the paper's Fig. 1a 44 GB case).
     """
     if job.n_experts and ep_group_size > 1:
+        # Clamp to the job's node count (a tenant's shard may be smaller
+        # than the strategy's preferred EP group).
+        ep_group_size = min(ep_group_size, n)
         groups = [
-            tuple(range(g, g + ep_group_size))
+            tuple(range(g, min(g + ep_group_size, n)))
             for g in range(0, n, ep_group_size)
         ]
         # Tokens routed to top_k experts: dispatch + combine per MoE layer.

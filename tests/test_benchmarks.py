@@ -50,3 +50,23 @@ def test_shared_bench_ratio_grows_with_load():
     r20 = float(rows[0]["fat_tree_mean"] / rows[0]["topoopt_mean"])
     r100 = float(rows[1]["fat_tree_mean"] / rows[1]["topoopt_mean"])
     assert r100 > r20 > 1.0
+
+
+def test_multitenant_bench_smoke(tmp_path, monkeypatch):
+    """Shared-fabric reactive re-optimization must beat the static shared
+    plan on the 3-job churn trace, and weighting a tenant must not slow it."""
+    from benchmarks import bench_multitenant
+
+    monkeypatch.chdir(tmp_path)  # perf record lands in a scratch dir
+    rows = bench_multitenant.run(smoke=True)
+    by_name = {r["name"]: r for r in rows}
+    churn = by_name["multitenant_churn"]
+    assert churn["static_s"] > churn["reactive_s"]
+    assert churn["reactive_replans"] >= 1
+    assert churn["edges_moved"] >= 1
+    weighted = by_name["multitenant_weighted"]
+    assert weighted["dlrm_weighted_s"] <= weighted["dlrm_unweighted_s"] * (
+        1 + 1e-9
+    )
+    assert (tmp_path / "experiments" / "bench"
+            / "BENCH_multitenant.json").exists()

@@ -1,0 +1,594 @@
+"""Multi-tenant co-optimization invariants.
+
+* Weighted fairness goldens: unit weights reproduce the PR-1 engine to
+  1e-9; doubling one job's weight never slows that job; per-link rate
+  allocations conserve capacity.
+* JobSet: union demand equals the sum of per-job demands; placements are
+  validated; remap embeds MP blocks exactly.
+* Shared topology packing: per-tenant ring budgets respect the physical
+  degree; idle servers stay reachable.
+* JobSetController: place_arrival admission, departure, union replanning.
+* Satellites: churn-proportional replan cost (edges_moved pricing),
+  adaptive hysteresis (benefit-vs-cost skip + backoff), incremental
+  degradation probe (bottleneck-set cache).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.alternating import co_optimize_jobset
+from repro.core.demand import remap_demand, union_demand
+from repro.core.netsim import HardwareSpec
+from repro.core.online import (
+    JobSetController,
+    ReoptPolicy,
+    TraceEvent,
+    edge_churn,
+    run_online_jobset,
+)
+from repro.core.simengine import (
+    DeadlineFairness,
+    LinkFailure,
+    OCSPolicy,
+    Scenario,
+    SimEngine,
+    SimJob,
+    Task,
+    WeightedFairness,
+    _FlowState,
+    _LinkTable,
+    _max_min_rates,
+)
+from repro.core.workloads import (
+    BERT,
+    DLRM,
+    MOE_16E,
+    VGG16,
+    JobSet,
+    TenantJob,
+    job_demand,
+)
+
+HW = HardwareSpec(link_bandwidth=12.5e9, degree=4)
+
+
+def _flow_job(name, arrival, nbytes=1000.0, route=(0, 1)):
+    return SimJob(
+        name=name, arrival=arrival,
+        tasks=[Task(tid=0, kind="flow", nbytes=nbytes, route=route)],
+    )
+
+
+def _jobset(n=12):
+    return JobSet(n=n, tenants=[
+        TenantJob(spec=DLRM, servers=tuple(range(0, 5)), name="dlrm"),
+        TenantJob(spec=BERT, servers=tuple(range(5, 10)), weight=2.0,
+                  name="bert"),
+    ])
+
+
+@pytest.fixture(scope="module")
+def shared_plan():
+    """One cheap shared-cluster plan reused by the controller tests."""
+    return co_optimize_jobset(_jobset(), HW, rounds=2, mcmc_iters=20, seed=3)
+
+
+# ---------------------------------------------------------------------------
+# Weighted fairness goldens
+# ---------------------------------------------------------------------------
+
+GOLDEN_SCENARIOS = {
+    "shared": lambda **kw: Scenario(
+        links={(0, 1): 100.0},
+        jobs=[_flow_job("a", 0.0), _flow_job("b", 5.0)],
+        n=2, **kw,
+    ),
+    "failure_reroute": lambda **kw: Scenario(
+        links={(0, 1): 100.0, (0, 2): 100.0, (2, 1): 100.0},
+        jobs=[_flow_job("j", 0.0, nbytes=1000.0, route=(0, 1))],
+        failures=(LinkFailure(time=5.0, link=(0, 1)),),
+        n=3, **kw,
+    ),
+    "ocs": lambda **kw: Scenario(
+        links={}, n=4,
+        jobs=[SimJob("o", [
+            Task(tid=0, kind="flow", nbytes=1e6, route=(0, 3)),
+            Task(tid=1, kind="flow", nbytes=1e6, route=(1, 2)),
+        ])],
+        reconfig=OCSPolicy(window=50e-3, latency=1e-3, degree=2,
+                           link_bandwidth=1e6),
+        **kw,
+    ),
+}
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN_SCENARIOS))
+def test_unit_weights_reproduce_plain_engine(name):
+    """weights=1 is the PR-1 engine, bit for bit (1e-9 in the assertion)."""
+    make = GOLDEN_SCENARIOS[name]
+    plain = SimEngine().run(make())
+    weighted = SimEngine().run(make(fairness=WeightedFairness({})))
+    assert weighted.makespan == pytest.approx(plain.makespan, rel=1e-9)
+    for job, t in plain.job_finish.items():
+        assert weighted.job_finish[job] == pytest.approx(t, rel=1e-9)
+    assert weighted.delivered == plain.delivered
+    assert weighted.finish_times == plain.finish_times
+
+
+def test_weighted_shares_split_proportionally():
+    """Two flows on one link with weights 3:1 run at 75/25 rates."""
+    sc = Scenario(
+        links={(0, 1): 100.0},
+        jobs=[_flow_job("a", 0.0, nbytes=300.0),
+              _flow_job("b", 0.0, nbytes=300.0)],
+        n=2,
+        fairness=WeightedFairness({"a": 3.0, "b": 1.0}),
+    )
+    r = SimEngine().run(sc)
+    # a: 300 bytes at 75 B/s -> 4 s; b then finishes its remaining bytes
+    # alone: 300 - 4*25 = 200 at 100 B/s -> 6 s total.
+    assert r.job_makespans["a"] == pytest.approx(4.0, rel=1e-6)
+    assert r.job_makespans["b"] == pytest.approx(6.0, rel=1e-6)
+
+
+def test_doubling_a_weight_never_slows_that_job():
+    def run(weight):
+        sc = Scenario(
+            links={(0, 1): 100.0},
+            jobs=[_flow_job("a", 0.0, nbytes=500.0),
+                  _flow_job("b", 0.0, nbytes=500.0)],
+            n=2,
+            fairness=WeightedFairness({"a": weight}),
+        )
+        return SimEngine().run(sc).job_makespans["a"]
+
+    t1 = run(1.0)
+    t2 = run(2.0)
+    t4 = run(4.0)
+    assert t2 <= t1 + 1e-12
+    assert t4 <= t2 + 1e-12
+
+
+def test_weighted_rates_conserve_link_capacity():
+    """Randomized weighted progressive filling never oversubscribes a link
+    and saturates every bottleneck some flow crosses."""
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        n_links = int(rng.integers(2, 8))
+        caps = {(i, i + 1): float(rng.uniform(10, 100))
+                for i in range(n_links)}
+        table = _LinkTable(caps)
+        flows = []
+        for _ in range(int(rng.integers(1, 12))):
+            a = int(rng.integers(0, n_links))
+            b = int(rng.integers(a + 1, n_links + 1))
+            route = tuple(range(a, b + 1))
+            lids, cnts = table.indices_for(route)
+            flows.append(_FlowState(
+                task=Task(tid=0, kind="flow", nbytes=1.0, route=route),
+                remaining=1.0, lids=lids, cnts=cnts, hops=len(route) - 1,
+            ))
+        weights = rng.uniform(0.1, 5.0, size=len(flows))
+        rates = _max_min_rates(flows, table.cap, weights=weights)
+        assert (rates >= 0).all()
+        usage = np.zeros(table.cap.size)
+        for f, r in zip(flows, rates):
+            usage[f.lids] += r * f.cnts
+        assert (usage <= table.cap * (1 + 1e-9)).all()
+        # Max-min: every flow is stopped by some saturated link.
+        for f, r in zip(flows, rates):
+            assert r > 0
+            slack = table.cap[f.lids] - usage[f.lids]
+            assert slack.min() <= 1e-6 * table.cap[f.lids].max()
+
+
+def test_deadline_fairness_ramps_weight():
+    pol = DeadlineFairness(deadlines={"a": 10.0}, horizon=4.0, max_boost=8.0)
+    assert pol.weight("a", 0.0) == 1.0  # far from deadline
+    assert pol.weight("a", 8.0) == pytest.approx(4.5)  # halfway up the ramp
+    assert pol.weight("a", 12.0) == 8.0  # past deadline: ceiling
+    assert pol.weight("other", 0.0) == 1.0  # no deadline: base
+
+
+# ---------------------------------------------------------------------------
+# JobSet / union demand
+# ---------------------------------------------------------------------------
+
+
+def test_union_demand_equals_sum_of_per_job_demands():
+    js = _jobset(n=12)
+    demands = {
+        "dlrm": job_demand(DLRM, 5, table_hosts=(0, 2)),
+        "bert": job_demand(BERT, 5),
+    }
+    union = js.union(demands)
+    assert union.n == 12
+    assert union.sum_mp == pytest.approx(
+        sum(d.sum_mp for d in demands.values()), rel=1e-12)
+    assert union.sum_allreduce == pytest.approx(
+        sum(d.sum_allreduce for d in demands.values()), rel=1e-12)
+    # MP blocks land exactly on each tenant's placement.
+    dlrm_block = union.mp[np.ix_(range(0, 5), range(0, 5))]
+    np.testing.assert_allclose(dlrm_block, demands["dlrm"].mp)
+    bert_block = union.mp[np.ix_(range(5, 10), range(5, 10))]
+    np.testing.assert_allclose(bert_block, demands["bert"].mp)
+    # Nothing lands off-placement.
+    mask = np.zeros((12, 12), dtype=bool)
+    mask[np.ix_(range(0, 5), range(0, 5))] = True
+    mask[np.ix_(range(5, 10), range(5, 10))] = True
+    assert union.mp[~mask].sum() == 0.0
+    # AllReduce members relabelled into cluster space.
+    assert {g.members for g in union.allreduce} == {
+        (0, 1, 2, 3, 4), (5, 6, 7, 8, 9)}
+
+
+def test_union_demand_merges_identical_groups():
+    a = job_demand(VGG16, 4)
+    u = union_demand([remap_demand(a, (0, 1, 2, 3), 4),
+                      remap_demand(a, (0, 1, 2, 3), 4)], n=4)
+    assert len(u.allreduce) == 1
+    assert u.sum_allreduce == pytest.approx(2 * a.sum_allreduce)
+
+
+def test_jobset_validation_rejects_overlap_and_duplicates():
+    with pytest.raises(ValueError, match="overlaps"):
+        JobSet(n=8, tenants=[
+            TenantJob(spec=VGG16, servers=(0, 1, 2), name="a"),
+            TenantJob(spec=BERT, servers=(2, 3), name="b"),
+        ])
+    with pytest.raises(ValueError, match="duplicate"):
+        JobSet(n=8, tenants=[
+            TenantJob(spec=VGG16, servers=(0, 1), name="a"),
+            TenantJob(spec=BERT, servers=(2, 3), name="a"),
+        ])
+    with pytest.raises(ValueError, match="outside"):
+        JobSet(n=4, tenants=[TenantJob(spec=VGG16, servers=(3, 4), name="a")])
+    assert _jobset().free_servers() == {10, 11}
+
+
+def test_remap_demand_validates_placement():
+    d = job_demand(VGG16, 4)
+    with pytest.raises(ValueError):
+        remap_demand(d, (0, 1, 2), 8)  # wrong size
+    with pytest.raises(ValueError):
+        remap_demand(d, (0, 1, 2, 2), 8)  # repeated server
+    with pytest.raises(ValueError):
+        remap_demand(d, (0, 1, 2, 9), 8)  # outside cluster
+
+
+# ---------------------------------------------------------------------------
+# Shared topology packing
+# ---------------------------------------------------------------------------
+
+
+def test_shared_topology_packs_per_tenant_rings_within_degree(shared_plan):
+    topo = shared_plan.topology
+    assert max(topo.out_degrees()) <= HW.degree
+    # Each tenant's dense AllReduce got at least one ring of its own.
+    assert topo.rings.get((0, 1, 2, 3, 4))
+    assert topo.rings.get((5, 6, 7, 8, 9))
+    # Idle servers remain reachable (connectivity ring).
+    import networkx as nx
+
+    assert nx.is_strongly_connected(nx.DiGraph(topo.graph))
+
+
+def test_cooptimize_jobset_respects_forbidden_pairs():
+    plan = co_optimize_jobset(
+        _jobset(), HW, rounds=1, mcmc_iters=10, seed=0,
+        forbidden=((0, 1), (5, 6)),
+    )
+    banned = {(0, 1), (1, 0), (5, 6), (6, 5)}
+    assert not banned & set(plan.topology.graph.edges())
+
+
+def test_single_tenant_jobset_matches_single_job_shape():
+    js = JobSet(n=8, tenants=[
+        TenantJob(spec=VGG16, servers=tuple(range(8)), name="vgg16")])
+    plan = co_optimize_jobset(js, HW, rounds=2, mcmc_iters=20, seed=0)
+    assert set(plan.strategies) == {"vgg16"}
+    assert np.isfinite(plan.iter_time) and plan.iter_time > 0
+    assert plan.per_job["vgg16"] == pytest.approx(plan.iter_time)
+    assert max(plan.topology.out_degrees()) <= HW.degree
+
+
+# ---------------------------------------------------------------------------
+# JobSetController: admission, departure, union replanning
+# ---------------------------------------------------------------------------
+
+
+def test_admit_places_on_free_servers_and_replans(shared_plan):
+    ctrl = JobSetController(
+        _jobset(), hw=HW,
+        policy=ReoptPolicy.reactive(replan_latency=1e-3),
+        plan=shared_plan, seed=0,
+    )
+    free = ctrl.jobset.free_servers()
+    servers, pause = ctrl.admit(VGG16, 2, name="vgg", now=0.0)
+    assert set(servers) <= free and len(servers) == 2
+    assert ctrl.n_replans == 1 and pause == pytest.approx(1e-3)
+    assert "vgg" in ctrl.jobset.labels
+    # The replanned shared topology budgets rings for the new tenant too.
+    assert max(ctrl.topology.out_degrees()) <= HW.degree
+    total = ctrl.depart("vgg", now=10.0)
+    assert "vgg" not in ctrl.jobset.labels
+    assert ctrl.n_replans == 2 and total == pytest.approx(1e-3)
+
+
+def test_jobset_fail_forbids_pair_in_replanned_topology(shared_plan):
+    ctrl = JobSetController(
+        _jobset(), hw=HW,
+        policy=ReoptPolicy(on_failure=True, replan_latency=1e-3),
+        plan=shared_plan, seed=0,
+    )
+    ctrl.fail((0, 2), now=0.0)
+    assert ctrl.n_replans == 1
+    dead = {(0, 2), (2, 0)}
+    assert not dead & set(ctrl.topology.graph.edges())
+    assert not dead & set(ctrl.links())
+
+
+def test_run_online_jobset_reactive_beats_static_on_churn(shared_plan):
+    trace = (
+        TraceEvent(iteration=1, kind="arrive", job=MOE_16E, k=2, name="moe"),
+        TraceEvent(iteration=2, kind="fail", link=(0, 3)),
+        TraceEvent(iteration=3, kind="depart", name="bert"),
+    )
+    static = run_online_jobset(
+        _jobset(), HW, policy=ReoptPolicy.never(), trace=trace,
+        n_iters=5, seed=0, plan=shared_plan)
+    reactive = run_online_jobset(
+        _jobset(), HW, policy=ReoptPolicy.reactive(replan_latency=1e-3),
+        trace=trace, n_iters=5, seed=0, plan=shared_plan)
+    assert static.n_replans == 0
+    assert reactive.n_replans >= 1
+    assert len(static.iter_times) == len(reactive.iter_times) == 5
+    assert reactive.total_time < static.total_time
+    assert set(static.job_times) == {"dlrm", "bert", "moe"}
+
+
+def test_failure_after_last_departure_keeps_incumbent(shared_plan):
+    """Regression: a reactive controller whose jobset emptied must not try
+    to optimize an empty set when a fiber later dies."""
+    ctrl = JobSetController(
+        _jobset(), hw=HW, policy=ReoptPolicy.reactive(replan_latency=1e-3),
+        plan=shared_plan, seed=0,
+    )
+    ctrl.depart("dlrm", now=0.0)
+    ctrl.depart("bert", now=1.0)
+    assert not ctrl.jobset.tenants
+    pause = ctrl.fail((0, 1), now=2.0)  # must not raise
+    assert pause == 0.0
+    assert (0, 1) in ctrl.dead
+
+
+def test_admit_rejects_zero_servers(shared_plan):
+    ctrl = JobSetController(
+        _jobset(), hw=HW, policy=ReoptPolicy.never(), plan=shared_plan,
+    )
+    with pytest.raises(ValueError, match="k >= 1"):
+        ctrl.admit(VGG16, 0, name="vgg")
+
+
+def test_per_node_pack_respects_degree_one():
+    """Regression: at degree=1 the reserved connectivity ring must be
+    dropped, not allowed to overflow the single port."""
+    from repro.core.topology_finder import topology_finder
+
+    dem = remap_demand(job_demand(VGG16, 3), (0, 1, 2), 6)
+    topo = topology_finder(dem, 1, pack="per_node")
+    assert max(topo.out_degrees()) <= 1
+
+
+def test_midrun_failure_recorded_even_when_jobset_empties():
+    """Regression: a frac>0 failure queued in the same iteration as the last
+    tenant's departure must still land on the fabric."""
+    js = JobSet(n=6, tenants=[
+        TenantJob(spec=VGG16, servers=(0, 1, 2), name="vgg")])
+    plan = co_optimize_jobset(js, HW, rounds=1, mcmc_iters=8, seed=0)
+    trace = (
+        TraceEvent(iteration=1, kind="depart", name="vgg"),
+        TraceEvent(iteration=1, kind="fail", link=(0, 1), frac=0.5),
+    )
+    r = run_online_jobset(js, HW, policy=ReoptPolicy.never(), trace=trace,
+                          n_iters=3, seed=0, plan=plan)
+    assert r.n_failures == 1
+    assert r.iter_times[1] == 0.0  # empty iteration is instantaneous
+
+
+def test_overhang_uses_last_applied_pause(shared_plan):
+    """Regression: the pause tail charged past the last task finish must be
+    the last *applied* PlanUpdate's pause, not reconstructed from a log that
+    may end in a suppressed record."""
+    ctrl = JobSetController(
+        _jobset(), hw=HW,
+        policy=ReoptPolicy(on_failure=True, fiber_move_latency=1e-4),
+        plan=shared_plan, seed=0,
+    )
+    ctrl.fail((0, 2), now=0.0)
+    applied = [r for r in ctrl.log if r.replanned][-1]
+    assert ctrl.last_pause == pytest.approx(1e-4 * applied.edges_moved)
+    # A suppressed trigger appends a log record but leaves last_pause.
+    ctrl.policy = ReoptPolicy(on_failure=True, fiber_move_latency=1e-4,
+                              min_interval=100.0)
+    ctrl.fail((1, 3), now=0.5)
+    assert not ctrl.log[-1].replanned
+    assert ctrl.last_pause == pytest.approx(1e-4 * applied.edges_moved)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: churn-proportional replan cost
+# ---------------------------------------------------------------------------
+
+
+def test_edge_churn_counts_multiset_difference(shared_plan):
+    topo = shared_plan.topology
+    assert edge_churn(topo, topo) == 0
+    from repro.core.topology_finder import remove_pair
+
+    pair = next(iter(topo.graph.edges()))[:2]
+    degraded = remove_pair(topo, (min(pair), max(pair)))
+    # Degrading removes edges, so old -> degraded moves nothing new in...
+    assert edge_churn(topo, degraded) == 0
+    # ...but restoring them means re-patching exactly the removed fibers.
+    assert edge_churn(degraded, topo) == topo.graph.number_of_edges() - \
+        degraded.graph.number_of_edges()
+
+
+def test_churn_proportional_pause_prices_per_moved_fiber(shared_plan):
+    per_fiber = 1e-4
+    ctrl = JobSetController(
+        _jobset(), hw=HW,
+        policy=ReoptPolicy(on_failure=True, fiber_move_latency=per_fiber),
+        plan=shared_plan, seed=0,
+    )
+    pause = ctrl.fail((0, 2), now=0.0)
+    assert ctrl.n_replans == 1
+    rec = [r for r in ctrl.log if r.replanned][-1]
+    assert rec.edges_moved == ctrl.total_edges_moved
+    assert pause == pytest.approx(per_fiber * rec.edges_moved)
+    if rec.est_after <= rec.est_before:  # adopted a new plan
+        assert rec.edges_moved >= 0
+    # Fiber accounting surfaces in ScenarioResult via PlanUpdate.
+    from repro.core.simengine import PlanUpdate
+
+    eng = SimEngine(HW)
+
+    class Once:
+        fired = False
+
+    from repro.core.simengine import ScenarioObserver
+
+    class Swap(ScenarioObserver):
+        def on_failure(self, view, link):
+            if Once.fired:
+                return None
+            Once.fired = True
+            return PlanUpdate(links=dict(view.links), pause=0.0,
+                              edges_moved=7)
+
+    r = eng.run(Scenario(
+        links={(0, 1): 100.0, (0, 2): 100.0, (2, 1): 100.0},
+        jobs=[_flow_job("j", 0.0)],
+        failures=(LinkFailure(time=1.0, link=(0, 2)),),
+        n=3,
+    ), observer=Swap())
+    assert r.edges_moved == 7
+
+
+def test_fiber_move_cost_prices_usd_per_moved_fiber():
+    from repro.core.costmodel import (
+        EXPECTED_FIBER,
+        FIBER_MOVE_WEAR,
+        PATCH_PANEL_PORT,
+        fiber_move_cost,
+    )
+
+    assert fiber_move_cost(0) == 0.0
+    one = fiber_move_cost(1)
+    assert one == pytest.approx(
+        FIBER_MOVE_WEAR * (2 * PATCH_PANEL_PORT + EXPECTED_FIBER))
+    assert fiber_move_cost(10) == pytest.approx(10 * one)
+
+
+def test_flat_pause_still_default(shared_plan):
+    """fiber_move_latency=None keeps the pre-churn flat replan_latency."""
+    ctrl = JobSetController(
+        _jobset(), hw=HW,
+        policy=ReoptPolicy(on_failure=True, replan_latency=2e-3),
+        plan=shared_plan, seed=0,
+    )
+    pause = ctrl.fail((0, 2), now=0.0)
+    assert pause == pytest.approx(2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: adaptive hysteresis (benefit-vs-cost gate + backoff)
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_gate_skips_unprofitable_replans(shared_plan):
+    # An enormous per-fiber price makes every replan unprofitable; the gate
+    # must skip (no pause, no plan swap) and back off the interval.
+    ctrl = JobSetController(
+        _jobset(), hw=HW,
+        policy=ReoptPolicy(on_failure=True, fiber_move_latency=1e6,
+                           adaptive=True),
+        plan=shared_plan, seed=0,
+    )
+    before = ctrl.topology
+    pause = ctrl.fail((0, 2), now=0.0)
+    assert pause == 0.0
+    assert ctrl.n_replans == 0
+    skipped = [r for r in ctrl.log if not r.replanned]
+    assert skipped and np.isfinite(skipped[-1].est_after)
+    assert ctrl._adaptive_interval > 0  # backed off
+    # The incumbent (degraded in place) is still the live plan.
+    assert ctrl.topology.graph.number_of_edges() <= \
+        before.graph.number_of_edges()
+
+
+def test_adaptive_gate_adopts_profitable_replans(shared_plan):
+    # Free fiber moves: any probed win is profitable, gate must not block.
+    ctrl = JobSetController(
+        _jobset(), hw=HW,
+        policy=ReoptPolicy(on_failure=True, fiber_move_latency=0.0,
+                           adaptive=True),
+        plan=shared_plan, seed=0,
+    )
+    ctrl.fail((0, 2), now=0.0)
+    assert ctrl.n_replans == 1
+    assert ctrl._adaptive_interval == ctrl.policy.min_interval  # reset
+
+
+def test_adaptive_backoff_suppresses_next_trigger(shared_plan):
+    ctrl = JobSetController(
+        _jobset(), hw=HW,
+        policy=ReoptPolicy(on_failure=True, fiber_move_latency=1e6,
+                           adaptive=True),
+        plan=shared_plan, seed=0,
+    )
+    ctrl.fail((0, 2), now=0.0)  # skipped, backs off
+    gate = ctrl._adaptive_interval
+    assert gate > 0
+    n_log = len(ctrl.log)
+    ctrl.fail((1, 3), now=gate / 2)  # inside the backoff window
+    assert ctrl.n_replans == 0
+    assert len(ctrl.log) == n_log + 1 and not ctrl.log[-1].replanned
+
+
+# ---------------------------------------------------------------------------
+# Satellite: incremental degradation probe
+# ---------------------------------------------------------------------------
+
+
+def test_probe_cache_reused_until_hot_link_touched(shared_plan):
+    ctrl = JobSetController(
+        _jobset(), hw=HW, policy=ReoptPolicy.never(), plan=shared_plan,
+    )
+    est = ctrl.estimated_iter_time()
+    probes = ctrl.n_full_probes
+    assert probes == 1
+    assert ctrl.estimated_iter_time() == est  # cached, no new sim
+    assert ctrl.n_full_probes == probes
+    # A pair carrying no planned traffic (two idle servers) keeps the cache.
+    ctrl.fail((10, 11), now=0.0)
+    assert ctrl.estimated_iter_time() == est
+    assert ctrl.n_full_probes == probes
+    # A pair inside the hot set forces a full re-probe.
+    hot = next(iter(ctrl._probe_cache[1]))
+    ctrl.fail(hot, now=1.0)
+    est2 = ctrl.estimated_iter_time()
+    assert ctrl.n_full_probes == probes + 1
+    assert est2 >= est
+
+
+def test_probe_cache_invalidated_by_admission(shared_plan):
+    ctrl = JobSetController(
+        _jobset(), hw=HW, policy=ReoptPolicy.never(), plan=shared_plan,
+    )
+    ctrl.estimated_iter_time()
+    probes = ctrl.n_full_probes
+    ctrl.admit(VGG16, 2, name="vgg", now=0.0)  # never-policy: no replan
+    ctrl.estimated_iter_time()
+    assert ctrl.n_full_probes == probes + 1  # demand changed -> fresh probe
