@@ -1,0 +1,231 @@
+"""Planner speed: reference vs compiled plan evaluator.
+
+The alternating loop (§4.1) evaluates hundreds of (strategy, topology)
+candidates per replan; the online layer re-enters it on every
+failure/arrival, so planner latency bounds how often TopoOpt can react.
+This benchmark measures the compiled evaluator (:mod:`repro.core.planeval`)
+against the reference :func:`~repro.core.netsim.topoopt_comm_time` path:
+
+* ``planner_candidate_evals`` — raw candidate pricing throughput for the
+  multi-tenant objective: reference ``evaluate_jobset`` (union + full fluid
+  walk per candidate) vs the incremental ``JobSetEvaluator.propose``
+  (cached per-tenant link-load vectors, one ``total - old + new`` swap).
+* ``planner_alternating`` — end-to-end ``alternating_optimize`` wall time,
+  ``compiled=False`` vs ``compiled=True``, at a realistic MCMC budget
+  (fixed seeds; the two runs return identical plans, which is asserted).
+* ``planner_replan`` — end-to-end replan latency of the multi-tenant
+  ``co_optimize_jobset`` (the call every online failure/arrival pays).
+
+``derived`` reports the speedups plus the max relative compiled-vs-
+reference disagreement over the sampled candidates (must be <= 1e-9).  A
+perf record lands in ``experiments/bench/BENCH_planner.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+import time
+
+from repro.core.alternating import alternating_optimize, co_optimize_jobset
+from repro.core.netsim import HardwareSpec
+from repro.core.planeval import JobSetEvaluator, plan_evaluator
+from repro.core.strategy_search import (
+    Strategy,
+    _propose,
+    default_strategy,
+    evaluate_jobset,
+)
+from repro.core.topology_finder import topology_finder
+from repro.core.workloads import BERT, DLRM, MOE_16E, JobSet, TenantJob
+
+DEGREE = 4
+PERF_RECORD = os.path.join("experiments", "bench", "BENCH_planner.json")
+
+
+def _jobset(n: int) -> JobSet:
+    third = n // 3
+    return JobSet(n=n, tenants=[
+        TenantJob(spec=DLRM, servers=tuple(range(0, third)), name="dlrm"),
+        TenantJob(spec=BERT, servers=tuple(range(third, 2 * third)),
+                  name="bert"),
+        TenantJob(spec=MOE_16E, servers=tuple(range(2 * third, n)),
+                  name="moe"),
+    ])
+
+
+def _candidate_moves(js: JobSet, n_moves: int, seed: int = 0):
+    """A fixed stream of single-tenant MCMC moves (tenant label + proposed
+    strategy), shared verbatim by both pricing paths."""
+    rng = random.Random(seed)
+    current = {t.label: default_strategy(t.spec) for t in js.tenants}
+    moves = []
+    for _ in range(n_moves):
+        t = js.tenants[rng.randrange(len(js.tenants))]
+        cand = _propose(current[t.label], t.spec, t.k, rng)
+        moves.append((t.label, cand))
+    return current, moves
+
+
+def _bench_candidate_evals(n: int, n_moves: int, hw: HardwareSpec) -> dict:
+    js = _jobset(n)
+    init, moves = _candidate_moves(js, n_moves)
+    topo = topology_finder(js.union_for(init), hw.degree, pack="per_node")
+
+    # Warm both paths' demand caches so the measurement isolates pricing
+    # (demand construction is identical work on both sides).  The vector
+    # cache must hold every warmed move or the timed loop re-derives
+    # evicted entries.
+    cache: dict = {}
+    jse = JobSetEvaluator(js, topo, hw, demand_cache=cache,
+                          vector_cache_size=n_moves + len(js.tenants) + 1)
+    jse.set_strategies(init)
+    for label, cand in moves:
+        jse.tenant_loads(label, cand)
+    evaluate_jobset(init, js, topo, hw, _demand_cache=cache)
+
+    max_rel = 0.0
+    t0 = time.perf_counter()
+    ref_objs = []
+    for label, cand in moves:
+        state = dict(init)
+        state[label] = cand
+        ref_objs.append(
+            evaluate_jobset(state, js, topo, hw, _demand_cache=cache)[0]
+        )
+    t_ref = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    fast_objs = [jse.propose(label, cand)[0] for label, cand in moves]
+    t_fast = time.perf_counter() - t0
+
+    for r, f in zip(ref_objs, fast_objs):
+        max_rel = max(max_rel, abs(f - r) / max(abs(r), 1e-30))
+    assert max_rel <= 1e-9, f"compiled disagrees with reference: {max_rel}"
+
+    return dict(
+        name=f"planner_candidate_evals_n{n}",
+        us_per_call=t_fast / n_moves * 1e6,
+        derived=(
+            f"speedup={t_ref / t_fast:.1f}x;"
+            f"ref_evals_per_s={n_moves / t_ref:.0f};"
+            f"compiled_evals_per_s={n_moves / t_fast:.0f};"
+            f"max_rel_err={max_rel:.1e}"
+        ),
+        speedup=t_ref / t_fast,
+        ref_evals_per_s=n_moves / t_ref,
+        compiled_evals_per_s=n_moves / t_fast,
+        max_rel_err=max_rel,
+    )
+
+
+def _bench_alternating(n: int, rounds: int, iters: int,
+                       hw: HardwareSpec, reps: int = 2) -> dict:
+    # Min over repetitions: the standard noise-robust latency estimator
+    # (scheduler jitter only ever adds time).
+    t_ref = t_fast = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        ref = alternating_optimize(DLRM, n, hw, rounds=rounds,
+                                   mcmc_iters=iters, seed=0, compiled=False)
+        t_ref = min(t_ref, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fast = alternating_optimize(DLRM, n, hw, rounds=rounds,
+                                    mcmc_iters=iters, seed=0, compiled=True)
+        t_fast = min(t_fast, time.perf_counter() - t0)
+    identical = (
+        fast.strategy == ref.strategy
+        and abs(fast.iter_time - ref.iter_time) <= 1e-9 * ref.iter_time
+    )
+    assert identical, "compiled alternating_optimize changed the plan"
+    return dict(
+        name=f"planner_alternating_n{n}",
+        us_per_call=t_fast * 1e6,
+        derived=(
+            f"speedup={t_ref / t_fast:.1f}x;"
+            f"ref_s={t_ref:.2f};compiled_s={t_fast:.2f};identical=True"
+        ),
+        speedup=t_ref / t_fast,
+        ref_s=t_ref,
+        compiled_s=t_fast,
+        identical=identical,
+    )
+
+
+def _bench_replan(n: int, rounds: int, iters: int, hw: HardwareSpec,
+                  reps: int = 2) -> dict:
+    js = _jobset(n)
+    t_ref = t_fast = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        ref = co_optimize_jobset(js, hw, rounds=rounds, mcmc_iters=iters,
+                                 seed=1, compiled=False)
+        t_ref = min(t_ref, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fast = co_optimize_jobset(js, hw, rounds=rounds, mcmc_iters=iters,
+                                  seed=1, compiled=True)
+        t_fast = min(t_fast, time.perf_counter() - t0)
+    identical = (
+        fast.strategies == ref.strategies
+        and abs(fast.iter_time - ref.iter_time) <= 1e-9 * ref.iter_time
+    )
+    assert identical, "compiled co_optimize_jobset changed the plan"
+    return dict(
+        name=f"planner_replan_n{n}",
+        us_per_call=t_fast * 1e6,
+        derived=(
+            f"speedup={t_ref / t_fast:.1f}x;"
+            f"ref_s={t_ref:.2f};compiled_s={t_fast:.2f};identical=True"
+        ),
+        speedup=t_ref / t_fast,
+        ref_s=t_ref,
+        compiled_s=t_fast,
+        identical=identical,
+    )
+
+
+def run(smoke: bool = False) -> list[dict]:
+    hw = HardwareSpec(link_bandwidth=12.5e9, degree=DEGREE)
+    if smoke:
+        n_js, n_moves = 12, 150
+        n_alt, rounds, iters = 16, 2, 120
+    else:
+        n_js, n_moves = 24, 600
+        n_alt, rounds, iters = 32, 2, 400
+    rows = [
+        _bench_candidate_evals(n_js, n_moves, hw),
+        _bench_alternating(n_alt, rounds, iters, hw),
+        _bench_replan(n_js, rounds, max(iters // 2, 60), hw),
+    ]
+    _write_perf_record(rows, smoke=smoke)
+    return rows
+
+
+def _write_perf_record(rows: list[dict], smoke: bool) -> None:
+    """BENCH_planner.json: the headline numbers CI tracks over time."""
+    os.makedirs(os.path.dirname(PERF_RECORD), exist_ok=True)
+    by_name = {r["name"].rsplit("_n", 1)[0]: r for r in rows}
+    record = dict(
+        bench="planner",
+        smoke=smoke,
+        candidate_eval_speedup=by_name["planner_candidate_evals"]["speedup"],
+        compiled_evals_per_s=(
+            by_name["planner_candidate_evals"]["compiled_evals_per_s"]
+        ),
+        max_rel_err=by_name["planner_candidate_evals"]["max_rel_err"],
+        alternating_speedup=by_name["planner_alternating"]["speedup"],
+        replan_speedup=by_name["planner_replan"]["speedup"],
+        results_identical=(
+            by_name["planner_alternating"]["identical"]
+            and by_name["planner_replan"]["identical"]
+        ),
+        wall_us=sum(r["us_per_call"] for r in rows),
+    )
+    with open(PERF_RECORD, "w") as f:
+        json.dump(record, f, indent=1)
+
+
+if __name__ == "__main__":
+    for row in run(smoke=True):
+        print(row["name"], row["derived"])

@@ -21,6 +21,7 @@ BENCHES = [
     ("reconfig", "Fig. 17 reconfiguration latency"),
     ("online", "Online re-optimization: static vs reactive replanning"),
     ("multitenant", "Multi-tenant shared fabric: JobSet churn + fairness"),
+    ("planner", "Compiled plan evaluator: reference vs compiled planner speed"),
     ("roofline", "Roofline dry-run terms"),
 ]
 

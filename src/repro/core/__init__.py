@@ -36,6 +36,7 @@ from .online import (
     run_online,
     run_online_jobset,
 )
+from .planeval import JobSetEvaluator, LRUCache, PlanEvaluator, plan_evaluator
 from .routing import bandwidth_tax, coin_change_mod, path_length_stats
 from .select_perms import coin_change_diameter, select_permutations, theorem1_bound
 from .simengine import DeadlineFairness, FairnessPolicy, WeightedFairness
@@ -52,8 +53,11 @@ __all__ = [
     "HardwareSpec",
     "JobSet",
     "JobSetController",
+    "JobSetEvaluator",
     "JobSetPlan",
     "JobSpec",
+    "LRUCache",
+    "PlanEvaluator",
     "PAPER_JOBS",
     "ReoptController",
     "ReoptPolicy",
@@ -79,6 +83,7 @@ __all__ = [
     "mcmc_search_jobset",
     "path_length_stats",
     "place_arrival",
+    "plan_evaluator",
     "prime_coprimes",
     "remap_demand",
     "remove_pair",

@@ -35,8 +35,10 @@ from dataclasses import dataclass, field
 
 from .demand import TrafficDemand
 from .netsim import HardwareSpec, compute_time, iteration_time, topoopt_comm_time
+from .planeval import LRUCache
 from .simengine import SimEngine
 from .strategy_search import (
+    DEMAND_CACHE_SIZE,
     JobSetSearchResult,
     SearchResult,
     Strategy,
@@ -97,11 +99,14 @@ def evaluate(
     job: JobSpec,
     hw: HardwareSpec,
     overlap: float = 0.0,
+    compiled: bool = True,
 ) -> float:
     """Iteration time of (strategy, topology) — thin shim over
-    :meth:`repro.core.simengine.SimEngine.iteration_time`."""
+    :meth:`repro.core.simengine.SimEngine.iteration_time` (compiled plan
+    evaluator by default; ``compiled=False`` forces the reference fluid
+    path)."""
     demand = strategy.demand(job, topo.n)
-    return SimEngine(hw).iteration_time(
+    return SimEngine(hw, compiled=compiled).iteration_time(
         topo,
         demand,
         flops_per_iteration=job.flops_per_sample * job.batch_per_gpu * topo.n,
@@ -121,6 +126,8 @@ def alternating_optimize(
     warm_topology: Topology | None = None,
     warm_strategy: Strategy | None = None,
     forbidden: tuple[tuple[int, int], ...] = (),
+    compiled: bool = True,
+    proposals_per_step: int = 1,
 ) -> CoOptResult:
     """TopoOpt's off-line co-optimization loop.
 
@@ -133,6 +140,11 @@ def alternating_optimize(
     the disruption are kept (less physical churn on the patch panel).
     Cold calls (all three defaults) are byte-identical to the offline PR-1
     behaviour.
+
+    ``compiled`` / ``proposals_per_step`` select the candidate-pricing path
+    of the inner MCMC (:func:`~repro.core.strategy_search.mcmc_search`):
+    the compiled evaluator is the default and must match the
+    ``compiled=False`` reference at fixed seeds.
     """
     warm = warm_topology is not None
     topo = (
@@ -149,13 +161,15 @@ def alternating_optimize(
         res: SearchResult = mcmc_search(
             job, topo, hw, iters=mcmc_iters, overlap=overlap,
             seed=seed + r, init=strategy_init,
+            compiled=compiled, proposals_per_step=proposals_per_step,
         )
         # Comm x Topo plane: rebuild the topology for the found demand.
         new_topo = topology_finder(
             res.demand, hw.degree, forbidden=forbidden,
             warm_start=topo if warm else None,
         )
-        t_new = evaluate(res.strategy, new_topo, job, hw, overlap)
+        t_new = evaluate(res.strategy, new_topo, job, hw, overlap,
+                         compiled=compiled)
         round_times.append(t_new)
 
         if best is None or t_new < best.iter_time:
@@ -188,6 +202,8 @@ def co_optimize_jobset(
     warm_topology: Topology | None = None,
     warm_strategies: dict[str, Strategy] | None = None,
     forbidden: tuple[tuple[int, int], ...] = (),
+    compiled: bool = True,
+    proposals_per_step: int = 1,
 ) -> JobSetPlan:
     """Multi-tenant alternating optimization: co-optimize every resident
     job's parallelization strategy against one *shared* topology.
@@ -202,10 +218,16 @@ def co_optimize_jobset(
     placements, and idle servers keep a connectivity ring for future
     arrivals.  ``warm_topology`` / ``warm_strategies`` / ``forbidden``
     mirror the single-job warm-start contract for online re-optimization.
+
+    One LRU-bounded per-tenant demand cache is shared across every round's
+    MCMC and the final pricing (the caches used to be rebuilt per round);
+    ``compiled`` / ``proposals_per_step`` select the candidate-pricing path
+    exactly as in :func:`alternating_optimize`.
     """
     if not jobset.tenants:
         raise ValueError("co_optimize_jobset needs at least one tenant")
     warm = warm_topology is not None
+    demand_cache = LRUCache(DEMAND_CACHE_SIZE)
 
     init: dict[str, Strategy] = {
         t.label: (warm_strategies or {}).get(t.label) or default_strategy(t.spec)
@@ -227,13 +249,16 @@ def co_optimize_jobset(
         res: JobSetSearchResult = mcmc_search_jobset(
             jobset, topo, hw, iters=mcmc_iters, overlap=overlap,
             seed=seed + r, init=strategy_init,
+            compiled=compiled, proposals_per_step=proposals_per_step,
+            demand_cache=demand_cache,
         )
         new_topo = topology_finder(
             res.demand, hw.degree, forbidden=forbidden,
             warm_start=topo if warm else None, pack="per_node",
         )
         t_new, union, per_job = evaluate_jobset(
-            res.strategies, jobset, new_topo, hw, overlap
+            res.strategies, jobset, new_topo, hw, overlap,
+            _demand_cache=demand_cache, compiled=compiled,
         )
         round_times.append(t_new)
 

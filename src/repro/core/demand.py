@@ -67,21 +67,40 @@ class TrafficDemand:
             self.mp[src, dst] += nbytes
 
     def add_all_to_all(self, members: Sequence[int], nbytes_per_pair: float) -> None:
-        for i in members:
-            for j in members:
-                if i != j:
-                    self.mp[i, j] += nbytes_per_pair
+        members = list(members)
+        if len(set(members)) != len(members):
+            # Repeated members accumulate per occurrence; keep loop semantics.
+            for i in members:
+                for j in members:
+                    if i != j:
+                        self.mp[i, j] += nbytes_per_pair
+            return
+        idx = np.asarray(members, dtype=np.int64)
+        if idx.size <= 1:
+            return
+        # One addition per off-diagonal cell — same arithmetic as the loop.
+        block = self.mp[np.ix_(idx, idx)]
+        diag = block.diagonal().copy()
+        block += nbytes_per_pair
+        np.fill_diagonal(block, diag)
+        self.mp[np.ix_(idx, idx)] = block
 
     def add_broadcast(self, src: int, dsts: Iterable[int], nbytes: float) -> None:
         """One-to-many MP pattern (e.g. DLRM embedding activations out)."""
-        for j in dsts:
-            if j != src:
+        targets = [j for j in dsts if j != src]
+        if len(set(targets)) == len(targets):
+            self.mp[src, targets] += nbytes  # one add per cell, as the loop
+        else:
+            for j in targets:
                 self.mp[src, j] += nbytes
 
     def add_incast(self, srcs: Iterable[int], dst: int, nbytes: float) -> None:
         """Many-to-one MP pattern (e.g. DLRM embedding gradients back)."""
-        for i in srcs:
-            if i != dst:
+        sources = [i for i in srcs if i != dst]
+        if len(set(sources)) == len(sources):
+            self.mp[sources, dst] += nbytes
+        else:
+            for i in sources:
                 self.mp[i, dst] += nbytes
 
 
@@ -195,8 +214,19 @@ def dlrm_demand(
     ``table_hosts`` with one-to-many broadcast of looked-up rows and
     many-to-one incast of their gradients."""
     d = data_parallel_demand(n, dense_param_bytes)
+    hosts = list(table_hosts)
+    if len(set(hosts)) == len(hosts):
+        # Vectorized build (the strategy-search hot path): every touched
+        # cell starts at zero, so one row add + one column add + a diagonal
+        # reset reproduces the per-host loop's values exactly.
+        idx = np.asarray(hosts, dtype=np.int64)
+        if idx.size:
+            d.mp[idx, :] += activation_bytes_per_host
+            d.mp[:, idx] += activation_bytes_per_host
+            d.mp[idx, idx] = 0.0
+        return d
     everyone = range(n)
-    for h in table_hosts:
+    for h in hosts:
         d.add_broadcast(h, everyone, activation_bytes_per_host)
         d.add_incast(everyone, h, activation_bytes_per_host)
     return d

@@ -48,9 +48,33 @@ def _ring_bytes_per_link(group_bytes: float, k: int) -> float:
     return 2.0 * (k - 1) / k * group_bytes
 
 
-def mp_flows(demand: TrafficDemand) -> list[tuple[int, int, float]]:
+class Flows:
+    """A demand's MP flows as parallel arrays (``src``, ``dst``,
+    ``nbytes``) — no per-element tuple materialization.  Iterating yields
+    ``(src, dst, nbytes)`` triples for legacy consumers."""
+
+    __slots__ = ("src", "dst", "nbytes")
+
+    def __init__(self, src: np.ndarray, dst: np.ndarray, nbytes: np.ndarray):
+        self.src = src
+        self.dst = dst
+        self.nbytes = nbytes
+
+    def __len__(self) -> int:
+        return int(self.src.size)
+
+    def __iter__(self):
+        return zip(self.src.tolist(), self.dst.tolist(), self.nbytes.tolist())
+
+    @property
+    def total(self) -> float:
+        return float(self.nbytes.sum())
+
+
+def mp_flows(demand: TrafficDemand) -> Flows:
+    """Nonzero MP entries, vectorized (one ``np.nonzero`` + one gather)."""
     srcs, dsts = np.nonzero(demand.mp)
-    return [(int(s), int(t), float(demand.mp[s, t])) for s, t in zip(srcs, dsts)]
+    return Flows(srcs, dsts, demand.mp[srcs, dsts])
 
 
 def topoopt_comm_time(
@@ -61,7 +85,28 @@ def topoopt_comm_time(
     AllReduce bytes are spread over each group's rings (multi-ring
     load-balancing, §6); MP bytes follow the routing table with host-based
     forwarding (bandwidth tax).  Both share the physical links.
+
+    This is the *reference* implementation.  The search loops run on the
+    compiled fast path (:func:`repro.core.planeval.plan_evaluator`), which
+    must agree with this function to 1e-9 relative — keep the two in sync.
     """
+    loads, flows, routing = _reference_loads(topo, demand)
+    worst = _reference_worst(topo, loads, hw)
+    tax = bandwidth_tax(flows, routing) if flows else 1.0
+    return {"comm_time": worst, "bandwidth_tax": tax}
+
+
+def reference_comm_time(
+    topo: Topology, demand: TrafficDemand, hw: HardwareSpec
+) -> float:
+    """The ``comm_time`` of :func:`topoopt_comm_time`, bit-identical,
+    without paying for the bandwidth tax — the search loops' reference
+    objective (and the compiled path's tie-breaking authority)."""
+    loads, _, _ = _reference_loads(topo, demand)
+    return _reference_worst(topo, loads, hw)
+
+
+def _reference_loads(topo: Topology, demand: TrafficDemand):
     loads: dict[tuple[int, int], float] = {}
 
     # AllReduce traffic on its rings (chunked across rings).
@@ -84,7 +129,10 @@ def topoopt_comm_time(
     mp_loads = link_loads(topo.graph, flows, routing)
     for link, nbytes in mp_loads.items():
         loads[link] = loads.get(link, 0.0) + nbytes
+    return loads, flows, routing
 
+
+def _reference_worst(topo: Topology, loads, hw: HardwareSpec) -> float:
     # Parallel links between the same pair share the load.
     n_par: dict[tuple[int, int], int] = {}
     for a, b in topo.graph.edges():
@@ -93,37 +141,54 @@ def topoopt_comm_time(
     for link, nbytes in loads.items():
         par = max(1, n_par.get(link, 1))
         worst = max(worst, nbytes / (par * hw.link_bandwidth))
-
-    tax = bandwidth_tax(flows, routing) if flows else 1.0
-    return {"comm_time": worst, "bandwidth_tax": tax}
+    return worst
 
 
 def _routing_with_fallback(topo: Topology, flows) -> "RoutingTable":
-    from .routing import RoutingTable
+    """Routing table covering every flow pair: the planned table, extended
+    with shortest-path fallbacks for pairs the plan never routed (MCMC
+    probing placements on a fixed topology).
 
-    missing = [
-        (s, t) for s, t, _ in flows if not topo.routing.get(s, t)
-    ]
-    if not missing:
-        return topo.routing
-    import networkx as nx
-
+    Fallback routes persist on the topology (``topo._sp_cache``) together
+    with one memoized *merged* table (``topo._merged_routing``) — on a full
+    cache hit nothing is copied, the memoized table is returned as-is, and
+    the planned table is returned untouched when no pair needs a fallback.
+    """
+    routing = topo.routing
     cache = getattr(topo, "_sp_cache", None)
+    missing_any = False
+    need: list[tuple[int, int]] = []
+    for s, t, _ in flows:
+        if routing.get(s, t):
+            continue
+        missing_any = True
+        if cache is None or (s, t) not in cache:
+            need.append((s, t))
+    if not missing_any:
+        return routing
     if cache is None:
+        from .routing import RoutingTable
+
         cache = {}
         topo._sp_cache = cache
-    merged = RoutingTable(routes=dict(topo.routing.routes))
-    simple = nx.DiGraph(topo.graph)
-    for s, t in missing:
-        if (s, t) in cache:
-            merged.routes[(s, t)] = cache[(s, t)]
-            continue
-        try:
-            path = tuple(nx.shortest_path(simple, s, t))
-            merged.add(s, t, path)
-            cache[(s, t)] = merged.routes[(s, t)]
-        except (nx.NetworkXNoPath, nx.NodeNotFound):
-            cache[(s, t)] = []
+        topo._merged_routing = RoutingTable(routes=dict(routing.routes))
+    merged = topo._merged_routing
+    if need:
+        import networkx as nx
+
+        simple = getattr(topo, "_simple_digraph", None)
+        if simple is None:
+            simple = nx.DiGraph(topo.graph)
+            topo._simple_digraph = simple
+        for s, t in need:
+            if (s, t) in cache:
+                continue  # duplicate pair in this flow list
+            try:
+                path = tuple(nx.shortest_path(simple, s, t))
+                merged.add(s, t, path)
+                cache[(s, t)] = merged.routes[(s, t)]
+            except (nx.NetworkXNoPath, nx.NodeNotFound):
+                cache[(s, t)] = []
     return merged
 
 

@@ -162,6 +162,10 @@ class ReoptPolicy:
     # incumbent is already good, we only adapt it).
     rounds: int = 2
     mcmc_iters: int = 40
+    # Candidate pricing inside the replan optimizer: the compiled plan
+    # evaluator (repro.core.planeval) by default; False pins the reference
+    # topoopt_comm_time path (fixed seeds must agree between the two).
+    compiled: bool = True
 
     @classmethod
     def never(cls) -> "ReoptPolicy":
@@ -292,6 +296,7 @@ class ReoptController(ScenarioObserver):
                 mcmc_iters=max(self.policy.mcmc_iters, 40),
                 seed=self.seed,
                 forbidden=tuple(self.dead),
+                compiled=self.policy.compiled,
             )
         return alternating_optimize(
             self.job, self.n, self.hw,
@@ -301,6 +306,7 @@ class ReoptController(ScenarioObserver):
             warm_topology=self.topology,
             warm_strategy=self.strategy,
             forbidden=tuple(self.dead),
+            compiled=self.policy.compiled,
         )
 
     def ensure_plan(self) -> CoOptResult:
@@ -381,29 +387,41 @@ class ReoptController(ScenarioObserver):
         invalidates — when any planned hop has no live link: the engine
         detours such flows over links the plan never names, so the hot set
         cannot be known from the plan alone."""
-        loads: dict[tuple[int, int], float] = {}
+        # Vectorized hop accounting: encode every planned hop as a dense
+        # pair id, sum bytes with one bincount, and look capacities up only
+        # for the unique loaded links.
+        hop_a: list[np.ndarray] = []
+        hop_b: list[np.ndarray] = []
+        hop_bytes: list[np.ndarray] = []
         for j in jobs:
             for t in j.tasks:
-                if t.kind != "flow":
+                if t.kind != "flow" or len(t.route) < 2:
                     continue
-                for hop in zip(t.route[:-1], t.route[1:]):
-                    loads[hop] = loads.get(hop, 0.0) + t.nbytes
-        util: dict[tuple[int, int], float] = {}
-        finite_max = 0.0
-        for link, nbytes in loads.items():
-            cap = links.get(link)
-            if cap:
-                util[link] = nbytes / cap
-                finite_max = max(finite_max, util[link])
-            elif nbytes > 0:
-                return None  # detour-routed flow: hot set unknowable
-        if not util:
+                r = np.asarray(t.route, dtype=np.int64)
+                hop_a.append(r[:-1])
+                hop_b.append(r[1:])
+                hop_bytes.append(np.full(r.size - 1, t.nbytes))
+        if not hop_a:
             return frozenset()
-        thresh = self.policy.probe_slack * finite_max
+        a = np.concatenate(hop_a)
+        b = np.concatenate(hop_b)
+        ids = a * self.n + b
+        uniq, inv = np.unique(ids, return_inverse=True)
+        loads = np.bincount(inv, weights=np.concatenate(hop_bytes))
+        pairs = [(int(i) // self.n, int(i) % self.n) for i in uniq]
+        caps = np.asarray([links.get(p) or 0.0 for p in pairs])
+        alive = caps > 0
+        if np.any(~alive & (loads > 0)):
+            return None  # detour-routed flow: hot set unknowable
+        if not np.any(alive):
+            return frozenset()
+        util = np.zeros_like(loads)
+        util[alive] = loads[alive] / caps[alive]
+        thresh = self.policy.probe_slack * float(util.max())
         return frozenset(
-            (min(a, b), max(a, b))
-            for (a, b), u in util.items()
-            if u > thresh
+            (min(p), max(p))
+            for p, u, live in zip(pairs, util, alive)
+            if live and u > thresh
         )
 
     def estimated_iter_time(
@@ -654,6 +672,7 @@ class JobSetController(ReoptController):
                 mcmc_iters=max(self.policy.mcmc_iters, 40),
                 seed=self.seed,
                 forbidden=tuple(self.dead),
+                compiled=self.policy.compiled,
             )
         return co_optimize_jobset(
             self.jobset, self.hw,
@@ -663,6 +682,7 @@ class JobSetController(ReoptController):
             warm_topology=self.topology,
             warm_strategies=self.strategies(),
             forbidden=tuple(self.dead),
+            compiled=self.policy.compiled,
         )
 
     def _maybe_replan(self, now: float, trigger: str) -> PlanUpdate | None:

@@ -1,0 +1,606 @@
+"""Compiled plan evaluator — the alternating-optimization hot loop (§4.1).
+
+:func:`repro.core.netsim.topoopt_comm_time` is the *reference* fluid
+objective: per candidate it walks every AllReduce ring edge and every routed
+MP hop through Python dicts.  The alternating loop evaluates hundreds of
+(strategy, topology) candidates per replan, and the online layer
+(:mod:`repro.core.online`) re-enters it on every failure/arrival — so the
+reference path's per-candidate constant dominates end-to-end replan latency.
+
+This module compiles a fixed :class:`~repro.core.topology_finder.Topology`
+into flat NumPy structure arrays **once** and prices candidate demands
+against them in microseconds:
+
+* a growable *link-id table* — every directed node pair that can carry load
+  (physical graph edges, planned ring edges, routed hops) gets a dense id,
+  with per-link capacity ``parallel_links * link_bandwidth`` so the final
+  bottleneck max is one vectorized ``max(loads / cap)``;
+* per-AllReduce-group *ring-edge incidence* — the link ids of a group's
+  ring edges in exact reference walk order, so a group's load is one
+  ``np.add.at`` scatter instead of nested ring/edge loops;
+* a persistent *MP route cache* in CSR form — per source/dest pair the link
+  ids of its (fallback-completed) route hops, so a whole MP matrix prices
+  as one segment-gather + ``np.add.at``.
+
+**Bit-exactness.**  The full evaluation (:meth:`PlanEvaluator.loads` /
+:meth:`comm_time`) reproduces the reference *to the bit*, not merely to
+1e-9: shares are computed with the same expressions (``2(k-1)/k * bytes``
+then ``/ n_rings``; ``bytes / n_routes`` per route), scattered per
+*occurrence* in the same order the reference walks them (``np.add.at`` is
+documented unbuffered-sequential), AllReduce and MP accumulate in separate
+vectors merged with one elementwise add (mirroring the reference's two-dict
+merge), and the bottleneck uses the same ``load / (par * bandwidth)``
+division.  This matters because MCMC acceptance uses ``<=``: a move that
+leaves the objective mathematically unchanged must *tie exactly*, or
+fixed-seed chains diverge from the pre-compiled behaviour.
+
+On top of the per-demand path, :class:`JobSetEvaluator` makes the
+multi-tenant MCMC **incremental**: per-tenant cluster-level link-load
+vectors are cached, and a single-tenant move re-prices only
+``total - old_vector + new_vector`` instead of re-unioning and re-walking
+the whole JobSet.  :meth:`PlanEvaluator.loads_delta` is the single-job
+analogue (diff the moved demand's groups/MP entries against the incumbent
+load vector).  Incremental results carry ulp-level arithmetic lineage, so
+the search loops confirm near-boundary acceptance decisions on the
+bit-exact full evaluation (see ``_TIE_RTOL`` in
+:mod:`repro.core.strategy_search`).
+
+``tests/test_planeval.py`` pins compiled-vs-reference agreement over random
+topologies, demands, jobsets, and degraded fabrics.  Degradation helpers
+(:func:`~repro.core.topology_finder.remove_pair` /
+:func:`~repro.core.topology_finder.repair_topology`) return *new* Topology
+objects, so their evaluators recompile from scratch — a stale cache cannot
+survive a fabric change.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+from .demand import TrafficDemand, remap_demand
+from .netsim import (
+    HardwareSpec,
+    _routing_with_fallback,
+    compute_time,
+    iteration_time,
+)
+
+__all__ = [
+    "LRUCache",
+    "PlanEvaluator",
+    "JobSetEvaluator",
+    "plan_evaluator",
+]
+
+
+class LRUCache:
+    """Minimal least-recently-used mapping (bounds the long-MCMC caches).
+
+    ``get``/``__getitem__`` refresh recency; inserting past ``maxsize``
+    evicts the least recently used entry.  Drop-in for the plain dicts the
+    search loops used to grow without limit.
+    """
+
+    def __init__(self, maxsize: int = 512):
+        if maxsize < 1:
+            raise ValueError("LRUCache needs maxsize >= 1")
+        self.maxsize = maxsize
+        self._data: OrderedDict = OrderedDict()
+
+    def __contains__(self, key) -> bool:
+        return key in self._data
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __getitem__(self, key):
+        value = self._data[key]
+        self._data.move_to_end(key)
+        return value
+
+    def __setitem__(self, key, value) -> None:
+        if key in self._data:
+            self._data.move_to_end(key)
+        self._data[key] = value
+        if len(self._data) > self.maxsize:
+            self._data.popitem(last=False)
+
+    def get(self, key, default=None):
+        if key in self._data:
+            return self[key]
+        return default
+
+    def clear(self) -> None:
+        self._data.clear()
+
+
+class PlanEvaluator:
+    """A :class:`Topology` compiled to flat arrays for microsecond pricing.
+
+    Build once per topology (use :func:`plan_evaluator`, which memoizes the
+    instance on the topology object) and call :meth:`comm` /
+    :meth:`comm_time` with any demand on the same node count.  Group
+    incidence and MP routes compile lazily on first touch and persist
+    across evaluations — the route cache the reference path rebuilt per
+    call.
+    """
+
+    def __init__(self, topo, hw: HardwareSpec):
+        self.topo = topo
+        self.hw = hw
+        self._n = topo.n
+        # Parallel-link counts of the physical graph (multi-edges counted),
+        # exactly the reference's ``n_par``.
+        par: dict[tuple[int, int], int] = {}
+        for edge in topo.graph.edges():
+            par[edge] = par.get(edge, 0) + 1
+        self._par = par
+        # Growable link-id table: directed pair -> dense id; cap[lid] =
+        # max(1, parallel_links) * link_bandwidth (the reference divisor).
+        self._lid: dict[tuple[int, int], int] = {}
+        self._cap = np.zeros(64, dtype=np.float64)
+        self._n_links = 0
+        for pair in par:
+            self._link_id(pair)
+        # AllReduce group incidence: members -> (occurrence link ids in
+        # ring-then-edge order, n_rings, k), or None when the group carries
+        # no rings on this topology (the reference skips it too).
+        self._groups: dict[tuple[int, ...], tuple | None] = {}
+        # MP pair route cache, CSR over pair id p = s*n + t: per-occurrence
+        # hop link ids in route-then-hop order (the reference walk order),
+        # the pair's route count (share divisor), and its mean route hops
+        # (bandwidth-tax factor; 1.0 for unroutable ~ direct).
+        n2 = self._n * self._n
+        self._pair_start = np.full(n2, -1, dtype=np.int64)
+        self._pair_len = np.zeros(n2, dtype=np.int64)
+        self._pair_nroutes = np.ones(n2, dtype=np.float64)
+        self._pair_tax = np.zeros(n2, dtype=np.float64)
+        self._mp_ids = np.zeros(256, dtype=np.int64)
+        self._mp_size = 0
+
+    # -- link universe -------------------------------------------------------
+
+    @property
+    def n_links(self) -> int:
+        """Current size of the compiled link universe (grows lazily)."""
+        return self._n_links
+
+    def _link_id(self, pair: tuple[int, int]) -> int:
+        lid = self._lid.get(pair)
+        if lid is None:
+            lid = self._n_links
+            self._lid[pair] = lid
+            if lid >= self._cap.size:
+                grown = np.zeros(2 * self._cap.size, dtype=np.float64)
+                grown[: self._cap.size] = self._cap
+                self._cap = grown
+            par = max(1, self._par.get(pair, 1))
+            self._cap[lid] = par * self.hw.link_bandwidth
+            self._n_links += 1
+        return lid
+
+    def pad(self, loads: np.ndarray) -> np.ndarray:
+        """Zero-extend a load vector minted before the universe grew."""
+        if loads.size == self._n_links:
+            return loads
+        out = np.zeros(self._n_links, dtype=np.float64)
+        out[: loads.size] = loads
+        return out
+
+    # -- lazy compilation ----------------------------------------------------
+
+    def _group(self, members: tuple[int, ...]):
+        if members not in self._groups:
+            rings = self.topo.rings.get(members, [])
+            k = len(members)
+            if not rings or k <= 1:
+                self._groups[members] = None
+            else:
+                ids = np.fromiter(
+                    (
+                        self._link_id(edge)
+                        for ring in rings
+                        for edge in ring.edges()
+                    ),
+                    dtype=np.int64,
+                )
+                self._groups[members] = (ids, len(rings), k)
+        return self._groups[members]
+
+    def _compile_pair(self, s: int, t: int) -> None:
+        routes = self.topo.routing.get(s, t)
+        if not routes:
+            routes = _routing_with_fallback(
+                self.topo, [(s, t, 1.0)]
+            ).get(s, t)
+        pid = s * self._n + t
+        self._pair_start[pid] = self._mp_size
+        if not routes:
+            # Unroutable ~ direct in the reference tax; no link load.
+            self._pair_len[pid] = 0
+            self._pair_tax[pid] = 1.0
+            return
+        ids = [
+            self._link_id(hop)
+            for r in routes
+            for hop in zip(r.path[:-1], r.path[1:])
+        ]
+        need = self._mp_size + len(ids)
+        if need > self._mp_ids.size:
+            size = max(2 * self._mp_ids.size, need)
+            grown = np.zeros(size, dtype=np.int64)
+            grown[: self._mp_ids.size] = self._mp_ids
+            self._mp_ids = grown
+        self._mp_ids[self._mp_size: self._mp_size + len(ids)] = ids
+        self._mp_size += len(ids)
+        self._pair_len[pid] = len(ids)
+        self._pair_nroutes[pid] = len(routes)
+        self._pair_tax[pid] = sum(r.hops for r in routes) / len(routes)
+
+    def _mp_arrays(self, mp: np.ndarray):
+        """(pids, bytes) of a demand's nonzero MP entries, with every pair
+        compiled into the CSR cache."""
+        srcs, dsts = np.nonzero(mp)
+        vals = mp[srcs, dsts]
+        pids = srcs * self._n + dsts
+        if pids.size:
+            for pid in pids[self._pair_start[pids] < 0]:
+                self._compile_pair(int(pid) // self._n, int(pid) % self._n)
+        return pids, vals
+
+    def _ensure_compiled(self, demand: TrafficDemand):
+        """Compile everything a demand touches (so the link universe stops
+        growing before the load vector is allocated)."""
+        for g in demand.allreduce:
+            self._group(g.members)
+        return self._mp_arrays(demand.mp)
+
+    # -- evaluation ----------------------------------------------------------
+
+    def _scatter_mp(self, loads, pids, vals, sign: float = 1.0) -> None:
+        """Add each pair's per-route share (``bytes / n_routes``) along its
+        route hops — one sequential ``np.add.at`` in the reference's
+        flow-then-route-then-hop order."""
+        starts = self._pair_start[pids]
+        lens = self._pair_len[pids]
+        total = int(lens.sum())
+        if not total:
+            return
+        seg_off = np.cumsum(lens) - lens
+        idx = (
+            np.arange(total, dtype=np.int64)
+            - np.repeat(seg_off, lens)
+            + np.repeat(starts, lens)
+        )
+        shares = (sign * vals) / self._pair_nroutes[pids]
+        np.add.at(loads, self._mp_ids[idx], np.repeat(shares, lens))
+
+    def _scatter_groups(self, loads, allreduce, sign: float = 1.0) -> None:
+        """Add each group's per-ring-edge share in the reference's
+        group-then-ring-then-edge order (duplicate edges accumulate
+        sequentially, exactly like the reference dict walk)."""
+        for g in allreduce:
+            entry = self._group(g.members)
+            if entry is None:
+                continue
+            ids, n_rings, k = entry
+            per_link_total = 2.0 * (k - 1) / k * g.nbytes
+            if per_link_total == 0.0:
+                continue
+            np.add.at(loads, ids, sign * (per_link_total / n_rings))
+
+    def _eval(self, demand: TrafficDemand):
+        """(loads, pids, vals) of one demand — the single scatter/merge
+        body every evaluation entry point shares (the bit-exactness
+        contract lives here and nowhere else)."""
+        pids, vals = self._ensure_compiled(demand)
+        ar = np.zeros(self._n_links, dtype=np.float64)
+        self._scatter_groups(ar, demand.allreduce)
+        mp = np.zeros(self._n_links, dtype=np.float64)
+        self._scatter_mp(mp, pids, vals)
+        # One elementwise add mirrors the reference's AllReduce-dict +
+        # link_loads-dict merge (a single addition per link).
+        ar += mp
+        return ar, pids, vals
+
+    def loads(self, demand: TrafficDemand) -> np.ndarray:
+        """Per-link byte loads (AllReduce rings + routed MP) as a flat
+        vector over the compiled link universe — bit-identical to the
+        reference's per-link dict values."""
+        return self._eval(demand)[0]
+
+    def loads_delta(
+        self,
+        base: np.ndarray,
+        old: TrafficDemand,
+        new: TrafficDemand,
+    ) -> np.ndarray:
+        """Load vector of ``new`` given ``base = loads(old)``: re-prices
+        only the delta between the two demands (changed AllReduce groups,
+        changed MP entries) — the single-move fast path of
+        :func:`~repro.core.strategy_search.mcmc_search`.  Entries untouched
+        by the move stay bit-identical to ``base``; touched entries carry
+        ulp-level lineage (the search loop's near-boundary confirmation
+        falls back to the bit-exact :meth:`loads`)."""
+        same_groups = old.allreduce is new.allreduce or (
+            len(old.allreduce) == len(new.allreduce)
+            and all(
+                a.members == b.members and a.nbytes == b.nbytes
+                for a, b in zip(old.allreduce, new.allreduce)
+            )
+        )
+        gone: list = []
+        added: list = []
+        if not same_groups:
+            old_keys = [(g.members, g.nbytes) for g in old.allreduce]
+            new_keys = [(g.members, g.nbytes) for g in new.allreduce]
+            shared = set(old_keys) & set(new_keys)
+            gone = [g for g, k in zip(old.allreduce, old_keys)
+                    if k not in shared]
+            added = [g for g, k in zip(new.allreduce, new_keys)
+                     if k not in shared]
+            for g in (*gone, *added):
+                self._group(g.members)
+        diff = new.mp - old.mp
+        pids, vals = self._mp_arrays(diff)
+        out = np.zeros(self._n_links, dtype=np.float64)
+        out[: base.size] = base
+        if gone:
+            self._scatter_groups(out, gone, sign=-1.0)
+        if added:
+            self._scatter_groups(out, added, sign=1.0)
+        self._scatter_mp(out, pids, vals)
+        return out
+
+    def comm_time_from_loads(self, loads: np.ndarray) -> float:
+        """Bottleneck comm time of a precomputed load vector (the
+        reference's ``load / (par * bandwidth)`` division, vectorized)."""
+        if not loads.size:
+            return 0.0
+        return float(np.max(loads / self._cap[: loads.size]))
+
+    def comm_times_from_loads(self, rows) -> np.ndarray:
+        """Bottleneck comm times of ``K`` load vectors in one vectorized
+        max (rows minted before the universe grew are zero-padded)."""
+        rows = list(rows)
+        if not rows:
+            return np.zeros(0)
+        n = self._n_links
+        if not n:
+            return np.zeros(len(rows))
+        mat = np.zeros((len(rows), n), dtype=np.float64)
+        for out, row in zip(mat, rows):
+            out[: row.size] = row
+        return np.max(mat / self._cap[:n], axis=1)
+
+    def comm(self, demand: TrafficDemand) -> dict[str, float]:
+        """Drop-in for :func:`~repro.core.netsim.topoopt_comm_time` —
+        ``{"comm_time", "bandwidth_tax"}`` — on the compiled arrays.
+        ``comm_time`` is bit-identical to the reference; the tax agrees to
+        float-reassociation level (~1e-15 relative)."""
+        loads, pids, vals = self._eval(demand)
+        logical = float(vals.sum())
+        if logical > 0:
+            tax = float(vals @ self._pair_tax[pids]) / logical
+        else:
+            tax = 1.0
+        return {
+            "comm_time": self.comm_time_from_loads(loads),
+            "bandwidth_tax": tax,
+        }
+
+    def comm_time(self, demand: TrafficDemand) -> float:
+        """Bottleneck comm time of ``demand`` — bit-identical to
+        ``topoopt_comm_time(...)["comm_time"]``."""
+        return self.comm_time_from_loads(self._eval(demand)[0])
+
+    def comm_times(self, demands) -> np.ndarray:
+        """Batched pricing: bottleneck comm time of ``K`` demands in one
+        vectorized max over a (K, n_links) load matrix."""
+        demands = list(demands)
+        if not demands:
+            return np.zeros(0)
+        rows = [self.loads(d) for d in demands]
+        return self.comm_times_from_loads(rows)
+
+
+def plan_evaluator(topo, hw: HardwareSpec) -> PlanEvaluator:
+    """The compiled evaluator for ``topo``, memoized on the topology object
+    (one per :class:`~repro.core.netsim.HardwareSpec`).  Degraded topologies
+    (:func:`~repro.core.topology_finder.remove_pair` /
+    :func:`~repro.core.topology_finder.repair_topology`) are *new* objects,
+    so they always recompile — no stale-cache hazard."""
+    cache = getattr(topo, "_planevals", None)
+    if cache is None:
+        cache = {}
+        topo._planevals = cache
+    ev = cache.get(hw)
+    if ev is None:
+        ev = PlanEvaluator(topo, hw)
+        cache[hw] = ev
+    return ev
+
+
+# ---------------------------------------------------------------------------
+# Incremental multi-tenant objective (mcmc_search_jobset hot loop)
+# ---------------------------------------------------------------------------
+
+
+class JobSetEvaluator:
+    """Incremental weighted-mean objective for a JobSet on a fixed topology.
+
+    Caches one cluster-level link-load vector per (tenant, strategy); the
+    shared comm time is the bottleneck of the *sum* of resident vectors, so
+    a single-tenant MCMC move re-prices as ``total - old + new`` — two
+    vector ops — instead of re-unioning and re-walking the whole JobSet.
+    Matches the reference
+    :func:`~repro.core.strategy_search.evaluate_jobset` objective to 1e-9
+    (per-tenant vector sums reassociate the union's float additions).
+
+    ``demand_cache`` memoizes per-tenant *job-local* demand construction
+    under the same ``(label, strategy, k)`` keys ``evaluate_jobset`` uses,
+    so one (LRU-bounded) cache serves both paths across
+    ``co_optimize_jobset`` rounds.
+    """
+
+    def __init__(
+        self,
+        jobset,
+        topo,
+        hw: HardwareSpec,
+        overlap: float = 0.0,
+        demand_cache=None,
+        vector_cache_size: int = 512,
+    ):
+        self.jobset = jobset
+        self.hw = hw
+        self.overlap = overlap
+        self.ev = plan_evaluator(topo, hw)
+        self.demand_cache = demand_cache if demand_cache is not None else {}
+        self._vectors = LRUCache(vector_cache_size)
+        self._tenant = {t.label: t for t in jobset.tenants}
+        self._comp = {
+            t.label: compute_time(t.flops_per_iteration, t.k, hw)
+            for t in jobset.tenants
+        }
+        self.strategies: dict[str, object] = {}
+        self._total: np.ndarray | None = None
+        self._pending: tuple[str, object, np.ndarray] | None = None
+        # Last propose_batch's (moves, rows, comms) for select().
+        self._batch: tuple | None = None
+
+    # -- per-tenant vectors --------------------------------------------------
+
+    def _local_demand(self, t, strategy) -> TrafficDemand:
+        key = (t.label, strategy, t.k)
+        dem = self.demand_cache.get(key)
+        if dem is None:
+            dem = strategy.demand(t.spec, t.k)
+            self.demand_cache[key] = dem
+        return dem
+
+    def tenant_loads(self, label: str, strategy) -> np.ndarray:
+        """Cluster-level link-load vector of one tenant under ``strategy``
+        (cached)."""
+        t = self._tenant[label]
+        key = (label, strategy, t.k)
+        v = self._vectors.get(key)
+        if v is None:
+            dem = remap_demand(
+                self._local_demand(t, strategy), t.servers, self.jobset.n
+            )
+            v = self.ev.loads(dem)
+            self._vectors[key] = v
+        return v
+
+    def _objective(self, comm: float) -> tuple[float, dict[str, float]]:
+        per_job: dict[str, float] = {}
+        obj = 0.0
+        for t in self.jobset.tenants:
+            per_job[t.label] = iteration_time(
+                comm, self._comp[t.label], overlap=self.overlap
+            )
+            obj += t.weight * per_job[t.label]
+        return obj / self.jobset.total_weight, per_job
+
+    # -- full + incremental evaluation ---------------------------------------
+
+    def _full_total(self, strategies: dict[str, object]) -> np.ndarray:
+        vectors = [
+            self.tenant_loads(t.label, strategies[t.label])
+            for t in self.jobset.tenants
+        ]
+        total = np.zeros(self.ev.n_links, dtype=np.float64)
+        for v in vectors:
+            total[: v.size] += v
+        return total
+
+    def objective_of(
+        self, strategies: dict[str, object]
+    ) -> tuple[float, dict[str, float]]:
+        """Objective of an arbitrary strategy assignment, computed from the
+        full sum of per-tenant vectors (no incremental lineage)."""
+        return self._objective(
+            self.ev.comm_time_from_loads(self._full_total(strategies))
+        )
+
+    def set_strategies(
+        self, strategies: dict[str, object]
+    ) -> tuple[float, dict[str, float]]:
+        """Full evaluation: adopt ``strategies`` as the current state and
+        return ``(objective, per_job_iteration_times)``."""
+        self.strategies = dict(strategies)
+        self._total = self._full_total(strategies)
+        self._pending = None
+        return self._objective(self.ev.comm_time_from_loads(self._total))
+
+    def _move_row(self, label: str, strategy) -> np.ndarray:
+        """Load vector of the current state with ``label`` moved to
+        ``strategy``: ``total - old + new``.  A no-op move returns the
+        current total itself (bit-identical — keeps MCMC tie-acceptance
+        aligned with the reference chain)."""
+        if strategy == self.strategies[label]:
+            return self._total
+        v_old = self.tenant_loads(label, self.strategies[label])
+        v_new = self.tenant_loads(label, strategy)
+        row = self.ev.pad(self._total)
+        if row is self._total:
+            row = row.copy()
+        row[: v_old.size] -= v_old
+        row[: v_new.size] += v_new
+        return row
+
+    def propose(
+        self, label: str, strategy
+    ) -> tuple[float, dict[str, float]]:
+        """Price a single-tenant move without adopting it: the moved
+        tenant's old vector is swapped for the new one against the cached
+        total.  Call :meth:`accept` to adopt."""
+        assert self._total is not None, "call set_strategies first"
+        row = self._move_row(label, strategy)
+        self._pending = (label, strategy, row)
+        return self._objective(self.ev.comm_time_from_loads(row))
+
+    def propose_batch(
+        self, moves: list[tuple[str, object]]
+    ) -> np.ndarray:
+        """Objectives of ``K`` single-tenant moves in one vectorized pass
+        (the batched MCMC mode).  Does not change the current state; pick
+        the winner with :meth:`select` (its row is retained, not
+        re-priced)."""
+        assert self._total is not None, "call set_strategies first"
+        rows = [self._move_row(label, strategy) for label, strategy in moves]
+        comms = self.ev.comm_times_from_loads(rows)
+        self._batch = (list(moves), rows, comms)
+        return np.asarray([self._objective(float(c))[0] for c in comms])
+
+    def select(self, index: int) -> tuple[float, dict[str, float]]:
+        """Stage move ``index`` of the last :meth:`propose_batch` as the
+        pending proposal (reusing its already-priced load row) and return
+        its ``(objective, per_job)``.  Call :meth:`accept` to adopt."""
+        moves, rows, comms = self._batch
+        label, strategy = moves[index]
+        self._pending = (label, strategy, rows[index])
+        return self._objective(float(comms[index]))
+
+    def accept(self) -> None:
+        """Adopt the last proposed move as the current state."""
+        assert self._pending is not None, "nothing proposed"
+        label, strategy, total = self._pending
+        self.strategies[label] = strategy
+        self._total = total
+        self._pending = None
+
+    def union_for(self, strategies: dict[str, object]) -> TrafficDemand:
+        """Cluster-level union demand under ``strategies`` (built only when
+        a caller needs the demand object, e.g. for TopologyFinder)."""
+        return self.jobset.union({
+            t.label: self._local_demand(t, strategies[t.label])
+            for t in self.jobset.tenants
+        })
+
+    def union(self) -> TrafficDemand:
+        """Union demand of the *current* strategies."""
+        return self.union_for(self.strategies)

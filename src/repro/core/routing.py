@@ -93,13 +93,16 @@ def k_shortest_mp_routes(
             gen = nx.shortest_simple_paths(simple, s, t)
             best_len = None
             for idx, path in enumerate(gen):
-                if idx >= k:
-                    break
                 if best_len is None:
                     best_len = len(path)
                 elif len(path) > best_len + 1:
                     break  # only near-shortest alternates
                 table.add(s, t, tuple(path))
+                if idx + 1 >= k:
+                    # Stop before asking Yen's generator for the (k+1)-th
+                    # path — it would compute (and discard) the most
+                    # expensive spur sweep of the whole pair.
+                    break
         except nx.NetworkXNoPath:
             continue
     return table
@@ -110,20 +113,31 @@ def k_shortest_mp_routes(
 # ---------------------------------------------------------------------------
 
 
+def _flow_triples(flows):
+    """Iterate ``(src, dst, nbytes)`` from either a legacy list of tuples
+    or the array-backed :class:`repro.core.netsim.Flows` — lazily, without
+    materializing an intermediate tuple list."""
+    src = getattr(flows, "src", None)
+    if src is not None:
+        return zip(src.tolist(), flows.dst.tolist(), flows.nbytes.tolist())
+    return iter(flows)
+
+
 def link_loads(
     graph: nx.MultiDiGraph,
-    demand_flows: list[tuple[int, int, float]],
+    demand_flows,
     routing: RoutingTable,
 ) -> dict[tuple[int, int], float]:
     """Bytes carried by each directed link (parallel links between a pair
     share load evenly) when flows follow ``routing`` with equal splitting
-    across the available routes of a pair."""
+    across the available routes of a pair.  ``demand_flows`` is a list of
+    ``(src, dst, nbytes)`` tuples or a :class:`repro.core.netsim.Flows`."""
     loads: dict[tuple[int, int], float] = {}
     n_par: dict[tuple[int, int], int] = {}
     for u, v, _ in graph.edges(keys=True):
         n_par[(u, v)] = n_par.get((u, v), 0) + 1
         loads.setdefault((u, v), 0.0)
-    for src, dst, nbytes in demand_flows:
+    for src, dst, nbytes in _flow_triples(demand_flows):
         routes = routing.get(src, dst)
         if not routes:
             continue
@@ -134,16 +148,19 @@ def link_loads(
     return loads
 
 
-def bandwidth_tax(
-    demand_flows: list[tuple[int, int, float]], routing: RoutingTable
-) -> float:
+def bandwidth_tax(demand_flows, routing: RoutingTable) -> float:
     """Ratio of bytes placed on the wire (including forwarded copies) to the
-    logical demand (§5.4).  Fat-tree tax == 1 by definition."""
-    logical = sum(b for _, _, b in demand_flows)
+    logical demand (§5.4).  Fat-tree tax == 1 by definition.
+    ``demand_flows`` is a list of tuples or a
+    :class:`repro.core.netsim.Flows` (summed without tuple round-trips)."""
+    if hasattr(demand_flows, "total"):
+        logical = demand_flows.total
+    else:
+        logical = sum(b for _, _, b in demand_flows)
     if logical <= 0:
         return 1.0
     wire = 0.0
-    for src, dst, nbytes in demand_flows:
+    for src, dst, nbytes in _flow_triples(demand_flows):
         routes = routing.get(src, dst)
         if not routes:
             wire += nbytes  # unroutable ~ direct (shouldn't happen on connected G)

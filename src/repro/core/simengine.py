@@ -5,8 +5,10 @@ uses, replacing the previously disjoint ``netsim`` / ``packetsim`` /
 ``ocs_reconfig`` entry points (which remain as thin shims):
 
 * **Fluid bottleneck analysis** — :meth:`SimEngine.comm_time` /
-  :meth:`SimEngine.iteration_time` wrap :func:`netsim.topoopt_comm_time`
-  (§5.1 FlexNet analogue) for dedicated-cluster sweeps.
+  :meth:`SimEngine.iteration_time` price demands on the compiled plan
+  evaluator (:mod:`repro.core.planeval`; ``compiled=False`` falls back to
+  the reference :func:`netsim.topoopt_comm_time` walk, §5.1 FlexNet
+  analogue) for dedicated-cluster sweeps.
 * **Event-driven max-min-fair flows** — :class:`FlowSimVec`, a vectorized
   rewrite of the old per-flow-dict ``packetsim.FlowSim`` inner loop: flow
   routes become link-index/count arrays, progressive filling runs on NumPy
@@ -41,6 +43,7 @@ from .netsim import (  # re-exported: the facade subsumes these
     topoopt_comm_time,
 )
 from .ocs_reconfig import RECONFIG_LATENCY, RECONFIG_WINDOW, ocs_topology
+from .planeval import plan_evaluator
 from .routing import k_shortest_mp_routes
 from .topology_finder import Topology, topology_finder
 
@@ -550,8 +553,13 @@ class SimEngine:
     engine caches per-job topologies for dedicated-cluster sweeps.
     """
 
-    def __init__(self, hw: HardwareSpec | None = None):
+    def __init__(self, hw: HardwareSpec | None = None, compiled: bool = True):
         self.hw = hw or HardwareSpec()
+        # Fluid pricing path: the compiled plan evaluator
+        # (:func:`repro.core.planeval.plan_evaluator`, cached per topology)
+        # by default; ``compiled=False`` forces the reference
+        # :func:`~repro.core.netsim.topoopt_comm_time` walk.
+        self.compiled = compiled
         self._dedicated_cache: dict = {}
         # job name -> (src, dst, bytes) arrays in job-local index space,
         # shared by every tree_times call on this engine.
@@ -560,6 +568,8 @@ class SimEngine:
     # -- fluid facade (netsim) ---------------------------------------------
 
     def comm_time(self, topo: Topology, demand: TrafficDemand) -> dict[str, float]:
+        if self.compiled:
+            return plan_evaluator(topo, self.hw).comm(demand)
         return topoopt_comm_time(topo, demand, self.hw)
 
     def iteration_time(
@@ -570,7 +580,7 @@ class SimEngine:
         overlap: float = 0.0,
     ) -> float:
         """Fluid comm + compute for one training iteration on ``topo``."""
-        comm = topoopt_comm_time(topo, demand, self.hw)["comm_time"]
+        comm = self.comm_time(topo, demand)["comm_time"]
         comp = (
             compute_time(flops_per_iteration, topo.n, self.hw)
             if flops_per_iteration
@@ -997,7 +1007,7 @@ class SimEngine:
             if key not in self._dedicated_cache:
                 dem = demand_fn(job)
                 topo = topology_finder(dem, degree)
-                comm = topoopt_comm_time(topo, dem, self.hw)["comm_time"]
+                comm = self.comm_time(topo, dem)["comm_time"]
                 comp = compute_time(
                     job.flops_per_sample * job.batch_per_gpu * n, n, self.hw
                 )

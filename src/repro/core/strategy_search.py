@@ -22,15 +22,29 @@ import math
 import random
 from dataclasses import dataclass, field
 
+import numpy as np
+
 from .demand import TrafficDemand
 from .netsim import (
     HardwareSpec,
     compute_time,
     iteration_time,
-    topoopt_comm_time,
+    reference_comm_time,
 )
+from .planeval import JobSetEvaluator, LRUCache, plan_evaluator
 from .topology_finder import Topology
 from .workloads import JobSet, JobSpec, job_demand
+
+# Cap on the per-tenant demand memo the jobset search loops share (entries
+# are job-local TrafficDemands; long MCMC runs used to grow it unbounded).
+DEMAND_CACHE_SIZE = 512
+
+# Acceptance decisions closer to the boundary than this (relative) are
+# re-confirmed on a *pure* (path-independent) compiled evaluation: the
+# incremental delta path carries ulp-level arithmetic lineage, and an MCMC
+# move that leaves the objective mathematically unchanged must tie exactly
+# — as it does on the reference path — or fixed-seed chains diverge.
+_TIE_RTOL = 1e-12
 
 
 @dataclass(frozen=True)
@@ -74,7 +88,7 @@ def _evaluate(
     strategy: Strategy, job: JobSpec, topo: Topology, hw: HardwareSpec, overlap: float
 ) -> tuple[float, TrafficDemand]:
     demand = strategy.demand(job, topo.n)
-    comm = topoopt_comm_time(topo, demand, hw)["comm_time"]
+    comm = reference_comm_time(topo, demand, hw)
     comp = compute_time(job.flops_per_sample * job.batch_per_gpu * topo.n, topo.n, hw)
     return iteration_time(comm, comp, overlap=overlap), demand
 
@@ -125,23 +139,97 @@ def mcmc_search(
     overlap: float = 0.0,
     seed: int = 0,
     init: Strategy | None = None,
+    compiled: bool = True,
+    proposals_per_step: int = 1,
 ) -> SearchResult:
-    """Search the Comp x Comm plane for a fixed topology (§4.1)."""
+    """Search the Comp x Comm plane for a fixed topology (§4.1).
+
+    ``compiled=True`` (default) prices candidates on the compiled evaluator
+    (:func:`repro.core.planeval.plan_evaluator`): demands and objective
+    values are memoized per :class:`Strategy`, and each evaluation is the
+    vectorized :meth:`PlanEvaluator.comm_time` — *bit-identical* to the
+    reference walk, so the compiled chain makes exactly the decisions the
+    ``compiled=False`` reference path makes at every fixed seed (including
+    ``<=`` ties on moves that leave the objective unchanged).
+
+    ``proposals_per_step=K > 1`` (compiled only) is the *batched* mode: K
+    proposals are drawn, their load vectors re-priced as deltas against the
+    incumbent (:meth:`PlanEvaluator.loads_delta`) in one vectorized pass,
+    and the annealing rule is applied to the best of them.  It consumes the
+    RNG differently, so its chain legitimately differs from ``K=1``.
+    """
+    if proposals_per_step < 1:
+        raise ValueError("proposals_per_step must be >= 1")
+    if proposals_per_step > 1 and not compiled:
+        raise ValueError("batched proposals need the compiled evaluator")
     rng = random.Random(seed)
     n = topo.n
     current = init or default_strategy(job)
-    cur_time, cur_demand = _evaluate(current, job, topo, hw, overlap)
+    ev = plan_evaluator(topo, hw) if compiled else None
+    comp = compute_time(job.flops_per_sample * job.batch_per_gpu * n, n, hw)
+    demand_memo: dict[Strategy, TrafficDemand] = {}
+
+    def demand_for(s: Strategy) -> TrafficDemand:
+        d = demand_memo.get(s)
+        if d is None:
+            d = s.demand(job, n)
+            demand_memo[s] = d
+        return d
+
+    time_memo: dict[Strategy, float] = {}
+
+    def eval_time(s: Strategy) -> float:
+        """Memoized bit-exact compiled evaluation — equals the reference
+        ``_evaluate`` value to the bit for every strategy."""
+        v = time_memo.get(s)
+        if v is None:
+            v = iteration_time(
+                ev.comm_time(demand_for(s)), comp, overlap=overlap
+            )
+            time_memo[s] = v
+        return v
+
+    if compiled:
+        cur_demand = demand_for(current)
+        cur_time = eval_time(current)
+        cur_loads = ev.loads(cur_demand) if proposals_per_step > 1 else None
+    else:
+        cur_loads = None
+        cur_time, cur_demand = _evaluate(current, job, topo, hw, overlap)
     best, best_time, best_demand = current, cur_time, cur_demand
     history = [cur_time]
 
     for it in range(iters):
-        cand = _propose(current, job, n, rng)
-        cand_time, cand_demand = _evaluate(cand, job, topo, hw, overlap)
+        if proposals_per_step > 1:
+            cands = [
+                _propose(current, job, n, rng)
+                for _ in range(proposals_per_step)
+            ]
+            loads_list = [
+                ev.loads_delta(cur_loads, cur_demand, demand_for(c))
+                for c in cands
+            ]
+            comms = ev.comm_times_from_loads(loads_list)
+            times = [
+                iteration_time(float(c), comp, overlap=overlap) for c in comms
+            ]
+            j = int(np.argmin(times))
+            cand, cand_time, cand_loads = cands[j], times[j], loads_list[j]
+            cand_demand = demand_for(cand)
+        else:
+            cand = _propose(current, job, n, rng)
+            cand_loads = None
+            if compiled:
+                cand_demand = demand_for(cand)
+                cand_time = eval_time(cand)
+            else:
+                cand_time, cand_demand = _evaluate(cand, job, topo, hw, overlap)
         t = temperature * max(cur_time, 1e-12)
         if cand_time <= cur_time or rng.random() < math.exp(
             -(cand_time - cur_time) / t
         ):
             current, cur_time, cur_demand = cand, cand_time, cand_demand
+            cur_loads = cand_loads
             if cur_time < best_time:
                 best, best_time, best_demand = current, cur_time, cur_demand
         history.append(cur_time)
@@ -163,6 +251,7 @@ def evaluate_jobset(
     hw: HardwareSpec,
     overlap: float = 0.0,
     _demand_cache: dict | None = None,
+    compiled: bool = False,
 ) -> tuple[float, TrafficDemand, dict[str, float]]:
     """(weighted objective, union demand, per-job iteration times).
 
@@ -173,8 +262,16 @@ def evaluate_jobset(
 
     ``_demand_cache`` memoizes per-tenant demand construction across calls
     (:class:`Strategy` is frozen/hashable): an MCMC move changes one
-    tenant's strategy, so the other tenants' demands are reused verbatim —
-    the hot loop of :func:`mcmc_search_jobset`."""
+    tenant's strategy, so the other tenants' demands are reused verbatim.
+    Pass an :class:`~repro.core.planeval.LRUCache` to bound it across long
+    runs — :func:`~repro.core.alternating.co_optimize_jobset` shares one
+    across all of its rounds.
+
+    ``compiled=True`` prices the union on the compiled evaluator
+    (:func:`~repro.core.planeval.plan_evaluator`); the default is the
+    reference :func:`~repro.core.netsim.topoopt_comm_time`.  The true hot
+    loop of :func:`mcmc_search_jobset` goes further and re-prices only the
+    moved tenant's delta (:class:`~repro.core.planeval.JobSetEvaluator`)."""
     demands: dict[str, TrafficDemand] = {}
     for t in jobset.tenants:
         s = strategies[t.label]
@@ -186,7 +283,10 @@ def evaluate_jobset(
             _demand_cache[key] = s.demand(t.spec, t.k)
         demands[t.label] = _demand_cache[key]
     union = jobset.union(demands)
-    comm = topoopt_comm_time(topo, union, hw)["comm_time"]
+    if compiled:
+        comm = plan_evaluator(topo, hw).comm_time(union)
+    else:
+        comm = reference_comm_time(topo, union, hw)
     per_job: dict[str, float] = {}
     obj = 0.0
     for t in jobset.tenants:
@@ -205,6 +305,9 @@ def mcmc_search_jobset(
     overlap: float = 0.0,
     seed: int = 0,
     init: dict[str, Strategy] | None = None,
+    compiled: bool = True,
+    proposals_per_step: int = 1,
+    demand_cache: dict | None = None,
 ) -> JobSetSearchResult:
     """Joint Comp x Comm search for a shared cluster (fixed topology).
 
@@ -213,15 +316,120 @@ def mcmc_search_jobset(
     acceptance follows the single-job annealing rule on the weighted
     objective.  Per-job MP pairs stay pinned to their placements: only the
     union's AllReduce groups are ring-mutable downstream.
+
+    ``compiled=True`` (default) runs the *incremental* objective
+    (:class:`~repro.core.planeval.JobSetEvaluator`): per-tenant link-load
+    vectors are cached, and a single-tenant move re-prices only
+    ``total - old + new`` instead of re-unioning and re-walking the whole
+    JobSet.  ``compiled=False`` is the reference path — fixed seeds must
+    give identical results on both.  ``proposals_per_step=K > 1`` (compiled
+    only) prices K proposals per step in one vectorized pass and anneals on
+    the best of them (a different, documented, chain).
+
+    ``demand_cache`` (default: a fresh LRU bounded at
+    ``DEMAND_CACHE_SIZE``) memoizes per-tenant demand construction;
+    :func:`~repro.core.alternating.co_optimize_jobset` passes one cache
+    shared across all of its rounds.
     """
     if not jobset.tenants:
         raise ValueError("mcmc_search_jobset needs at least one tenant")
+    if proposals_per_step < 1:
+        raise ValueError("proposals_per_step must be >= 1")
+    if proposals_per_step > 1 and not compiled:
+        raise ValueError("batched proposals need the compiled evaluator")
     rng = random.Random(seed)
-    demand_cache: dict = {}
+    if demand_cache is None:
+        demand_cache = LRUCache(DEMAND_CACHE_SIZE)
     current: dict[str, Strategy] = {
         t.label: (init or {}).get(t.label) or default_strategy(t.spec)
         for t in jobset.tenants
     }
+
+    if compiled:
+        jse = JobSetEvaluator(
+            jobset, topo, hw, overlap=overlap, demand_cache=demand_cache
+        )
+        ref_memo: dict[tuple, float] = {}
+
+        def _ref_jobset_obj(strategies: dict[str, Strategy]) -> float:
+            """Bit-exact union objective (memoized) — tie-breaking
+            authority for near-boundary acceptance (see
+            :func:`mcmc_search`): the compiled union evaluation reproduces
+            the reference walk to the bit, unlike the incremental
+            per-tenant vector sums."""
+            key = tuple(strategies[t.label] for t in jobset.tenants)
+            v = ref_memo.get(key)
+            if v is None:
+                v = evaluate_jobset(
+                    strategies, jobset, topo, hw, overlap,
+                    _demand_cache=demand_cache, compiled=True,
+                )[0]
+                ref_memo[key] = v
+            return v
+
+        cur_obj, cur_per_job = jse.set_strategies(current)
+        best = dict(current)
+        best_obj, best_per_job = cur_obj, cur_per_job
+        history = [cur_obj]
+
+        for _ in range(iters):
+            if proposals_per_step > 1:
+                moves = []
+                for _k in range(proposals_per_step):
+                    t = jobset.tenants[rng.randrange(len(jobset.tenants))]
+                    moves.append(
+                        (t.label, _propose(current[t.label], t.spec, t.k, rng))
+                    )
+                objs = jse.propose_batch(moves)
+                j = int(np.argmin(objs))
+                label, cand_s = moves[j]
+                cand_obj, cand_per_job = jse.select(j)
+            else:
+                t = jobset.tenants[rng.randrange(len(jobset.tenants))]
+                label = t.label
+                cand_s = _propose(current[label], t.spec, t.k, rng)
+                cand_obj, cand_per_job = jse.propose(label, cand_s)
+            better = cand_obj <= cur_obj
+            if (
+                proposals_per_step == 1
+                and abs(cand_obj - cur_obj)
+                <= _TIE_RTOL * max(abs(cand_obj), abs(cur_obj))
+            ):
+                # Boundary case: confirm on the reference objective so
+                # mathematical ties accept exactly like the reference chain.
+                cand_state = dict(current)
+                cand_state[label] = cand_s
+                better = (
+                    _ref_jobset_obj(cand_state)
+                    <= _ref_jobset_obj(current)
+                )
+            temp = temperature * max(cur_obj, 1e-12)
+            if better or rng.random() < math.exp(
+                -(cand_obj - cur_obj) / temp
+            ):
+                jse.accept()
+                current[label] = cand_s
+                cur_obj, cur_per_job = cand_obj, cand_per_job
+                improved = cur_obj < best_obj
+                if (
+                    proposals_per_step == 1
+                    and abs(cur_obj - best_obj)
+                    <= _TIE_RTOL * max(abs(cur_obj), abs(best_obj))
+                ):
+                    improved = (
+                        _ref_jobset_obj(current) < _ref_jobset_obj(best)
+                    )
+                if improved:
+                    best, best_obj = dict(current), cur_obj
+                    best_per_job = cur_per_job
+            history.append(cur_obj)
+
+        return JobSetSearchResult(
+            strategies=best, iter_time=best_obj,
+            demand=jse.union_for(best), per_job=best_per_job,
+            history=history,
+        )
+
     cur_obj, cur_union, cur_per_job = evaluate_jobset(
         current, jobset, topo, hw, overlap, _demand_cache=demand_cache
     )

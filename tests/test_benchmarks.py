@@ -70,3 +70,21 @@ def test_multitenant_bench_smoke(tmp_path, monkeypatch):
     )
     assert (tmp_path / "experiments" / "bench"
             / "BENCH_multitenant.json").exists()
+
+
+def test_planner_bench_smoke(tmp_path, monkeypatch):
+    """The compiled evaluator must agree with the reference objective and
+    leave fixed-seed search results unchanged; candidate pricing must be
+    dramatically faster even at smoke sizes."""
+    from benchmarks import bench_planner
+
+    monkeypatch.chdir(tmp_path)  # perf record lands in a scratch dir
+    rows = bench_planner.run(smoke=True)
+    by_name = {r["name"].rsplit("_n", 1)[0]: r for r in rows}
+    cand = by_name["planner_candidate_evals"]
+    assert cand["max_rel_err"] <= 1e-9
+    assert cand["speedup"] > 5.0  # full run tracks ~35x; smoke is smaller
+    assert by_name["planner_alternating"]["identical"]
+    assert by_name["planner_replan"]["identical"]
+    assert (tmp_path / "experiments" / "bench"
+            / "BENCH_planner.json").exists()

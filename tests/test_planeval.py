@@ -1,0 +1,381 @@
+"""Compiled plan evaluator: equivalence with the reference objective.
+
+The compiled fast path (:mod:`repro.core.planeval`) must agree with the
+reference :func:`repro.core.netsim.topoopt_comm_time` to 1e-9 relative —
+here it is pinned over random topologies, demands, jobsets, and degraded
+fabrics — and the compiled search loops must return *identical* results to
+the reference (pre-compiled) paths at fixed seeds.
+"""
+
+from __future__ import annotations
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.alternating import (
+    alternating_optimize,
+    co_optimize_jobset,
+    initial_topology,
+)
+from repro.core.netsim import (
+    HardwareSpec,
+    _routing_with_fallback,
+    mp_flows,
+    reference_comm_time,
+    topoopt_comm_time,
+)
+from repro.core.planeval import (
+    JobSetEvaluator,
+    LRUCache,
+    PlanEvaluator,
+    plan_evaluator,
+)
+from repro.core.simengine import SimEngine
+from repro.core.strategy_search import (
+    Strategy,
+    default_strategy,
+    evaluate_jobset,
+    mcmc_search,
+    mcmc_search_jobset,
+)
+from repro.core.topology_finder import (
+    remove_pair,
+    repair_topology,
+    topology_finder,
+)
+from repro.core.workloads import (
+    BERT,
+    DLRM,
+    MOE_16E,
+    JobSet,
+    TenantJob,
+    job_demand,
+)
+
+HW = HardwareSpec(link_bandwidth=12.5e9, degree=4)
+
+
+def _random_demand(rng: random.Random, n: int):
+    kind = rng.choice(["dp", "dlrm", "dlrm", "moe"])
+    if kind == "dp":
+        return job_demand(DLRM, n)
+    if kind == "dlrm":
+        hosts = tuple(sorted(rng.sample(range(n), rng.randint(1, max(1, n // 2)))))
+        return job_demand(DLRM, n, table_hosts=hosts)
+    return job_demand(MOE_16E, n, ep_group_size=rng.choice([2, 4, 8]))
+
+
+def _assert_comm_close(topo, demand, ev=None):
+    ev = ev or plan_evaluator(topo, HW)
+    ref = topoopt_comm_time(topo, demand, HW)
+    fast = ev.comm(demand)
+    for key in ("comm_time", "bandwidth_tax"):
+        assert fast[key] == pytest.approx(ref[key], rel=1e-9, abs=1e-12), key
+
+
+# ---------------------------------------------------------------------------
+# Randomized equivalence: compiled vs reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [8, 13, 16])
+def test_compiled_matches_reference_random_demands(n):
+    rng = random.Random(n)
+    base = job_demand(DLRM, n, table_hosts=tuple(range(0, n, 3)))
+    topo = topology_finder(base, HW.degree)
+    ev = plan_evaluator(topo, HW)
+    for _ in range(12):
+        # Cross-evaluation: demands the topology was never built for (the
+        # MCMC probing pattern) exercise the fallback route cache.
+        _assert_comm_close(topo, _random_demand(rng, n), ev)
+
+
+def test_compiled_comm_time_is_bit_exact():
+    """The full compiled evaluation matches the reference *to the bit* —
+    the property that keeps fixed-seed MCMC ties aligned."""
+    rng = random.Random(7)
+    topo = topology_finder(job_demand(DLRM, 12, table_hosts=(0, 4, 9)),
+                           HW.degree)
+    ev = plan_evaluator(topo, HW)
+    for _ in range(20):
+        d = _random_demand(rng, 12)
+        assert ev.comm_time(d) == reference_comm_time(topo, d, HW)
+
+
+@pytest.mark.parametrize("degrade", ["remove", "repair"])
+def test_compiled_matches_on_degraded_fabric(degrade):
+    rng = random.Random(3)
+    n = 12
+    topo = topology_finder(job_demand(DLRM, n, table_hosts=(0, 3, 7)),
+                           HW.degree)
+    degraded = (
+        remove_pair(topo, (0, 1)) if degrade == "remove"
+        else repair_topology(topo, (0, 1))
+    )
+    # Degradation returns a *new* Topology: its evaluator compiles fresh
+    # (no stale incidence/route caches from the healthy fabric).
+    assert plan_evaluator(degraded, HW) is not plan_evaluator(topo, HW)
+    for _ in range(8):
+        d = _random_demand(rng, n)
+        _assert_comm_close(degraded, d)
+        _assert_comm_close(topo, d)  # healthy evaluator unaffected
+
+
+def test_loads_delta_matches_full_evaluation():
+    n = 14
+    topo = topology_finder(job_demand(DLRM, n, table_hosts=(0, 5)), HW.degree)
+    ev = plan_evaluator(topo, HW)
+    rng = random.Random(11)
+    old = _random_demand(rng, n)
+    base = ev.loads(old)
+    for _ in range(10):
+        new = _random_demand(rng, n)
+        delta = ev.pad(ev.loads_delta(base, old, new))
+        full = ev.pad(ev.loads(new))
+        scale = max(float(full.max()), 1.0)
+        assert np.allclose(delta, full, rtol=1e-9, atol=1e-6 * scale)
+        base, old = delta, new  # chain the lineage like the MCMC loop
+
+
+def test_batched_comm_times_match_single():
+    n = 12
+    topo = topology_finder(job_demand(DLRM, n, table_hosts=(1, 6)), HW.degree)
+    ev = plan_evaluator(topo, HW)
+    rng = random.Random(5)
+    demands = [_random_demand(rng, n) for _ in range(6)]
+    batch = ev.comm_times(demands)
+    single = np.array([ev.comm_time(d) for d in demands])
+    assert np.allclose(batch, single, rtol=1e-12)
+
+
+def test_plan_evaluator_memoized_on_topology():
+    topo = initial_topology(8, 4)
+    assert plan_evaluator(topo, HW) is plan_evaluator(topo, HW)
+    other_hw = HardwareSpec(link_bandwidth=25e9, degree=4)
+    assert plan_evaluator(topo, other_hw) is not plan_evaluator(topo, HW)
+
+
+def test_simengine_compiled_facade_matches_reference():
+    topo = initial_topology(10, 4)
+    dem = job_demand(DLRM, 10, table_hosts=(2, 7))
+    fast = SimEngine(HW).iteration_time(topo, dem, flops_per_iteration=1e15)
+    ref = SimEngine(HW, compiled=False).iteration_time(
+        topo, dem, flops_per_iteration=1e15
+    )
+    assert fast == pytest.approx(ref, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Incremental jobset evaluation
+# ---------------------------------------------------------------------------
+
+
+def _jobset(n: int) -> JobSet:
+    third = n // 3
+    return JobSet(n=n, tenants=[
+        TenantJob(spec=DLRM, servers=tuple(range(0, third)), name="dlrm"),
+        TenantJob(spec=BERT, servers=tuple(range(third, 2 * third)),
+                  name="bert"),
+        TenantJob(spec=MOE_16E, servers=tuple(range(2 * third, n)),
+                  name="moe"),
+    ])
+
+
+def test_jobset_evaluator_matches_reference_through_moves():
+    """A propose/accept random walk stays within 1e-9 of the reference
+    evaluate_jobset at every step."""
+    n = 12
+    js = _jobset(n)
+    strategies = {t.label: default_strategy(t.spec) for t in js.tenants}
+    topo = topology_finder(js.union_for(strategies), HW.degree,
+                           pack="per_node")
+    jse = JobSetEvaluator(js, topo, HW)
+    obj, per_job = jse.set_strategies(strategies)
+    rng = random.Random(2)
+    for step in range(15):
+        ref_obj, _, ref_per_job = evaluate_jobset(strategies, js, topo, HW)
+        assert obj == pytest.approx(ref_obj, rel=1e-9)
+        for label in per_job:
+            assert per_job[label] == pytest.approx(
+                ref_per_job[label], rel=1e-9
+            )
+        t = js.tenants[rng.randrange(len(js.tenants))]
+        move = Strategy(
+            mode="hybrid",
+            table_hosts=tuple(sorted(rng.sample(range(t.k), 2))),
+        ) if t.spec.n_tables else Strategy(
+            mode="dp", ep_group_size=rng.choice([2, 4])
+        )
+        cand_obj, cand_per_job = jse.propose(t.label, move)
+        cand = dict(strategies)
+        cand[t.label] = move
+        ref_cand = evaluate_jobset(cand, js, topo, HW)[0]
+        assert cand_obj == pytest.approx(ref_cand, rel=1e-9)
+        if step % 2 == 0:  # adopt every other move, like a real chain
+            jse.accept()
+            strategies, obj, per_job = cand, cand_obj, cand_per_job
+
+
+def test_jobset_union_preserved():
+    js = _jobset(12)
+    strategies = {t.label: default_strategy(t.spec) for t in js.tenants}
+    topo = topology_finder(js.union_for(strategies), HW.degree,
+                           pack="per_node")
+    jse = JobSetEvaluator(js, topo, HW)
+    jse.set_strategies(strategies)
+    union = jse.union()
+    ref = js.union_for(strategies)
+    assert union.sum_mp == pytest.approx(ref.sum_mp, rel=1e-12)
+    assert union.sum_allreduce == pytest.approx(ref.sum_allreduce, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-seed goldens: compiled search results identical to the reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 3, 5])
+def test_mcmc_search_compiled_identical(seed):
+    topo = initial_topology(16, 4)
+    ref = mcmc_search(DLRM, topo, HW, iters=80, seed=seed, compiled=False)
+    fast = mcmc_search(DLRM, topo, HW, iters=80, seed=seed, compiled=True)
+    assert fast.strategy == ref.strategy
+    assert fast.iter_time == pytest.approx(ref.iter_time, rel=1e-9)
+    assert np.allclose(fast.history, ref.history, rtol=1e-9)
+
+
+@pytest.mark.parametrize("seed", [0, 2])
+def test_alternating_optimize_compiled_identical(seed):
+    ref = alternating_optimize(DLRM, 16, HW, rounds=2, mcmc_iters=50,
+                               seed=seed, compiled=False)
+    fast = alternating_optimize(DLRM, 16, HW, rounds=2, mcmc_iters=50,
+                                seed=seed, compiled=True)
+    assert fast.strategy == ref.strategy
+    assert fast.iter_time == pytest.approx(ref.iter_time, rel=1e-9)
+    assert np.allclose(fast.rounds, ref.rounds, rtol=1e-9)
+
+
+@pytest.mark.parametrize("seed", [0, 4])
+def test_mcmc_search_jobset_compiled_identical(seed):
+    js = _jobset(12)
+    init = {t.label: default_strategy(t.spec) for t in js.tenants}
+    topo = topology_finder(js.union_for(init), HW.degree, pack="per_node")
+    ref = mcmc_search_jobset(js, topo, HW, iters=60, seed=seed,
+                             compiled=False)
+    fast = mcmc_search_jobset(js, topo, HW, iters=60, seed=seed,
+                              compiled=True)
+    assert fast.strategies == ref.strategies
+    assert fast.iter_time == pytest.approx(ref.iter_time, rel=1e-9)
+    assert np.allclose(fast.history, ref.history, rtol=1e-9)
+    for label in ref.per_job:
+        assert fast.per_job[label] == pytest.approx(
+            ref.per_job[label], rel=1e-9
+        )
+
+
+def test_co_optimize_jobset_compiled_identical():
+    js = JobSet(n=12, tenants=[
+        TenantJob(spec=DLRM, servers=tuple(range(0, 4)), name="dlrm"),
+        TenantJob(spec=BERT, servers=tuple(range(4, 8)), name="bert"),
+    ])
+    ref = co_optimize_jobset(js, HW, rounds=2, mcmc_iters=30, seed=1,
+                             compiled=False)
+    fast = co_optimize_jobset(js, HW, rounds=2, mcmc_iters=30, seed=1,
+                              compiled=True)
+    assert fast.strategies == ref.strategies
+    assert fast.iter_time == pytest.approx(ref.iter_time, rel=1e-9)
+
+
+def test_batched_proposals_mode():
+    """proposals_per_step > 1 runs a (documented) different chain but must
+    produce a valid, competitive result."""
+    topo = initial_topology(12, 4)
+    base = mcmc_search(DLRM, topo, HW, iters=60, seed=0)
+    batched = mcmc_search(DLRM, topo, HW, iters=30, seed=0,
+                          proposals_per_step=4)
+    assert batched.iter_time <= base.history[0]  # no worse than cold start
+    js = _jobset(12)
+    init = {t.label: default_strategy(t.spec) for t in js.tenants}
+    topo_js = topology_finder(js.union_for(init), HW.degree, pack="per_node")
+    b = mcmc_search_jobset(js, topo_js, HW, iters=20, seed=0,
+                           proposals_per_step=4)
+    assert b.iter_time <= b.history[0]
+    with pytest.raises(ValueError):
+        mcmc_search(DLRM, topo, HW, iters=5, proposals_per_step=2,
+                    compiled=False)
+
+
+# ---------------------------------------------------------------------------
+# Satellites: routing fallback memoization, LRU cache, vectorized flows
+# ---------------------------------------------------------------------------
+
+
+def test_routing_fallback_full_cache_hit_reuses_table():
+    n = 10
+    topo = topology_finder(job_demand(DLRM, n), HW.degree)
+    # A pair the planned table never routed (probing pattern).
+    flows = [(0, 7, 123.0), (3, 9, 5.0)]
+    first = _routing_with_fallback(topo, flows)
+    second = _routing_with_fallback(topo, flows)
+    assert second is first  # memoized merged table, not a fresh deep copy
+    # Routed-only flow lists short-circuit to the planned table itself.
+    routed = [(s, t, 1.0) for (s, t) in list(topo.routing.routes)[:3]]
+    assert _routing_with_fallback(topo, routed) is topo.routing
+    # The merged table answers both planned and fallback pairs.
+    assert first.get(0, 7)
+    for s, t, _ in routed:
+        assert first.get(s, t) == topo.routing.get(s, t)
+
+
+def test_lru_cache_bounds_and_recency():
+    cache = LRUCache(maxsize=3)
+    for i in range(3):
+        cache[i] = i * 10
+    assert cache.get(0) == 0  # refresh 0
+    cache[3] = 30  # evicts 1 (least recently used)
+    assert 1 not in cache
+    assert 0 in cache and 2 in cache and 3 in cache
+    assert len(cache) == 3
+    with pytest.raises(ValueError):
+        LRUCache(maxsize=0)
+
+
+def test_mp_flows_vectorized_form():
+    dem = job_demand(DLRM, 8, table_hosts=(1, 5))
+    flows = mp_flows(dem)
+    assert len(flows) == int(np.count_nonzero(dem.mp))
+    assert flows.total == pytest.approx(float(dem.mp.sum()))
+    # Legacy tuple iteration still works (and yields python scalars).
+    triples = list(flows)
+    assert all(isinstance(s, int) and isinstance(b, float)
+               for s, _, b in triples)
+    as_dict = {(s, t): b for s, t, b in triples}
+    srcs, dsts = np.nonzero(dem.mp)
+    assert as_dict == {
+        (int(s), int(t)): float(dem.mp[s, t]) for s, t in zip(srcs, dsts)
+    }
+
+
+def test_evaluate_jobset_compiled_flag_matches():
+    js = _jobset(12)
+    strategies = {t.label: default_strategy(t.spec) for t in js.tenants}
+    topo = topology_finder(js.union_for(strategies), HW.degree,
+                           pack="per_node")
+    cache = LRUCache(64)
+    ref = evaluate_jobset(strategies, js, topo, HW, _demand_cache=cache)
+    fast = evaluate_jobset(strategies, js, topo, HW, _demand_cache=cache,
+                           compiled=True)
+    assert fast[0] == ref[0]  # bit-exact union pricing
+    assert fast[2] == ref[2]
+
+
+def test_empty_and_zero_demand():
+    topo = initial_topology(6, 4)
+    ev = plan_evaluator(topo, HW)
+    from repro.core.demand import TrafficDemand
+
+    empty = TrafficDemand(n=6)
+    assert ev.comm(empty) == topoopt_comm_time(topo, empty, HW)
+    assert ev.comm_time(empty) == 0.0
