@@ -1,0 +1,172 @@
+"""Placement co-search + churn-priced migration on a fragmented fabric.
+
+The ROADMAP's placement open items: `JobSetController.admit` used to place
+greedily (:func:`~repro.core.online.place_arrival`) and *then* replan, and
+tenants were pinned to their placement forever.  This benchmark drives the
+placement-as-a-co-optimization-axis pipeline over a deliberately
+*fragmented* cluster — DLRM and BERT interleaved across the fabric so the
+free pool is scattered, several free-pool fiber pairs dead so some
+placements cannot build cheap rings — and an arrival + departure churn
+trace (an MoE job arriving onto the damaged pool, BERT departing and
+freeing a healthy block).  Four operators run the same trace from the same
+offline plan:
+
+* **greedy** — greedy-then-replan admission (``candidates=1``), tenants
+  pinned (``max_migrations=0``): the PR-3 behaviour.
+* **rebal** — greedy admission + post-departure rebalancing
+  (``max_migrations=2``): migrations priced by
+  :func:`~repro.core.costmodel.migration_cost` (checkpoint-restore +
+  churn-priced fiber moves) and adopted only when the probed win amortized
+  over ``payback_horizon`` iterations clears the price — the DLRM tenant's
+  ~33 s embedding-table checkpoint keeps it pinned, the MoE tenant's ~0.4 s
+  state moves.
+* **cosearch** — co-searched admission (``candidates=4``): every
+  :func:`~repro.core.online.place_candidates` variant carried through the
+  full alternating loop, best plan (placement included) adopted.
+* **co+rebal** — both: the headline operator.
+
+``derived`` reports greedy/co+rebal on total makespan and on the mean
+per-tenant time; the bench *asserts* the headline strictly beats greedy on
+both, and that the ``candidates=1, max_migrations=0`` policy reproduces the
+plain reactive run bit-identically (the golden equivalence the tests pin).
+A perf record lands in ``experiments/bench/BENCH_placement.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core.alternating import co_optimize_jobset
+from repro.core.costmodel import OCS_FIBER_MOVE_S
+from repro.core.netsim import HardwareSpec
+from repro.core.online import ReoptPolicy, TraceEvent, run_online_jobset
+from repro.core.workloads import BERT, DLRM, MOE_16E, JobSet, TenantJob
+
+DEGREE = 3
+PAYBACK = 200.0  # iterations a migration is amortized over
+PERF_RECORD = os.path.join("experiments", "bench", "BENCH_placement.json")
+
+
+def _fragmented_jobset(n: int) -> JobSet:
+    """DLRM and BERT interleaved at stride 3: the free pool is scattered."""
+    return JobSet(n=n, tenants=[
+        TenantJob(spec=DLRM, servers=tuple(range(0, n, 3)), name="dlrm"),
+        TenantJob(spec=BERT, servers=tuple(range(1, n, 3)), name="bert"),
+    ])
+
+
+def _trace(dead: tuple[tuple[int, int], ...], k: int) -> tuple[TraceEvent, ...]:
+    return tuple(
+        TraceEvent(iteration=0, kind="fail", link=p) for p in dead
+    ) + (
+        TraceEvent(iteration=1, kind="arrive", job=MOE_16E, k=k, name="moe"),
+        TraceEvent(iteration=3, kind="depart", name="bert"),
+    )
+
+
+def _mean_job_time(result) -> float:
+    return sum(result.job_times.values()) / max(len(result.job_times), 1)
+
+
+def run(smoke: bool = False) -> list[dict]:
+    if smoke:
+        n, k, n_iters = 12, 3, 4
+        dead = ((2, 5), (5, 8), (2, 8))
+    else:
+        n, k, n_iters = 18, 4, 8
+        dead = ((2, 5), (5, 8), (8, 11), (2, 8), (5, 11))
+    rounds, iters = (1, 20) if smoke else (2, 40)
+    hw = HardwareSpec(link_bandwidth=12.5e9, degree=DEGREE)
+    jobset = _fragmented_jobset(n)
+    plan = co_optimize_jobset(jobset, hw, rounds=max(rounds, 2),
+                              mcmc_iters=iters, seed=1)
+    trace = _trace(dead, k)
+    churn = dict(fiber_move_latency=OCS_FIBER_MOVE_S)
+    migration = dict(max_migrations=2, payback_horizon=PAYBACK,
+                     migration_restart=1e-3)
+    arms = {
+        "greedy": ReoptPolicy.reactive(**churn),
+        "rebal": ReoptPolicy.reactive(**churn, **migration),
+        "cosearch": ReoptPolicy.reactive(candidates=4, **churn),
+        "co_rebal": ReoptPolicy.reactive(candidates=4, **churn, **migration),
+    }
+
+    rows: list[dict] = []
+    results = {}
+    t0 = time.perf_counter()
+    for name, policy in arms.items():
+        results[name] = run_online_jobset(
+            jobset, hw, policy=policy, trace=trace, n_iters=n_iters,
+            seed=0, plan=plan)
+    us = (time.perf_counter() - t0) * 1e6
+
+    greedy, headline = results["greedy"], results["co_rebal"]
+    total_ratio = greedy.total_time / headline.total_time
+    mean_ratio = _mean_job_time(greedy) / _mean_job_time(headline)
+    # The acceptance bar: co-searched admission + rebalancing must strictly
+    # beat greedy-then-replan on this fragmented trace.
+    assert headline.total_time < greedy.total_time, (
+        f"co+rebal {headline.total_time} !< greedy {greedy.total_time}")
+    assert _mean_job_time(headline) < _mean_job_time(greedy), (
+        f"co+rebal mean {_mean_job_time(headline)} !< "
+        f"greedy mean {_mean_job_time(greedy)}")
+
+    # Golden equivalence: candidates=1 / max_migrations=0 explicitly spelled
+    # out must reproduce the plain reactive (greedy) run bit for bit.
+    explicit = run_online_jobset(
+        jobset, hw,
+        policy=ReoptPolicy.reactive(candidates=1, max_migrations=0, **churn),
+        trace=trace, n_iters=n_iters, seed=0, plan=plan)
+    assert explicit.total_time == greedy.total_time
+    assert explicit.iter_times == greedy.iter_times
+    assert explicit.job_times == greedy.job_times
+
+    rows.append(dict(
+        name="placement_cosearch",
+        us_per_call=us,
+        derived=(
+            f"greedy/co_rebal total={total_ratio:.2f} "
+            f"mean={mean_ratio:.2f};migrations={headline.n_migrations}"
+        ),
+        **{f"{name}_total_s": r.total_time for name, r in results.items()},
+        **{f"{name}_mean_s": _mean_job_time(r) for name, r in results.items()},
+        migrations=[
+            dict(tenant=m.tenant, src=list(m.src), dst=list(m.dst),
+                 adopted=m.adopted, cost_s=m.cost,
+                 est_before=m.est_before, est_after=m.est_after)
+            for m in headline.migrations
+        ],
+        n_migrations=headline.n_migrations,
+        replans={name: r.n_replans for name, r in results.items()},
+        edges_moved={name: r.edges_moved for name, r in results.items()},
+        job_times={name: r.job_times for name, r in results.items()},
+    ))
+
+    _write_perf_record(rows, smoke=smoke)
+    return rows
+
+
+def _write_perf_record(rows: list[dict], smoke: bool) -> None:
+    """BENCH_placement.json: the headline numbers CI tracks over time."""
+    os.makedirs(os.path.dirname(PERF_RECORD), exist_ok=True)
+    row = rows[0]
+    record = dict(
+        bench="placement",
+        smoke=smoke,
+        greedy_over_co_rebal_total=(
+            row["greedy_total_s"] / row["co_rebal_total_s"]),
+        greedy_over_co_rebal_mean=(
+            row["greedy_mean_s"] / row["co_rebal_mean_s"]),
+        n_migrations=row["n_migrations"],
+        migrations=row["migrations"],
+        wall_us=row["us_per_call"],
+    )
+    with open(PERF_RECORD, "w") as f:
+        json.dump(record, f, indent=1)
+
+
+if __name__ == "__main__":
+    for r in run(smoke=True):
+        print(r["name"], r["derived"])

@@ -11,6 +11,7 @@
   observer hooks for mid-run plan mutation)
 - online: ReoptPolicy/ReoptController/run_online — dynamic TopoOpt reacting
   to failures and load shifts, plus topology-aware job placement
+  (candidate-placement co-search and churn-priced tenant migration)
 - netsim / packetsim / fabrics / ocs_reconfig: FlexNet & FlexNetPacket
   analogues (netsim/packetsim/ocs_reconfig are shims behind simengine now)
 - costmodel: §5.2 cost analysis
@@ -24,7 +25,14 @@ from .alternating import (
     co_optimize_jobset,
     initial_topology,
 )
-from .demand import AllReduceGroup, TrafficDemand, remap_demand, union_demand
+from .costmodel import migration_cost
+from .demand import (
+    AllReduceGroup,
+    TrafficDemand,
+    rebase_demand,
+    remap_demand,
+    union_demand,
+)
 from .netsim import HardwareSpec, compute_time, iteration_time
 from .online import (
     JobSetController,
@@ -33,17 +41,35 @@ from .online import (
     TraceEvent,
     edge_churn,
     place_arrival,
+    place_candidates,
     run_online,
     run_online_jobset,
 )
 from .planeval import JobSetEvaluator, LRUCache, PlanEvaluator, plan_evaluator
 from .routing import bandwidth_tax, coin_change_mod, path_length_stats
 from .select_perms import coin_change_diameter, select_permutations, theorem1_bound
-from .simengine import DeadlineFairness, FairnessPolicy, WeightedFairness
-from .strategy_search import Strategy, mcmc_search, mcmc_search_jobset
+from .simengine import (
+    DeadlineFairness,
+    FairnessPolicy,
+    MigrationRecord,
+    WeightedFairness,
+)
+from .strategy_search import (
+    Strategy,
+    mcmc_search,
+    mcmc_search_jobset,
+    tenant_comm_times,
+)
 from .topology_finder import Topology, remove_pair, repair_topology, topology_finder
 from .totient import RingPermutation, coprimes, prime_coprimes, ring_edges, totient_perms
-from .workloads import PAPER_JOBS, JobSet, JobSpec, TenantJob, job_demand
+from .workloads import (
+    PAPER_JOBS,
+    JobSet,
+    JobSpec,
+    TenantJob,
+    job_demand,
+    placement_diff,
+)
 
 __all__ = [
     "AllReduceGroup",
@@ -57,6 +83,7 @@ __all__ = [
     "JobSetPlan",
     "JobSpec",
     "LRUCache",
+    "MigrationRecord",
     "PlanEvaluator",
     "PAPER_JOBS",
     "ReoptController",
@@ -81,10 +108,14 @@ __all__ = [
     "job_demand",
     "mcmc_search",
     "mcmc_search_jobset",
+    "migration_cost",
     "path_length_stats",
     "place_arrival",
+    "place_candidates",
+    "placement_diff",
     "plan_evaluator",
     "prime_coprimes",
+    "rebase_demand",
     "remap_demand",
     "remove_pair",
     "repair_topology",
@@ -92,6 +123,7 @@ __all__ = [
     "run_online",
     "run_online_jobset",
     "select_permutations",
+    "tenant_comm_times",
     "theorem1_bound",
     "topology_finder",
     "totient_perms",

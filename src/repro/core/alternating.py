@@ -46,6 +46,7 @@ from .strategy_search import (
     evaluate_jobset,
     mcmc_search,
     mcmc_search_jobset,
+    tenant_comm_times,
 )
 from .topology_finder import Topology, topology_finder
 from .workloads import JobSet, JobSpec
@@ -66,7 +67,14 @@ class JobSetPlan:
 
     Duck-compatible with :class:`CoOptResult` where the online layer needs it
     (``topology`` / ``demand`` / ``iter_time``; ``strategy`` is the
-    per-tenant dict)."""
+    per-tenant dict).
+
+    ``jobset`` / ``candidate_index`` carry placement-co-search provenance:
+    the JobSet (tenant placements) this plan was optimized for and its index
+    in the ``placement_candidates`` list it won from (0 when no candidate
+    search ran).  ``per_job_comm`` is each tenant's *own* bottleneck comm
+    time (:func:`~repro.core.strategy_search.tenant_comm_times`) alongside
+    the union-charged ``per_job`` iteration times."""
 
     strategies: dict[str, Strategy]
     topology: Topology
@@ -74,6 +82,9 @@ class JobSetPlan:
     demand: TrafficDemand  # union demand, cluster index space
     per_job: dict[str, float] = field(default_factory=dict)
     rounds: list[float] = field(default_factory=list)
+    jobset: "JobSet | None" = None
+    candidate_index: int = 0
+    per_job_comm: dict[str, float] = field(default_factory=dict)
 
     @property
     def strategy(self) -> dict[str, Strategy]:
@@ -191,44 +202,24 @@ def alternating_optimize(
     return best
 
 
-def co_optimize_jobset(
+def _co_optimize_single(
     jobset: JobSet,
     hw: HardwareSpec,
-    rounds: int = 4,
-    mcmc_iters: int = 150,
-    overlap: float = 0.0,
-    seed: int = 0,
-    rel_tol: float = 1e-3,
-    warm_topology: Topology | None = None,
-    warm_strategies: dict[str, Strategy] | None = None,
-    forbidden: tuple[tuple[int, int], ...] = (),
-    compiled: bool = True,
-    proposals_per_step: int = 1,
+    rounds: int,
+    mcmc_iters: int,
+    overlap: float,
+    seed: int,
+    rel_tol: float,
+    warm_topology: Topology | None,
+    warm_strategies: dict[str, Strategy] | None,
+    forbidden: tuple[tuple[int, int], ...],
+    compiled: bool,
+    proposals_per_step: int,
+    demand_cache,
 ) -> JobSetPlan:
-    """Multi-tenant alternating optimization: co-optimize every resident
-    job's parallelization strategy against one *shared* topology.
-
-    The same two-plane loop as :func:`alternating_optimize`, lifted to a
-    :class:`~repro.core.workloads.JobSet`: the Comp x Comm plane proposes
-    per-job moves (:func:`~repro.core.strategy_search.mcmc_search_jobset`,
-    weighted-mean objective), and the Comm x Topo plane rebuilds one shared
-    topology from the *union* demand with per-node degree packing
-    (``topology_finder(pack="per_node")``) — per-job ring budgets land only
-    on each job's own servers, per-job MP pairs stay pinned to their
-    placements, and idle servers keep a connectivity ring for future
-    arrivals.  ``warm_topology`` / ``warm_strategies`` / ``forbidden``
-    mirror the single-job warm-start contract for online re-optimization.
-
-    One LRU-bounded per-tenant demand cache is shared across every round's
-    MCMC and the final pricing (the caches used to be rebuilt per round);
-    ``compiled`` / ``proposals_per_step`` select the candidate-pricing path
-    exactly as in :func:`alternating_optimize`.
-    """
-    if not jobset.tenants:
-        raise ValueError("co_optimize_jobset needs at least one tenant")
+    """The two-plane alternating loop for one fixed tenant placement —
+    exactly the pre-placement-search ``co_optimize_jobset`` body."""
     warm = warm_topology is not None
-    demand_cache = LRUCache(DEMAND_CACHE_SIZE)
-
     init: dict[str, Strategy] = {
         t.label: (warm_strategies or {}).get(t.label) or default_strategy(t.spec)
         for t in jobset.tenants
@@ -266,7 +257,7 @@ def co_optimize_jobset(
             best = JobSetPlan(
                 strategies=dict(res.strategies), topology=new_topo,
                 iter_time=t_new, demand=union, per_job=per_job,
-                rounds=round_times,
+                rounds=round_times, jobset=jobset,
             )
         if len(round_times) >= 2 and (
             abs(round_times[-2] - round_times[-1])
@@ -278,4 +269,87 @@ def co_optimize_jobset(
 
     assert best is not None
     best.rounds = round_times
+    return best
+
+
+def co_optimize_jobset(
+    jobset: JobSet,
+    hw: HardwareSpec,
+    rounds: int = 4,
+    mcmc_iters: int = 150,
+    overlap: float = 0.0,
+    seed: int = 0,
+    rel_tol: float = 1e-3,
+    warm_topology: Topology | None = None,
+    warm_strategies: dict[str, Strategy] | None = None,
+    forbidden: tuple[tuple[int, int], ...] = (),
+    compiled: bool = True,
+    proposals_per_step: int = 1,
+    placement_candidates: list[JobSet] | None = None,
+) -> JobSetPlan:
+    """Multi-tenant alternating optimization: co-optimize every resident
+    job's parallelization strategy against one *shared* topology.
+
+    The same two-plane loop as :func:`alternating_optimize`, lifted to a
+    :class:`~repro.core.workloads.JobSet`: the Comp x Comm plane proposes
+    per-job moves (:func:`~repro.core.strategy_search.mcmc_search_jobset`,
+    weighted-mean objective), and the Comm x Topo plane rebuilds one shared
+    topology from the *union* demand with per-node degree packing
+    (``topology_finder(pack="per_node")``) — per-job ring budgets land only
+    on each job's own servers, per-job MP pairs stay pinned to their
+    placements, and idle servers keep a connectivity ring for future
+    arrivals.  ``warm_topology`` / ``warm_strategies`` / ``forbidden``
+    mirror the single-job warm-start contract for online re-optimization.
+
+    **Placement co-search** (``placement_candidates``): placement is the
+    fourth co-optimized axis.  Pass a list of candidate JobSets — the same
+    tenants under different server placements, e.g. one per
+    :func:`~repro.core.online.place_candidates` admission variant — and the
+    full alternating loop runs *per candidate* with the same seed, scoring
+    each through the compiled :class:`~repro.core.planeval.JobSetEvaluator`
+    (per-tenant job-local demands are placement-independent, so one shared
+    demand cache serves every candidate); the best full plan wins, ties
+    resolved toward the earlier candidate (the greedy seed comes first).
+    ``None`` — and a single-candidate list equal to ``jobset`` — follow the
+    exact pre-search code path, so fixed-seed plans are unchanged.
+    The winning plan records its ``jobset`` and ``candidate_index``.
+
+    One LRU-bounded per-tenant demand cache is shared across every round's
+    MCMC and the final pricing (the caches used to be rebuilt per round);
+    ``compiled`` / ``proposals_per_step`` select the candidate-pricing path
+    exactly as in :func:`alternating_optimize`.  The winner additionally
+    reports ``per_job_comm`` — each tenant's own decomposed bottleneck time
+    (:func:`~repro.core.strategy_search.tenant_comm_times`).
+    """
+    if placement_candidates is not None and not placement_candidates:
+        raise ValueError("placement_candidates must be non-empty when given")
+    candidates = (
+        [jobset] if placement_candidates is None else list(placement_candidates)
+    )
+    labels = {t.label for t in jobset.tenants}
+    for js in candidates:
+        if {t.label for t in js.tenants} != labels:
+            raise ValueError(
+                "every placement candidate must carry the same tenant labels"
+            )
+    if not jobset.tenants:
+        raise ValueError("co_optimize_jobset needs at least one tenant")
+    demand_cache = LRUCache(DEMAND_CACHE_SIZE)
+
+    best: JobSetPlan | None = None
+    for ci, js in enumerate(candidates):
+        plan = _co_optimize_single(
+            js, hw, rounds, mcmc_iters, overlap, seed, rel_tol,
+            warm_topology, warm_strategies, forbidden, compiled,
+            proposals_per_step, demand_cache,
+        )
+        plan.candidate_index = ci
+        if best is None or plan.iter_time < best.iter_time:
+            best = plan
+
+    assert best is not None
+    best.per_job_comm = tenant_comm_times(
+        best.strategies, best.jobset, best.topology, hw,
+        _demand_cache=demand_cache,
+    )
     return best

@@ -41,6 +41,39 @@ def fiber_move_cost(edges_moved: int) -> float:
     return edges_moved * FIBER_MOVE_WEAR * (2 * PATCH_PANEL_PORT + EXPECTED_FIBER)
 
 
+# -- Migration pricing (tenant checkpoint-restore + fiber churn) -------------
+# Moving a *running* tenant to a new placement is a checkpoint-restore cycle
+# (drain, serialize model state, restore on the new servers, re-establish
+# collectives) plus the patch-panel churn of re-seating its fibers.  The
+# restore bandwidth is the aggregate parallel-filesystem / object-store rate
+# the checkpoint streams at; the restart floor covers process teardown,
+# container scheduling, and collective re-initialization.
+CHECKPOINT_RESTORE_BW = 10e9  # bytes/s aggregate checkpoint-restore rate
+MIGRATION_RESTART_S = 5.0  # per-migration drain/teardown/re-init floor
+
+
+def migration_cost(
+    state_bytes: float,
+    edges_moved: int = 0,
+    fiber_move_s: float = FIBER_MOVE_S,
+    checkpoint_bw: float = CHECKPOINT_RESTORE_BW,
+    restart_s: float = MIGRATION_RESTART_S,
+) -> float:
+    """Seconds of training pause one tenant migration charges: the restart
+    floor, the checkpoint-restore transfer of ``state_bytes`` of model
+    state (:attr:`repro.core.workloads.JobSpec.state_bytes`), and the
+    patch-panel re-seat of ``edges_moved`` fibers
+    (:func:`repro.core.online.edge_churn` between the incumbent and the
+    post-migration topology)."""
+    if state_bytes < 0 or edges_moved < 0:
+        raise ValueError("migration_cost needs non-negative inputs")
+    return (
+        restart_s
+        + state_bytes / checkpoint_bw
+        + edges_moved * fiber_move_s
+    )
+
+
 def _table2(link_gbps: float) -> dict:
     key = link_gbps * 1e9
     if key not in TABLE2:

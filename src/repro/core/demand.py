@@ -141,6 +141,53 @@ def remap_demand(
     return out
 
 
+def rebase_demand(
+    demand: TrafficDemand,
+    old_servers: Sequence[int],
+    new_servers: Sequence[int],
+) -> TrafficDemand:
+    """Relabel a *cluster-level* demand from one placement to another.
+
+    ``old_servers[i]`` -> ``new_servers[i]``: AllReduce members are mapped
+    through the placement bijection and the MP block moves from the old
+    server set to the new one.  This is the candidate-placement /
+    migration fast path: a tenant's embedded demand can be re-seated
+    without rebuilding the whole union —
+    ``rebase_demand(remap_demand(d, old, n), old, new)`` equals
+    ``remap_demand(d, new, n)`` entry for entry.
+    """
+    old_servers = tuple(int(s) for s in old_servers)
+    new_servers = tuple(int(s) for s in new_servers)
+    if len(old_servers) != len(new_servers):
+        raise ValueError(
+            f"placement sizes differ: {len(old_servers)} vs {len(new_servers)}"
+        )
+    if len(set(new_servers)) != len(new_servers):
+        raise ValueError(f"placement {new_servers!r} repeats a server")
+    n = demand.n
+    if new_servers and not (0 <= min(new_servers) and max(new_servers) < n):
+        raise ValueError(f"placement {new_servers!r} outside cluster of {n}")
+    mapping = dict(zip(old_servers, new_servers))
+    out = TrafficDemand(n=n)
+    for g in demand.allreduce:
+        out.allreduce.append(
+            AllReduceGroup(
+                members=tuple(mapping.get(m, m) for m in g.members),
+                nbytes=g.nbytes,
+            )
+        )
+    if old_servers:
+        old_idx = np.asarray(old_servers, dtype=np.int64)
+        new_idx = np.asarray(new_servers, dtype=np.int64)
+        block = demand.mp[np.ix_(old_idx, old_idx)].copy()
+        out.mp[:] = demand.mp
+        out.mp[np.ix_(old_idx, old_idx)] = 0.0
+        out.mp[np.ix_(new_idx, new_idx)] += block
+    else:
+        out.mp[:] = demand.mp
+    return out
+
+
 def union_demand(
     parts: Iterable[TrafficDemand], n: int | None = None
 ) -> TrafficDemand:

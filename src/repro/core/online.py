@@ -40,6 +40,25 @@ per-tenant flow graphs under the set's weighted fairness.
 :func:`run_online_jobset` drives a churn trace (jobs arriving, departing,
 fibers dying) against it; ``benchmarks/bench_multitenant.py`` compares
 static vs reactive shared plans.
+
+Placement as a co-optimization axis (ROADMAP "placement co-search" +
+"preemption / migration"): on a shared fabric the fourth coupled dimension
+is *where each tenant sits*.  :func:`place_candidates` generates diverse
+candidate server sets for an arrival (greedy-capacity seed first, then
+contiguous / spread / anti-affinity variants);
+``JobSetController.admit(candidates=k)`` — or ``ReoptPolicy.candidates`` —
+threads them through the replan, which scores every candidate with the
+full alternating loop and adopts the best *plan including placement*
+(``candidates=1`` is byte-identical to the greedy-then-replan path).  After
+a departure, :meth:`JobSetController.rebalance` proposes migrating up to
+``ReoptPolicy.max_migrations`` resident tenants into the freed capacity,
+each move priced by :func:`repro.core.costmodel.migration_cost`
+(checkpoint-restore seconds + churn-priced fiber moves) and adopted only
+when the probed amortized win clears the price;
+:class:`~repro.core.simengine.MigrationRecord`\\ s land in run results and
+``ScenarioResult.migrations``.  ``benchmarks/bench_placement.py`` shows
+co-searched admission + rebalancing beating greedy-then-replan on a
+fragmented churn trace.
 """
 
 from __future__ import annotations
@@ -55,13 +74,17 @@ from .alternating import (
     alternating_optimize,
     co_optimize_jobset,
 )
+from .costmodel import MIGRATION_RESTART_S, migration_cost
 from .demand import remap_demand
 from .netsim import HardwareSpec, compute_time
 from .ocs_reconfig import RECONFIG_LATENCY
+from .planeval import JobSetEvaluator
 from .simengine import (
+    DeadlineFairness,
     EngineView,
     FairnessPolicy,
     LinkFailure,
+    MigrationRecord,
     PlanUpdate,
     Scenario,
     ScenarioObserver,
@@ -85,6 +108,7 @@ __all__ = [
     "run_online",
     "run_online_jobset",
     "place_arrival",
+    "place_candidates",
     "edge_churn",
 ]
 
@@ -158,6 +182,23 @@ class ReoptPolicy:
     payback_horizon: float = 8.0  # iterations a replan must amortize over
     # Incremental probe: bottleneck-set utilization threshold in [0, 1).
     probe_slack: float = 0.0
+    # Placement co-search: candidate placements tried per admission
+    # (:func:`place_candidates`); 1 = the greedy `place_arrival` path,
+    # byte-identical to the pre-search behaviour.
+    candidates: int = 1
+    # Churn-priced tenant migration: how many resident tenants one
+    # :meth:`JobSetController.rebalance` call may move (0 disables — no
+    # rebalance ever runs, the pre-migration behaviour).  An adopted move
+    # must clear its checkpoint-restore + fiber-churn cost
+    # (:func:`repro.core.costmodel.migration_cost`) amortized over
+    # ``payback_horizon`` iterations.
+    max_migrations: int = 0
+    # Per-migration drain/teardown/re-init floor in seconds (the
+    # checkpoint-transfer and fiber components are priced per tenant and
+    # per moved fiber on top of this).  Defaults to the cost model's
+    # documented floor; simulations on sub-second iteration timescales
+    # lower it explicitly (as the placement benchmark does).
+    migration_restart: float = MIGRATION_RESTART_S
     # Warm-started optimizer budget per replan (smaller than offline: the
     # incumbent is already good, we only adapt it).
     rounds: int = 2
@@ -271,6 +312,9 @@ class ReoptController(ScenarioObserver):
         # Adaptive hysteresis: effective min_interval, doubled per skipped
         # (benefit < cost) replan, reset on adoption.
         self._adaptive_interval = self.policy.min_interval
+        # Global-clock time of the replan currently being computed; hooks
+        # that need "now" inside _run_optimizer (deadline urgency) read it.
+        self._replan_now = 0.0
         # Hook clock = engine-local time + clock_offset.  Drivers that run a
         # sequence of scenarios (run_online: one per training iteration) set
         # the offset so hysteresis spans scenario boundaries.
@@ -513,18 +557,30 @@ class ReoptController(ScenarioObserver):
             return self.policy.fiber_move_latency * edges_moved
         return self.policy.replan_latency
 
+    def _adopt_plan(self, res) -> None:
+        """Install ``res`` as the incumbent plan.  Subclasses extend this
+        to sync plan provenance (an adopted candidate placement)."""
+        self._plan = res
+        self._topology = res.topology
+
+    def _estimate_plan(self, res) -> float:
+        """Probe a freshly optimized plan's one-iteration time.  Subclasses
+        override to probe under the plan's own tenant placements."""
+        return self.estimated_iter_time(
+            topo=res.topology, strategy=res.strategy
+        )
+
     def replan(self, now: float, trigger: str) -> PlanUpdate | None:
         """Re-run the alternating optimizer warm-started from the incumbent,
         forbidding dead pairs; adopt whichever of {new plan, degraded
         incumbent} probes faster.  Returns the PlanUpdate to apply — or
         ``None`` when the adaptive gate skips (the probed win would not pay
         for the churn-proportional pause)."""
+        self._replan_now = now
         self.ensure_plan()
         est_before = self.estimated_iter_time()
         res = self._run_optimizer(warm=True)
-        est_new = self.estimated_iter_time(
-            topo=res.topology, strategy=res.strategy
-        )
+        est_new = self._estimate_plan(res)
         adopt = est_new <= est_before
         edges_moved = edge_churn(self.topology, res.topology) if adopt else 0
         pause = self._replan_pause(edges_moved)
@@ -546,8 +602,7 @@ class ReoptController(ScenarioObserver):
                 ))
                 return None
         if adopt:
-            self._plan = res
-            self._topology = res.topology
+            self._adopt_plan(res)
             self._baseline = est_new
             self._probe_cache = None
             self._adaptive_interval = self.policy.min_interval
@@ -633,6 +688,22 @@ class ReoptController(ScenarioObserver):
 # ---------------------------------------------------------------------------
 
 
+@dataclass(frozen=True)
+class _UrgencyWeightedFairness(FairnessPolicy):
+    """Static per-tenant weights scaled by deadline urgency — the engine
+    analogue of :meth:`JobSetController._opt_jobset`'s ``weight * urgency``
+    replan objective, re-queried each rate recomputation as the clock
+    approaches deadlines."""
+
+    time_varying = True
+
+    weights: dict[str, float] = field(default_factory=dict)
+    deadline: DeadlineFairness = field(default_factory=DeadlineFairness)
+
+    def weight(self, job: str, now: float) -> float:
+        return self.weights.get(job, 1.0) * self.deadline.weight(job, now)
+
+
 class JobSetController(ReoptController):
     """A :class:`ReoptController` whose resident workload is a whole
     :class:`~repro.core.workloads.JobSet` sharing one fabric.
@@ -657,25 +728,58 @@ class JobSetController(ReoptController):
         policy: ReoptPolicy | None = None,
         seed: int = 0,
         plan: JobSetPlan | None = None,
+        deadline_policy: DeadlineFairness | None = None,
     ):
         self.jobset = jobset
+        # Deadline-aware replanning: when set, every replan's objective
+        # weights each tenant by ``weight * deadline_policy.weight(label,
+        # now)`` so a near-deadline tenant's traffic dominates the union
+        # objective, and the engine runs the same policy as its bandwidth
+        # fairness.  ``None`` keeps the static weighted objective.
+        self.deadline_policy = deadline_policy
+        # Candidate JobSets (greedy seed first) a replan should co-search;
+        # set by :meth:`admit` around its _maybe_replan call.
+        self._pending_candidates: list[JobSet] | None = None
+        # Every migration decision rebalance() ever took (adopted or not).
+        self.migrations: list[MigrationRecord] = []
         super().__init__(job=None, n=jobset.n, hw=hw, policy=policy,
                          seed=seed, plan=plan)
 
     # -- plan machinery ------------------------------------------------------
 
+    def _opt_jobset(self, jobset: JobSet, now: float) -> JobSet:
+        """The JobSet the optimizer should price: tenant weights scaled by
+        deadline urgency at ``now`` (identity without a deadline policy)."""
+        if self.deadline_policy is None:
+            return jobset
+        from dataclasses import replace as _replace
+
+        return JobSet(n=jobset.n, tenants=[
+            _replace(
+                t,
+                weight=t.weight * self.deadline_policy.weight(t.label, now),
+            )
+            for t in jobset.tenants
+        ])
+
     def _run_optimizer(self, warm: bool) -> JobSetPlan:
+        now = self._replan_now
         if not warm:
             return co_optimize_jobset(
-                self.jobset, self.hw,
+                self._opt_jobset(self.jobset, now), self.hw,
                 rounds=max(self.policy.rounds, 2),
                 mcmc_iters=max(self.policy.mcmc_iters, 40),
                 seed=self.seed,
                 forbidden=tuple(self.dead),
                 compiled=self.policy.compiled,
             )
+        candidates = None
+        if self._pending_candidates is not None:
+            candidates = [
+                self._opt_jobset(js, now) for js in self._pending_candidates
+            ]
         return co_optimize_jobset(
-            self.jobset, self.hw,
+            self._opt_jobset(self.jobset, now), self.hw,
             rounds=self.policy.rounds,
             mcmc_iters=self.policy.mcmc_iters,
             seed=self.seed + 1 + self.n_replans,
@@ -683,7 +787,31 @@ class JobSetController(ReoptController):
             warm_strategies=self.strategies(),
             forbidden=tuple(self.dead),
             compiled=self.policy.compiled,
+            placement_candidates=candidates,
         )
+
+    def _adopt_plan(self, res) -> None:
+        super()._adopt_plan(res)
+        if self._pending_candidates is not None:
+            # Sync the resident set to the winning candidate placement
+            # (the *unscaled* JobSet — plan.jobset may carry urgency-scaled
+            # weights).
+            self.jobset = self._pending_candidates[res.candidate_index]
+            self._probe_cache = None
+
+    def _estimate_plan(self, res) -> float:
+        if self._pending_candidates is None:
+            return super()._estimate_plan(res)
+        # Probe under the candidate's placements: the plan's flows live on
+        # the candidate servers, not the incumbent greedy ones.
+        saved = self.jobset
+        self.jobset = self._pending_candidates[res.candidate_index]
+        try:
+            return self.estimated_iter_time(
+                topo=res.topology, strategy=res.strategy
+            )
+        finally:
+            self.jobset = saved
 
     def _maybe_replan(self, now: float, trigger: str) -> PlanUpdate | None:
         if not self.jobset.tenants:
@@ -740,7 +868,16 @@ class JobSetController(ReoptController):
         iteration."""
         return self._probe_jobs(self.topology, self.strategies())
 
-    def fairness(self) -> WeightedFairness:
+    def fairness(self) -> FairnessPolicy:
+        """The engine-side bandwidth policy: static tenant weights, scaled
+        by deadline urgency when a deadline policy is set — the same
+        ``weight * urgency`` product the replan objective prices
+        (:meth:`_opt_jobset`), so simulated shares and the optimizer's view
+        stay consistent."""
+        if self.deadline_policy is not None:
+            return _UrgencyWeightedFairness(
+                weights=self.jobset.weights(), deadline=self.deadline_policy
+            )
         return WeightedFairness(self.jobset.weights())
 
     # -- admission / departure ----------------------------------------------
@@ -752,36 +889,258 @@ class JobSetController(ReoptController):
         weight: float = 1.0,
         name: str | None = None,
         now: float = 0.0,
+        candidates: int | None = None,
     ) -> tuple[tuple[int, ...], float]:
-        """Admit an arriving job: place it on the ``k`` free servers with
-        the most surviving capacity (:func:`place_arrival`), then let the
-        arrival trigger replan the shared fabric.  Returns
-        ``(servers, pause_seconds)``."""
+        """Admit an arriving job: place it on ``k`` free servers, then let
+        the arrival trigger replan the shared fabric.  Returns
+        ``(servers, pause_seconds)`` — the servers the tenant ends up on.
+
+        ``candidates`` (default: the policy's ``candidates``) switches the
+        admission from greedy-then-replan to **placement co-search**: the
+        diverse candidate placements of :func:`place_candidates` are each
+        carried through the full replan
+        (``co_optimize_jobset(placement_candidates=...)``) and the best
+        full plan — placement included — is adopted.  ``candidates=1`` is
+        the greedy :func:`place_arrival` path, byte-identical to the
+        pre-search behaviour.  When the replan is suppressed (hysteresis,
+        adaptive skip, or a policy without the arrival trigger) the tenant
+        stays on the greedy seed placement."""
         if k < 1:
             raise ValueError(f"admit needs k >= 1 servers, got {k}")
+        n_cand = self.policy.candidates if candidates is None else candidates
         label = name or spec.name
-        servers = place_arrival(k, self.jobset.free_servers(), self.links())
-        self.jobset = self.jobset.with_tenant(
-            TenantJob(spec=spec, servers=servers, weight=weight, name=label)
+        free = self.jobset.free_servers()
+        links = self.links()
+        if n_cand <= 1:
+            placements = [place_arrival(k, free, links)]
+        else:
+            placements = place_candidates(k, free, links, n=n_cand)
+        base = self.jobset
+        self.jobset = base.with_tenant(
+            TenantJob(spec=spec, servers=placements[0], weight=weight,
+                      name=label)
         )
         self._probe_cache = None
         pause = 0.0
         if self.policy.on_arrival:
-            update = self._maybe_replan(now, "arrival")
+            if len(placements) > 1:
+                self._pending_candidates = [
+                    base.with_tenant(TenantJob(
+                        spec=spec, servers=p, weight=weight, name=label))
+                    for p in placements
+                ]
+            try:
+                update = self._maybe_replan(now, "arrival")
+            finally:
+                self._pending_candidates = None
             if update is not None:
                 pause = update.pause
-        return servers, pause
+        return self.jobset.tenant(label).servers, pause
 
     def depart(self, label: str, now: float = 0.0) -> float:
         """A tenant finishes: free its servers; the departure trigger may
-        compact the shared fabric.  Returns the pause charged (seconds)."""
+        compact the shared fabric, and a policy with ``max_migrations > 0``
+        additionally offers the freed capacity to the remaining tenants
+        (:meth:`rebalance`).  Returns the pause charged (seconds)."""
         self.jobset = self.jobset.without(label)
         self._probe_cache = None
+        pause = 0.0
         if self.policy.on_departure:
             update = self._maybe_replan(now, "departure")
             if update is not None:
-                return update.pause
-        return 0.0
+                pause += update.pause
+        if self.policy.max_migrations > 0 and self.jobset.tenants:
+            update = self.rebalance(now + pause, reason="departure")
+            if update is not None:
+                pause += update.pause
+        return pause
+
+    # -- churn-priced tenant migration ---------------------------------------
+
+    def _migration_proposals(
+        self, n_cand: int
+    ) -> list[tuple[str, tuple[int, ...]]]:
+        """Fast screen: per resident tenant, its best candidate placement
+        by the weighted objective *on the incumbent topology* (incremental
+        :class:`~repro.core.planeval.JobSetEvaluator` pricing with
+        synthetic rings for virgin placements — no union rebuild, no
+        optimizer run), returned ranked best-first.
+
+        The screen is deliberately a *ranking*, not a gate: a placement the
+        incumbent fabric serves badly can still win big once a replan
+        rebuilds rings over it, so :meth:`rebalance` full-evaluates the
+        ranked proposals in order instead of trusting the screen's absolute
+        values."""
+        strategies = self.strategies()
+        jse = JobSetEvaluator(self.jobset, self.topology, self.hw,
+                              synth_missing_rings=True)
+        jse.set_strategies(strategies)
+        links = self.links()
+        free = self.jobset.free_servers()
+        ranked: list[tuple[float, str, tuple[int, ...]]] = []
+        for t in self.jobset.tenants:
+            pool = free | set(t.servers)
+            if t.k > len(pool):
+                continue
+            best: tuple[float, tuple[int, ...]] | None = None
+            for servers in place_candidates(t.k, pool, links, n=n_cand):
+                if set(servers) == set(t.servers):
+                    continue
+                obj = jse.objective_at(t.label, strategies[t.label], servers)
+                if best is None or obj < best[0]:
+                    best = (obj, servers)
+            if best is not None:
+                ranked.append((best[0], t.label, best[1]))
+        ranked.sort(key=lambda r: (r[0], r[1]))
+        return [(label, servers) for _, label, servers in ranked]
+
+    def rebalance(
+        self,
+        now: float = 0.0,
+        reason: str = "departure",
+        max_migrations: int | None = None,
+        candidates: int | None = None,
+    ) -> PlanUpdate | None:
+        """Propose migrating up to ``max_migrations`` resident tenants to
+        better placements, adopting each move only when its probed win
+        clears its price.
+
+        Per migration slot: rank every tenant's best candidate placement
+        through the incremental evaluator on the incumbent topology
+        (:meth:`_migration_proposals`), then carry the ranked proposals —
+        best-screened first — through full warm-started replans on the
+        moved JobSet until one is adopted (up to one replan per resident
+        tenant: the screen deliberately ranks rather than gates, because
+        the incumbent fabric undervalues virgin placements).  Each move is
+        priced with :func:`repro.core.costmodel.migration_cost` — the
+        policy's ``migration_restart`` floor plus the tenant's
+        checkpoint-restore transfer
+        (:attr:`~repro.core.workloads.JobSpec.state_bytes`) — plus the
+        fiber churn of the topology swap priced exactly like a replan
+        (``fiber_move_latency * edge_churn``, or the flat
+        ``replan_latency``).  A move is adopted only when the probed
+        per-iteration win, amortized over the policy's ``payback_horizon``,
+        clears that cost; a slot in which every proposal is rejected backs
+        off the adaptive interval (the same hysteresis replans use) and
+        ends the pass.
+
+        Returns a migration :class:`~repro.core.simengine.PlanUpdate`
+        (fabric + summed pause + per-tenant
+        :class:`~repro.core.simengine.MigrationRecord`\\ s) when at least
+        one move was adopted, else ``None``.  Every decision — adopted or
+        rejected — is appended to ``self.migrations``."""
+        limit = (
+            self.policy.max_migrations
+            if max_migrations is None else max_migrations
+        )
+        if limit <= 0 or not self.jobset.tenants:
+            return None
+        # Only an active *adaptive backoff* suppresses rebalancing: a plain
+        # min_interval must not swallow the rebalance that depart() chains
+        # right after its own replan (which just stamped last_replan).  A
+        # backed-off interval, by contrast, is evidence that recent fabric
+        # changes did not pay for themselves.
+        if (
+            self.policy.adaptive
+            and self._adaptive_interval > self.policy.min_interval
+            and now - self.last_replan < self._adaptive_interval
+        ):
+            return None
+        self._replan_now = now
+        self.ensure_plan()
+        n_cand = (
+            candidates if candidates is not None
+            else max(2, self.policy.candidates)
+        )
+        adopted: list[MigrationRecord] = []
+        total_pause = 0.0
+        total_churn = 0
+        for _ in range(limit):
+            proposals = self._migration_proposals(n_cand)
+            if not proposals:
+                break
+            slot_adopted = False
+            for label, servers in proposals:
+                tenant = self.jobset.tenant(label)
+                est_before = self.estimated_iter_time()
+                trial = self.jobset.with_placement(label, servers)
+                plan = co_optimize_jobset(
+                    self._opt_jobset(trial, now), self.hw,
+                    rounds=self.policy.rounds,
+                    mcmc_iters=self.policy.mcmc_iters,
+                    seed=self.seed + 1 + self.n_replans,
+                    warm_topology=self.topology,
+                    warm_strategies=self.strategies(),
+                    forbidden=tuple(self.dead),
+                    compiled=self.policy.compiled,
+                )
+                saved = self.jobset
+                self.jobset = trial
+                try:
+                    est_after = self.estimated_iter_time(
+                        topo=plan.topology, strategy=plan.strategies
+                    )
+                finally:
+                    self.jobset = saved
+                churn = edge_churn(self.topology, plan.topology)
+                cost = migration_cost(
+                    tenant.spec.state_bytes, edges_moved=0,
+                    restart_s=self.policy.migration_restart,
+                ) + self._replan_pause(churn)
+                win = (est_before - est_after) * self.policy.payback_horizon
+                if not np.isfinite(est_before):
+                    win = np.inf if np.isfinite(est_after) else 0.0
+                record = MigrationRecord(
+                    time=now, tenant=label, src=tenant.servers, dst=servers,
+                    est_before=est_before, est_after=est_after, cost=cost,
+                    edges_moved=churn,
+                    adopted=bool(est_after <= est_before and win >= cost),
+                    reason=reason,
+                )
+                self.migrations.append(record)
+                if not record.adopted:
+                    continue
+                self.jobset = trial
+                self._adopt_plan(plan)
+                self._baseline = est_after
+                self._probe_cache = None
+                self._adaptive_interval = self.policy.min_interval
+                self.n_replans += 1
+                self.total_edges_moved += churn
+                self.last_replan = now
+                # Keep the log/counter correspondence every replan path
+                # maintains: one replanned record per n_replans bump.
+                self.log.append(ReplanRecord(
+                    time=now, trigger=f"rebalance:{reason}", replanned=True,
+                    est_before=est_before, est_after=est_after,
+                    edges_moved=churn,
+                ))
+                adopted.append(record)
+                total_pause += cost
+                total_churn += churn
+                slot_adopted = True
+                break
+            if not slot_adopted:
+                # Same backoff the adaptive replan gate uses: hopeless
+                # rebalancing stops burning optimizer runs until the next
+                # adopted change resets the interval.
+                if self.policy.adaptive:
+                    self._adaptive_interval = max(
+                        2 * self._adaptive_interval,
+                        self.policy.min_interval,
+                    )
+                break
+        if not adopted:
+            return None
+        self.last_pause = total_pause
+        update = PlanUpdate(
+            links=self.links(),
+            pause=total_pause,
+            label=f"rebalance:{reason}",
+            edges_moved=total_churn,
+            migrations=tuple(adopted),
+        )
+        return update
 
     def set_job(self, job: JobSpec, now: float = 0.0) -> float:
         raise TypeError(
@@ -941,8 +1300,14 @@ class JobSetRunResult:
     n_failures: int = 0
     edges_moved: int = 0
     log: list[ReplanRecord] = field(default_factory=list)
+    # Every rebalance decision (adopted or rejected), in decision order.
+    migrations: list[MigrationRecord] = field(default_factory=list)
     final_plan: JobSetPlan | None = None
     final_jobset: JobSet | None = None
+
+    @property
+    def n_migrations(self) -> int:
+        return sum(1 for m in self.migrations if m.adopted)
 
 
 def run_online_jobset(
@@ -965,6 +1330,12 @@ def run_online_jobset(
     the :class:`JobSetController` attached as observer.  Pass
     ``policy=ReoptPolicy.never()`` for the static shared baseline and share
     ``plan`` so both operators start from the same offline optimum.
+
+    Placement knobs ride the policy: ``candidates > 1`` co-searches each
+    arrival's placement through the replan, and ``max_migrations > 0``
+    lets departures trigger churn-priced rebalancing
+    (:meth:`JobSetController.rebalance`) — every migration decision lands
+    in ``JobSetRunResult.migrations``.
     """
     hw = hw or HardwareSpec()
     ctrl = JobSetController(jobset, hw=hw, policy=policy, seed=seed, plan=plan)
@@ -1038,6 +1409,7 @@ def run_online_jobset(
     result.n_replans = ctrl.n_replans
     result.edges_moved = ctrl.total_edges_moved
     result.log = ctrl.log
+    result.migrations = list(ctrl.migrations)
     result.final_plan = ctrl.plan
     result.final_jobset = ctrl.jobset
     return result
@@ -1046,6 +1418,85 @@ def run_online_jobset(
 # ---------------------------------------------------------------------------
 # Topology-aware placement of arriving jobs
 # ---------------------------------------------------------------------------
+
+
+def _free_capacity_matrix(
+    free: set[int] | frozenset[int],
+    links: dict[tuple[int, int], float],
+) -> tuple[np.ndarray, np.ndarray, list[list[int]]]:
+    """(sorted free server ids, symmetric free-to-free capacity matrix,
+    per-row neighbor first-touch order).
+
+    ``A[i, j]`` sums both directions of every live link between free
+    servers ``i`` and ``j`` — the adjacency the greedy packer and every
+    candidate generator scan, built once per call instead of rebuilding a
+    nested dict per step.  ``touch_order[i]`` lists ``i``'s neighbor
+    columns in the order they first appeared in ``links`` — the dict
+    reference summed each server's capacities in exactly that order, and
+    float addition is order-sensitive at the last ulp, so bit-identical
+    tie-breaking must replay it."""
+    ids = np.asarray(sorted(free), dtype=np.int64)
+    index = {int(v): i for i, v in enumerate(ids)}
+    m = ids.size
+    a_mat = np.zeros((m, m), dtype=np.float64)
+    touch_order: list[list[int]] = [[] for _ in range(m)]
+    for (a, b), c in links.items():
+        ia = index.get(a)
+        ib = index.get(b)
+        if ia is not None and ib is not None and c > 0:
+            if a_mat[ia, ib] == 0.0:
+                touch_order[ia].append(ib)
+            if a_mat[ib, ia] == 0.0:
+                touch_order[ib].append(ia)
+            a_mat[ia, ib] += c
+            a_mat[ib, ia] += c
+    return ids, a_mat, touch_order
+
+
+def _greedy_pack(
+    ids: np.ndarray,
+    a_mat: np.ndarray,
+    k: int,
+    allowed: np.ndarray,
+    touch_order: list[list[int]],
+) -> tuple[int, ...]:
+    """Greedy capacity packing over the ``allowed`` subset of a prebuilt
+    free-capacity matrix (the :func:`place_arrival` algorithm body).
+
+    Total capacities are summed per row in ``touch_order`` — the dict
+    reference's neighbor insertion order — because float addition is
+    order-sensitive at the last ulp and a last-ulp difference can flip a
+    tie-break.  Restricting to a subset reproduces a fresh build over that
+    subset bit for bit: the reduced build's insertion order is the same
+    subsequence of ``links``, and the capacity-toward-chosen vector
+    accumulates one column per pick exactly like the reference's
+    chosen-order walk (its zero addends for non-neighbors cannot change a
+    float sum)."""
+    sub = np.flatnonzero(allowed)
+    sub_ids = ids[sub]
+    sub_mat = a_mat[np.ix_(sub, sub)]
+    total = np.zeros(sub.size, dtype=np.float64)
+    for si, i in enumerate(sub):
+        acc = 0.0
+        for j in touch_order[i]:
+            if allowed[j]:
+                acc += a_mat[i, j]
+        total[si] = acc
+    # np.lexsort is stable ascending, last key primary; ids ascending break
+    # full ties toward the lowest id exactly like the dict reference.
+    seed = int(np.lexsort((sub_ids, -total))[0])
+    chosen_mask = np.zeros(sub.size, dtype=bool)
+    chosen_mask[seed] = True
+    cap_chosen = sub_mat[:, seed].copy()
+    for _ in range(k - 1):
+        pool = np.flatnonzero(~chosen_mask)
+        order = np.lexsort(
+            (sub_ids[pool], -total[pool], -cap_chosen[pool])
+        )
+        nxt = int(pool[order[0]])
+        chosen_mask[nxt] = True
+        cap_chosen += sub_mat[:, nxt]
+    return tuple(int(v) for v in sub_ids[chosen_mask])
 
 
 def place_arrival(
@@ -1061,33 +1512,96 @@ def place_arrival(
     degraded fabric this steers new jobs away from servers whose fibers died;
     on a healthy one it reduces fabric fragmentation versus lowest-id
     first-fit.  Falls back to lowest ids to break ties deterministically.
+
+    Vectorized: one symmetric NumPy adjacency over the free servers
+    replaces the per-step dict scans; each selection is a stable
+    lexicographic argmax on (cap to chosen, total cap, id), bit-identical
+    to the dict reference (see :func:`_greedy_pack`).
     """
     free = set(free)
     if k > len(free):
         raise ValueError(f"need {k} servers, only {len(free)} free")
     if k == 0:
         return ()
-    cap_to: dict[int, dict[int, float]] = {v: {} for v in free}
-    for (a, b), c in links.items():
-        if a in free and b in free and c > 0:
-            cap_to[a][b] = cap_to[a].get(b, 0.0) + c
-            cap_to[b][a] = cap_to[b].get(a, 0.0) + c
+    ids, a_mat, touch = _free_capacity_matrix(free, links)
+    return _greedy_pack(ids, a_mat, k, np.ones(ids.size, dtype=bool), touch)
 
-    seed = min(
-        free,
-        key=lambda v: (-sum(cap_to.get(v, {}).values()), v),
-    )
-    chosen = [seed]
-    pool = free - {seed}
-    while len(chosen) < k:
-        nxt = min(
-            pool,
-            key=lambda v: (
-                -sum(cap_to.get(v, {}).get(u, 0.0) for u in chosen),
-                -sum(cap_to.get(v, {}).values()),
-                v,
-            ),
-        )
-        chosen.append(nxt)
-        pool.discard(nxt)
-    return tuple(sorted(chosen))
+
+def place_candidates(
+    k: int,
+    free: set[int] | frozenset[int],
+    links: dict[tuple[int, int], float],
+    n: int = 4,
+) -> list[tuple[int, ...]]:
+    """Diverse candidate placements for a ``k``-server job — the input of
+    the placement co-search (``co_optimize_jobset(placement_candidates=)``).
+
+    Always seeds with the greedy capacity packing (:func:`place_arrival`)
+    so candidate 0 *is* today's placement; then adds deterministic
+    variants, deduplicated in order:
+
+    * **contiguous** — the ``k`` consecutive free ids with the smallest id
+      span (dense blocks keep short ring strides constructible);
+    * **spread** — every ``len(free)/k``-th free server by id (leaves the
+      largest contiguous holes for future arrivals);
+    * **anti-affinity** — the ``k`` free servers with the *least* live
+      capacity toward occupied servers (stays out of resident tenants'
+      fabric neighborhoods);
+    * further greedy packs with the previous seeds' top-connected server
+      excluded, until ``n`` distinct candidates exist or variants repeat.
+
+    Returns at most ``n`` distinct placements, greedy first.
+    """
+    free = set(free)
+    if k > len(free):
+        raise ValueError(f"need {k} servers, only {len(free)} free")
+    if k == 0:
+        return [()]
+    out: list[tuple[int, ...]] = []
+
+    def _add(p: tuple[int, ...]) -> None:
+        if len(p) == k and p not in out:
+            out.append(p)
+
+    # One adjacency build serves the greedy seed, the hot-server ranking,
+    # and every exclusion variant below.
+    ids, a_mat, touch = _free_capacity_matrix(free, links)
+    all_allowed = np.ones(ids.size, dtype=bool)
+    _add(_greedy_pack(ids, a_mat, k, all_allowed, touch))
+    if n <= 1:
+        return out[:n]
+
+    ordered = sorted(free)
+    # Contiguous: k-window of sorted free ids minimizing the id span.
+    spans = [
+        (ordered[i + k - 1] - ordered[i], ordered[i], i)
+        for i in range(len(ordered) - k + 1)
+    ]
+    _, _, i0 = min(spans)
+    _add(tuple(ordered[i0:i0 + k]))
+    # Spread: every ~len/k-th free id (stride >= 1, indices distinct).
+    stride = len(ordered) / k
+    _add(tuple(ordered[int(i * stride)] for i in range(k)))
+    # Anti-affinity: least live capacity toward busy (non-free) servers.
+    busy_cap = {v: 0.0 for v in ordered}
+    for (a, b), c in links.items():
+        if c <= 0:
+            continue
+        if a in busy_cap and b not in busy_cap:
+            busy_cap[a] += c
+        elif b in busy_cap and a not in busy_cap:
+            busy_cap[b] += c
+    _add(tuple(sorted(
+        sorted(ordered, key=lambda v: (busy_cap[v], v))[:k]
+    )))
+    # Extra diversity: greedy packs avoiding the best-connected servers.
+    by_total = np.lexsort((ids, -a_mat.sum(axis=1)))
+    allowed = all_allowed.copy()
+    for hot in by_total:
+        if len(out) >= n:
+            break
+        allowed[hot] = False
+        if k > int(allowed.sum()):
+            break
+        _add(_greedy_pack(ids, a_mat, k, allowed, touch))
+    return out[:n]

@@ -167,6 +167,12 @@ class PlanEvaluator:
         """Current size of the compiled link universe (grows lazily)."""
         return self._n_links
 
+    @property
+    def caps(self) -> np.ndarray:
+        """Per-link capacities over the current universe (read-only view:
+        ``parallel_links * link_bandwidth`` per compiled directed pair)."""
+        return self._cap[: self._n_links]
+
     def _link_id(self, pair: tuple[int, int]) -> int:
         lid = self._lid.get(pair)
         if lid is None:
@@ -453,10 +459,19 @@ class JobSetEvaluator:
         overlap: float = 0.0,
         demand_cache=None,
         vector_cache_size: int = 512,
+        synth_missing_rings: bool = False,
     ):
         self.jobset = jobset
         self.hw = hw
         self.overlap = overlap
+        # Price AllReduce groups the topology carries no rings for (a
+        # tenant probed at a placement the topology was never built for)
+        # as one synthetic ring over the members in placement order, each
+        # hop routed like an MP pair — mirroring
+        # ``iteration_tasks(synth_missing_rings=True)``.  Off by default:
+        # the MCMC hot loops must keep skipping such groups exactly like
+        # the reference walk.
+        self.synth_missing_rings = synth_missing_rings
         self.ev = plan_evaluator(topo, hw)
         self.demand_cache = demand_cache if demand_cache is not None else {}
         self._vectors = LRUCache(vector_cache_size)
@@ -483,17 +498,57 @@ class JobSetEvaluator:
 
     def tenant_loads(self, label: str, strategy) -> np.ndarray:
         """Cluster-level link-load vector of one tenant under ``strategy``
-        (cached)."""
+        at its resident placement (cached)."""
+        return self.tenant_loads_at(
+            label, strategy, self._tenant[label].servers
+        )
+
+    def tenant_loads_at(
+        self, label: str, strategy, servers: tuple[int, ...]
+    ) -> np.ndarray:
+        """Cluster-level link-load vector of one tenant under ``strategy``
+        embedded at an arbitrary candidate placement ``servers``.
+
+        Vectors are cached per ``(label, strategy, servers)`` — the
+        per-candidate demand cache of the placement co-search: scoring the
+        same tenant under k candidate placements re-prices only the remap +
+        scatter per placement (the job-local demand construction is shared
+        through ``demand_cache``), and re-visiting a placement is a cache
+        hit."""
         t = self._tenant[label]
-        key = (label, strategy, t.k)
+        servers = tuple(int(s) for s in servers)
+        key = (label, strategy, servers)
         v = self._vectors.get(key)
         if v is None:
             dem = remap_demand(
-                self._local_demand(t, strategy), t.servers, self.jobset.n
+                self._local_demand(t, strategy), servers, self.jobset.n
             )
+            if self.synth_missing_rings:
+                dem = self._with_synth_rings(dem)
             v = self.ev.loads(dem)
             self._vectors[key] = v
         return v
+
+    def _with_synth_rings(self, dem: TrafficDemand) -> TrafficDemand:
+        """Fold AllReduce groups without rings on this topology into MP
+        entries along one synthetic ring over the members (the bytes the
+        engine would actually route for them), leaving ringed groups to the
+        exact incidence path."""
+        missing = [
+            g for g in dem.allreduce
+            if len(g.members) > 1 and g.nbytes > 0
+            and not self.ev.topo.rings.get(g.members)
+        ]
+        if not missing:
+            return dem
+        out = TrafficDemand(n=dem.n, mp=dem.mp.copy())
+        out.allreduce = [g for g in dem.allreduce if g not in missing]
+        for g in missing:
+            k = len(g.members)
+            per_link = 2.0 * (k - 1) / k * g.nbytes
+            for i in range(k):
+                out.add_mp(g.members[i], g.members[(i + 1) % k], per_link)
+        return out
 
     def _objective(self, comm: float) -> tuple[float, dict[str, float]]:
         per_job: dict[str, float] = {}
@@ -551,6 +606,38 @@ class JobSetEvaluator:
         row[: v_old.size] -= v_old
         row[: v_new.size] += v_new
         return row
+
+    def placement_row(
+        self, label: str, strategy, servers: tuple[int, ...]
+    ) -> np.ndarray:
+        """Load vector of the current state with tenant ``label`` re-seated
+        at candidate placement ``servers`` under ``strategy``:
+        ``total - old_vector + new_vector`` — the union demand never gets
+        rebuilt.  Requires :meth:`set_strategies` first."""
+        assert self._total is not None, "call set_strategies first"
+        t = self._tenant[label]
+        if tuple(servers) == t.servers and strategy == self.strategies[label]:
+            return self._total
+        v_old = self.tenant_loads(label, self.strategies[label])
+        v_new = self.tenant_loads_at(label, strategy, servers)
+        row = self.ev.pad(self._total)
+        if row is self._total:
+            row = row.copy()
+        row[: v_old.size] -= v_old
+        row[: v_new.size] += v_new
+        return row
+
+    def objective_at(
+        self, label: str, strategy, servers: tuple[int, ...]
+    ) -> float:
+        """Weighted-mean objective with ``label`` moved to candidate
+        placement ``servers`` (not adopted) — the fast screen of the
+        migration / placement co-search."""
+        return self._objective(
+            self.ev.comm_time_from_loads(
+                self.placement_row(label, strategy, servers)
+            )
+        )[0]
 
     def propose(
         self, label: str, strategy

@@ -422,6 +422,28 @@ class DeadlineFairness(FairnessPolicy):
         return self.base * ramp
 
 
+@dataclass(frozen=True)
+class MigrationRecord:
+    """One tenant-migration decision (adopted or rejected), for run logs
+    and :class:`ScenarioResult`.
+
+    ``cost`` is the priced pause in seconds
+    (:func:`repro.core.costmodel.migration_cost` checkpoint-restore +
+    churn-priced fiber moves); ``est_before`` / ``est_after`` are the
+    probed objective on the incumbent vs the post-migration plan."""
+
+    time: float
+    tenant: str
+    src: tuple[int, ...]  # old placement
+    dst: tuple[int, ...]  # proposed placement
+    est_before: float = float("nan")
+    est_after: float = float("nan")
+    cost: float = 0.0
+    edges_moved: int = 0
+    adopted: bool = False
+    reason: str = ""
+
+
 @dataclass
 class PlanUpdate:
     """A mid-run plan mutation, returned by :class:`ScenarioObserver` hooks.
@@ -434,12 +456,20 @@ class PlanUpdate:
     ``pause`` seconds from the moment the update is applied.  ``edges_moved``
     is the physical churn behind the update (fibers the patch panel had to
     re-seat) — reported, summed, in ``ScenarioResult.edges_moved``.
+
+    A migration update (``migrations`` non-empty) is the same mechanism with
+    provenance: the fabric swap came from re-seating whole tenants
+    (:meth:`repro.core.online.JobSetController.rebalance`), its ``pause``
+    includes their checkpoint-restore cost, and the per-tenant
+    :class:`MigrationRecord`\\ s are surfaced, concatenated, in
+    ``ScenarioResult.migrations``.
     """
 
     links: dict[tuple[int, int], float] | None = None
     pause: float = 0.0
     label: str = ""
     edges_moved: int = 0
+    migrations: tuple[MigrationRecord, ...] = ()
 
 
 @dataclass(frozen=True)
@@ -533,6 +563,8 @@ class ScenarioResult:
     n_replans: int = 0  # observer-applied PlanUpdates
     replan_times: tuple[float, ...] = ()
     edges_moved: int = 0  # physical fiber churn summed over PlanUpdates
+    # Tenant migrations carried by applied PlanUpdates, in application order.
+    migrations: tuple[MigrationRecord, ...] = ()
 
 
 class _ScenarioFlow(_FlowState):
@@ -653,6 +685,7 @@ class SimEngine:
         n_replans = 0
         edges_moved = 0
         replan_times: list[float] = []
+        migrations: list[MigrationRecord] = []
         fairness = scenario.fairness
         # Observer bookkeeping: departure detection + check scheduling.
         outstanding: dict[str, int] = {j.name: len(j.tasks) for j in jobs}
@@ -792,6 +825,7 @@ class SimEngine:
                 pause_until = max(pause_until, now + update.pause)
             n_replans += 1
             edges_moved += update.edges_moved
+            migrations.extend(update.migrations)
             replan_times.append(now)
 
         def notify_departures() -> None:
@@ -987,6 +1021,7 @@ class SimEngine:
             n_replans=n_replans,
             replan_times=tuple(replan_times),
             edges_moved=edges_moved,
+            migrations=tuple(migrations),
         )
 
     # -- vectorized benchmark inner loops -----------------------------------

@@ -244,6 +244,75 @@ def mcmc_search(
 # ---------------------------------------------------------------------------
 
 
+def _tenant_demands(
+    strategies: dict[str, Strategy],
+    jobset: JobSet,
+    _demand_cache: dict | None,
+) -> dict[str, TrafficDemand]:
+    """Per-tenant *job-local* demands under ``strategies``, memoized in
+    ``_demand_cache`` with the shared ``(label, strategy, k)`` keys."""
+    demands: dict[str, TrafficDemand] = {}
+    for t in jobset.tenants:
+        s = strategies[t.label]
+        if _demand_cache is None:
+            demands[t.label] = s.demand(t.spec, t.k)
+            continue
+        key = (t.label, s, t.k)
+        if key not in _demand_cache:
+            _demand_cache[key] = s.demand(t.spec, t.k)
+        demands[t.label] = _demand_cache[key]
+    return demands
+
+
+def tenant_comm_times(
+    strategies: dict[str, Strategy],
+    jobset: JobSet,
+    topo: Topology,
+    hw: HardwareSpec,
+    _demand_cache: dict | None = None,
+) -> dict[str, float]:
+    """Per-tenant *own* bottleneck comm time on the shared fabric.
+
+    The union objective charges every tenant the union's bottleneck; this
+    decomposition instead gives each tenant its weighted share of every
+    contended link: on link ``l`` a tenant holding ``v_i[l]`` of the load
+    runs at ``cap_l * w_i / sum(w_j over tenants loading l)``, so its own
+    comm time is ``max_l v_i[l] * sum_active_w_l / (w_i * cap_l)`` — the
+    time its *own* bytes need under weighted processor sharing.  A tenant
+    alone on all of its links gets exactly ``max_l v_i[l] / cap_l``; a
+    tenant's decomposed time never exceeds the union comm time scaled by
+    the inverse of its weight share, and at unit weights the heaviest
+    tenant on the union bottleneck recovers the union time."""
+    from .demand import remap_demand
+
+    demands = _tenant_demands(strategies, jobset, _demand_cache)
+    ev = plan_evaluator(topo, hw)
+    vecs = [
+        ev.loads(remap_demand(demands[t.label], t.servers, jobset.n))
+        for t in jobset.tenants
+    ]
+    n_links = ev.n_links
+    out: dict[str, float] = {}
+    if not n_links:
+        return {t.label: 0.0 for t in jobset.tenants}
+    mat = np.zeros((len(vecs), n_links), dtype=np.float64)
+    for row, v in zip(mat, vecs):
+        row[: v.size] = v
+    weights = np.asarray([t.weight for t in jobset.tenants])
+    active = mat > 0
+    active_w = active.T @ weights  # per-link sum of contending weights
+    caps = ev.caps
+    for i, t in enumerate(jobset.tenants):
+        mask = active[i]
+        if not mask.any():
+            out[t.label] = 0.0
+            continue
+        out[t.label] = float(np.max(
+            mat[i, mask] * active_w[mask] / (weights[i] * caps[mask])
+        ))
+    return out
+
+
 def evaluate_jobset(
     strategies: dict[str, Strategy],
     jobset: JobSet,
@@ -252,7 +321,8 @@ def evaluate_jobset(
     overlap: float = 0.0,
     _demand_cache: dict | None = None,
     compiled: bool = False,
-) -> tuple[float, TrafficDemand, dict[str, float]]:
+    decompose: bool = False,
+):
     """(weighted objective, union demand, per-job iteration times).
 
     The shared fabric serializes the union traffic: every job sees the fluid
@@ -271,17 +341,14 @@ def evaluate_jobset(
     (:func:`~repro.core.planeval.plan_evaluator`); the default is the
     reference :func:`~repro.core.netsim.topoopt_comm_time`.  The true hot
     loop of :func:`mcmc_search_jobset` goes further and re-prices only the
-    moved tenant's delta (:class:`~repro.core.planeval.JobSetEvaluator`)."""
-    demands: dict[str, TrafficDemand] = {}
-    for t in jobset.tenants:
-        s = strategies[t.label]
-        if _demand_cache is None:
-            demands[t.label] = s.demand(t.spec, t.k)
-            continue
-        key = (t.label, s, t.k)
-        if key not in _demand_cache:
-            _demand_cache[key] = s.demand(t.spec, t.k)
-        demands[t.label] = _demand_cache[key]
+    moved tenant's delta (:class:`~repro.core.planeval.JobSetEvaluator`).
+
+    ``decompose=True`` appends a fourth element: each tenant's *own*
+    bottleneck comm time (:func:`tenant_comm_times`, weighted share of the
+    contended links) reported alongside the union-charged per-job times —
+    the objective itself is unchanged, so fixed-seed search results cannot
+    shift."""
+    demands = _tenant_demands(strategies, jobset, _demand_cache)
     union = jobset.union(demands)
     if compiled:
         comm = plan_evaluator(topo, hw).comm_time(union)
@@ -293,6 +360,11 @@ def evaluate_jobset(
         comp = compute_time(t.flops_per_iteration, t.k, hw)
         per_job[t.label] = iteration_time(comm, comp, overlap=overlap)
         obj += t.weight * per_job[t.label]
+    if decompose:
+        per_comm = tenant_comm_times(
+            strategies, jobset, topo, hw, _demand_cache=_demand_cache
+        )
+        return obj / jobset.total_weight, union, per_job, per_comm
     return obj / jobset.total_weight, union, per_job
 
 

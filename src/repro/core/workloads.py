@@ -51,6 +51,20 @@ class JobSpec:
     def dense_bytes(self) -> float:
         return self.dense_params * self.bytes_per_param
 
+    @property
+    def state_bytes(self) -> float:
+        """Bytes of model state a migration must checkpoint-restore: dense
+        parameters plus embedding tables plus expert weights (the migration
+        cost model, :func:`repro.core.costmodel.migration_cost`, owns any
+        optimizer-state multiplier)."""
+        params = (
+            self.dense_params
+            + self.n_tables * self.table_rows * self.table_dim
+            + self.n_moe_layers * self.n_experts * 3 * self.d_model
+            * self.moe_hidden
+        )
+        return params * self.bytes_per_param
+
     def with_batch(self, batch_per_gpu: int) -> "JobSpec":
         return replace(self, batch_per_gpu=batch_per_gpu)
 
@@ -209,6 +223,19 @@ class JobSet:
             raise KeyError(label)
         return JobSet(n=self.n, tenants=kept)
 
+    def with_placement(self, label: str, servers: Sequence[int]) -> "JobSet":
+        """The same set with tenant ``label`` moved to ``servers`` (a
+        candidate placement or an adopted migration); every other tenant is
+        untouched.  Validation re-runs, so an overlapping move raises."""
+        moved = [
+            replace(t, servers=tuple(int(s) for s in servers))
+            if t.label == label else t
+            for t in self.tenants
+        ]
+        if all(t.label != label for t in self.tenants):
+            raise KeyError(label)
+        return JobSet(n=self.n, tenants=moved)
+
     def union(self, demands: Mapping[str, TrafficDemand]) -> TrafficDemand:
         """Cluster-level union of per-tenant job-local demands.
 
@@ -228,6 +255,22 @@ class JobSet:
             t.label: strategies[t.label].demand(t.spec, t.k)
             for t in self.tenants
         })
+
+
+def placement_diff(
+    old: JobSet, new: JobSet
+) -> dict[str, tuple[tuple[int, ...], tuple[int, ...]]]:
+    """Tenants whose server set differs between two JobSets:
+    ``{label: (old_servers, new_servers)}``.  Labels present in only one set
+    (admissions, departures) are ignored — the diff prices *migrations*, and
+    a migration needs both endpoints."""
+    old_by = {t.label: t.servers for t in old.tenants}
+    diff: dict[str, tuple[tuple[int, ...], tuple[int, ...]]] = {}
+    for t in new.tenants:
+        before = old_by.get(t.label)
+        if before is not None and set(before) != set(t.servers):
+            diff[t.label] = (before, t.servers)
+    return diff
 
 
 # --- Demand construction given a strategy ----------------------------------

@@ -1,0 +1,616 @@
+"""Placement co-search + churn-priced migration invariants.
+
+* ``place_arrival`` vectorization: bit-identical to the dict-walk
+  reference (randomized fabrics, exactly-representable capacities).
+* ``place_candidates``: greedy seed first, distinct valid placements.
+* Placement co-search: ``placement_candidates=[jobset]`` reproduces the
+  no-candidates path bit for bit; candidate plans beat-or-match greedy on
+  randomized fragmented fabrics; ``admit(candidates=k)`` adopts the
+  winning placement and ``candidates=1`` stays on the greedy path.
+* Golden equivalence: ``candidates=1, max_migrations=0`` run is
+  bit-identical to the plain reactive run (the PR-3/4 behaviour).
+* Migration: ``migration_cost`` pricing, rebalance invariants (disjoint
+  placements, tenant shapes preserved, expensive state stays pinned),
+  capacity conservation across a migration ``PlanUpdate``.
+* Satellites: ``rebase_demand`` placement rebase, per-tenant comm
+  decomposition, deadline-aware replanning.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.alternating import co_optimize_jobset
+from repro.core.costmodel import (
+    CHECKPOINT_RESTORE_BW,
+    FIBER_MOVE_S,
+    MIGRATION_RESTART_S,
+    migration_cost,
+)
+from repro.core.demand import rebase_demand, remap_demand
+from repro.core.netsim import HardwareSpec
+from repro.core.online import (
+    JobSetController,
+    ReoptPolicy,
+    TraceEvent,
+    place_arrival,
+    place_candidates,
+    run_online_jobset,
+)
+from repro.core.simengine import (
+    DeadlineFairness,
+    LinkFailure,
+    MigrationRecord,
+    PlanUpdate,
+    Scenario,
+    ScenarioObserver,
+    SimEngine,
+    SimJob,
+    Task,
+)
+from repro.core.strategy_search import (
+    default_strategy,
+    evaluate_jobset,
+    tenant_comm_times,
+)
+from repro.core.workloads import (
+    BERT,
+    DLRM,
+    MOE_16E,
+    VGG16,
+    JobSet,
+    TenantJob,
+    job_demand,
+    placement_diff,
+)
+
+HW = HardwareSpec(link_bandwidth=12.5e9, degree=3)
+
+
+def _fragmented_jobset(n=12):
+    """DLRM/BERT interleaved at stride 3: scattered free pool."""
+    return JobSet(n=n, tenants=[
+        TenantJob(spec=DLRM, servers=tuple(range(0, n, 3)), name="dlrm"),
+        TenantJob(spec=BERT, servers=tuple(range(1, n, 3)), name="bert"),
+    ])
+
+
+@pytest.fixture(scope="module")
+def frag_plan():
+    return co_optimize_jobset(_fragmented_jobset(), HW, rounds=2,
+                              mcmc_iters=20, seed=1)
+
+
+# ---------------------------------------------------------------------------
+# place_arrival vectorization: bit-identical to the dict reference
+# ---------------------------------------------------------------------------
+
+
+def _place_arrival_reference(k, free, links):
+    """The pre-vectorization dict-walk implementation, verbatim."""
+    free = set(free)
+    if k > len(free):
+        raise ValueError(f"need {k} servers, only {len(free)} free")
+    if k == 0:
+        return ()
+    cap_to = {v: {} for v in free}
+    for (a, b), c in links.items():
+        if a in free and b in free and c > 0:
+            cap_to[a][b] = cap_to[a].get(b, 0.0) + c
+            cap_to[b][a] = cap_to[b].get(a, 0.0) + c
+    seed = min(free, key=lambda v: (-sum(cap_to.get(v, {}).values()), v))
+    chosen = [seed]
+    pool = free - {seed}
+    while len(chosen) < k:
+        nxt = min(pool, key=lambda v: (
+            -sum(cap_to.get(v, {}).get(u, 0.0) for u in chosen),
+            -sum(cap_to.get(v, {}).values()),
+            v,
+        ))
+        chosen.append(nxt)
+        pool.discard(nxt)
+    return tuple(sorted(chosen))
+
+
+def test_place_arrival_matches_reference_on_random_fabrics():
+    """Bit-identical to the dict walk even for capacities whose float sums
+    are order-sensitive (0.1, 0.7, random()): the vectorized totals replay
+    the reference's neighbor first-touch summation order."""
+    rng = random.Random(7)
+    for _ in range(150):
+        n = rng.randrange(4, 24)
+        free = set(rng.sample(range(n), rng.randrange(2, n)))
+        links = {}
+        for _ in range(rng.randrange(3, 50)):
+            a, b = rng.randrange(n), rng.randrange(n)
+            if a != b:
+                links[(a, b)] = links.get((a, b), 0.0) + rng.choice(
+                    [0.1, 0.7, 1 / 3, rng.random(), rng.randrange(1, 32) / 4]
+                )
+        k = rng.randrange(1, len(free) + 1)
+        assert place_arrival(k, free, links) == \
+            _place_arrival_reference(k, free, links)
+
+
+def test_place_arrival_edge_cases_unchanged():
+    links = {(0, 1): 1.0, (1, 2): 1.0, (0, 2): 1.0, (4, 5): 1.0}
+    assert place_arrival(3, set(range(8)), links) == (0, 1, 2)
+    assert place_arrival(0, {0, 1}, links) == ()
+    with pytest.raises(ValueError):
+        place_arrival(3, {0, 1}, {})
+
+
+# ---------------------------------------------------------------------------
+# place_candidates
+# ---------------------------------------------------------------------------
+
+
+def test_place_candidates_greedy_first_distinct_and_valid():
+    links = {(0, 1): 1.0, (1, 2): 1.0, (0, 2): 1.0, (4, 5): 1.0, (5, 7): 1.0}
+    free = set(range(8))
+    cands = place_candidates(3, free, links, n=4)
+    assert cands[0] == place_arrival(3, free, links)
+    assert len(cands) == len(set(cands))
+    for p in cands:
+        assert len(p) == 3 and set(p) <= free
+    assert 1 < len(cands) <= 4
+
+
+def test_place_candidates_n1_is_greedy_only():
+    links = {(0, 1): 1.0}
+    assert place_candidates(2, {0, 1, 2}, links, n=1) == \
+        [place_arrival(2, {0, 1, 2}, links)]
+
+
+def test_place_candidates_validates_like_place_arrival():
+    with pytest.raises(ValueError):
+        place_candidates(4, {0, 1}, {}, n=3)
+    assert place_candidates(0, {0, 1}, {}, n=3) == [()]
+
+
+# ---------------------------------------------------------------------------
+# Placement co-search: plan-level equivalence + dominance
+# ---------------------------------------------------------------------------
+
+
+def test_single_candidate_reproduces_plain_path_bitwise(frag_plan):
+    js = _fragmented_jobset()
+    plan = co_optimize_jobset(js, HW, rounds=2, mcmc_iters=20, seed=1,
+                              placement_candidates=[js])
+    assert plan.iter_time == frag_plan.iter_time
+    assert plan.strategies == frag_plan.strategies
+    assert plan.per_job == frag_plan.per_job
+    assert sorted(plan.topology.graph.edges()) == \
+        sorted(frag_plan.topology.graph.edges())
+    assert plan.candidate_index == 0
+    assert plan.jobset is js
+
+
+def test_placement_candidates_validate():
+    js = _fragmented_jobset()
+    with pytest.raises(ValueError, match="non-empty"):
+        co_optimize_jobset(js, HW, rounds=1, mcmc_iters=5,
+                           placement_candidates=[])
+    other = JobSet(n=12, tenants=[
+        TenantJob(spec=VGG16, servers=(0, 1), name="other")])
+    with pytest.raises(ValueError, match="same tenant labels"):
+        co_optimize_jobset(js, HW, rounds=1, mcmc_iters=5,
+                           placement_candidates=[other])
+
+
+def test_cosearch_never_worse_than_greedy_on_fragmented_fabrics():
+    """Randomized: the winning candidate plan's objective is <= the greedy
+    candidate's (greedy is always candidate 0, same seed)."""
+    rng = random.Random(3)
+    for trial in range(4):
+        n = 12
+        js = _fragmented_jobset(n)
+        free = sorted(js.free_servers())
+        dead = set()
+        while len(dead) < 3:
+            a, b = rng.sample(free, 2)
+            dead.add((min(a, b), max(a, b)))
+        links = {}  # degraded fabric: only what a healthy plan would give
+        base = co_optimize_jobset(js, HW, rounds=1, mcmc_iters=10, seed=trial,
+                                  forbidden=tuple(dead))
+        k = 2
+        from repro.core.simengine import links_from_topology
+
+        links = links_from_topology(base.topology, HW)
+        arrived = js.with_tenant(
+            TenantJob(spec=MOE_16E, servers=tuple(free[:k]), name="moe"))
+        cands = [
+            js.with_tenant(TenantJob(spec=MOE_16E, servers=p, name="moe"))
+            for p in place_candidates(k, set(free), links, n=4)
+        ]
+        greedy_plan = co_optimize_jobset(
+            cands[0], HW, rounds=1, mcmc_iters=10, seed=trial,
+            forbidden=tuple(dead))
+        co_plan = co_optimize_jobset(
+            arrived, HW, rounds=1, mcmc_iters=10, seed=trial,
+            forbidden=tuple(dead), placement_candidates=cands)
+        assert co_plan.iter_time <= greedy_plan.iter_time
+
+
+def test_admit_cosearch_adopts_winning_candidate(frag_plan):
+    js = _fragmented_jobset()
+    ctrl = JobSetController(
+        js, hw=HW,
+        policy=ReoptPolicy.reactive(replan_latency=1e-3, candidates=4),
+        plan=frag_plan, seed=0,
+    )
+    free = ctrl.jobset.free_servers()
+    servers, pause = ctrl.admit(MOE_16E, 3, name="moe", now=0.0)
+    assert set(servers) <= free and len(servers) == 3
+    assert ctrl.n_replans == 1 and pause == pytest.approx(1e-3)
+    # The resident set and the adopted plan agree on the placement.
+    assert ctrl.jobset.tenant("moe").servers == servers
+    assert ctrl.plan.jobset.tenant("moe").servers == servers
+    ctrl.jobset.validate()  # disjointness holds after adoption
+
+
+def test_admit_suppressed_replan_keeps_greedy_seed(frag_plan):
+    js = _fragmented_jobset()
+    ctrl = JobSetController(
+        js, hw=HW,
+        policy=ReoptPolicy.reactive(replan_latency=1e-3, candidates=4,
+                                    min_interval=100.0),
+        plan=frag_plan, seed=0,
+    )
+    ctrl.fail((0, 3), now=0.0)  # consume the hysteresis budget
+    greedy = place_arrival(3, ctrl.jobset.free_servers(), ctrl.links())
+    servers, pause = ctrl.admit(MOE_16E, 3, name="moe", now=1.0)
+    assert servers == greedy and pause == 0.0
+    assert ctrl._pending_candidates is None  # cleared even when suppressed
+
+
+# ---------------------------------------------------------------------------
+# Golden equivalence: candidates=1 / max_migrations=0 == plain reactive
+# ---------------------------------------------------------------------------
+
+
+def test_run_online_jobset_golden_equivalence(frag_plan):
+    js = _fragmented_jobset()
+    trace = (
+        TraceEvent(iteration=0, kind="fail", link=(2, 5)),
+        TraceEvent(iteration=1, kind="arrive", job=MOE_16E, k=3, name="moe"),
+        TraceEvent(iteration=2, kind="depart", name="bert"),
+    )
+    plain = run_online_jobset(
+        js, HW, policy=ReoptPolicy.reactive(replan_latency=1e-3),
+        trace=trace, n_iters=4, seed=0, plan=frag_plan)
+    explicit = run_online_jobset(
+        js, HW,
+        policy=ReoptPolicy.reactive(replan_latency=1e-3, candidates=1,
+                                    max_migrations=0),
+        trace=trace, n_iters=4, seed=0, plan=frag_plan)
+    assert explicit.total_time == plain.total_time
+    assert explicit.iter_times == plain.iter_times
+    assert explicit.job_times == plain.job_times
+    assert explicit.n_replans == plain.n_replans
+    assert explicit.edges_moved == plain.edges_moved
+    assert explicit.migrations == [] == plain.migrations
+    assert sorted(explicit.final_plan.topology.graph.edges()) == \
+        sorted(plain.final_plan.topology.graph.edges())
+
+
+# ---------------------------------------------------------------------------
+# Migration: pricing, rebalance invariants, engine PlanUpdate
+# ---------------------------------------------------------------------------
+
+
+def test_migration_cost_prices_components():
+    assert migration_cost(0.0) == MIGRATION_RESTART_S
+    assert migration_cost(2e10) == pytest.approx(
+        MIGRATION_RESTART_S + 2e10 / CHECKPOINT_RESTORE_BW)
+    assert migration_cost(0.0, edges_moved=3) == pytest.approx(
+        MIGRATION_RESTART_S + 3 * FIBER_MOVE_S)
+    assert migration_cost(1e9, 2, fiber_move_s=0.5, checkpoint_bw=1e9,
+                          restart_s=1.0) == pytest.approx(1.0 + 1.0 + 1.0)
+    with pytest.raises(ValueError):
+        migration_cost(-1.0)
+
+
+def test_state_bytes_counts_tables_and_experts():
+    assert VGG16.state_bytes == VGG16.dense_bytes
+    assert DLRM.state_bytes == pytest.approx(
+        DLRM.dense_bytes + 64 * 1e7 * 128 * 4)
+    moe_extra = 8 * 16 * 3 * 1024 * 2048 * 4
+    assert MOE_16E.state_bytes == pytest.approx(
+        MOE_16E.dense_bytes + moe_extra)
+
+
+def test_rebalance_invariants(frag_plan):
+    """An adopted migration keeps the JobSet well-formed: same tenants,
+    same shard sizes, disjoint placements; records land on the controller."""
+    js = _fragmented_jobset()
+    ctrl = JobSetController(
+        js, hw=HW,
+        policy=ReoptPolicy.reactive(
+            replan_latency=1e-3, max_migrations=2,
+            payback_horizon=1e6, migration_restart=1e-6),
+        plan=frag_plan, seed=0,
+    )
+    ctrl.admit(MOE_16E, 3, name="moe", now=0.0)
+    before = {t.label: t.k for t in ctrl.jobset.tenants}
+    pause = ctrl.depart("bert", now=1.0)  # wires rebalance in
+    assert pause >= 0.0
+    after = ctrl.jobset
+    after.validate()  # disjoint placements survive any migration
+    assert {t.label: t.k for t in after.tenants} == \
+        {k: v for k, v in before.items() if k != "bert"}
+    for rec in ctrl.migrations:
+        assert isinstance(rec, MigrationRecord)
+        assert rec.reason == "departure"
+        assert len(rec.src) == len(rec.dst)
+        assert rec.cost > 0.0
+        if rec.adopted:
+            assert rec.est_after <= rec.est_before
+            assert after.tenant(rec.tenant).servers == rec.dst
+
+
+def test_rebalance_rejects_expensive_state(frag_plan):
+    """With a realistic restart floor every move is unprofitable over a
+    short horizon: rebalance must reject (records kept) and leave
+    placements untouched."""
+    js = _fragmented_jobset()
+    ctrl = JobSetController(
+        js, hw=HW,
+        policy=ReoptPolicy.reactive(
+            replan_latency=1e-3, max_migrations=2,
+            payback_horizon=1.0, migration_restart=MIGRATION_RESTART_S),
+        plan=frag_plan, seed=0,
+    )
+    placements = {t.label: t.servers for t in ctrl.jobset.tenants}
+    update = ctrl.rebalance(now=0.0, reason="departure")
+    assert update is None
+    assert {t.label: t.servers for t in ctrl.jobset.tenants} == placements
+    assert all(not m.adopted for m in ctrl.migrations)
+
+
+def test_rebalance_not_suppressed_by_plain_min_interval(frag_plan):
+    """Regression: depart() replans (stamping last_replan) right before it
+    chains rebalance — a plain min_interval hysteresis must not swallow
+    the rebalance it was wired to.  Only an active adaptive backoff may."""
+    js = _fragmented_jobset()
+    ctrl = JobSetController(
+        js, hw=HW,
+        policy=ReoptPolicy.reactive(
+            replan_latency=1e-3, min_interval=100.0, max_migrations=2,
+            payback_horizon=1e6, migration_restart=1e-6),
+        plan=frag_plan, seed=0,
+    )
+    ctrl.fail((0, 3), now=0.0)  # stamps last_replan at t=0
+    ctrl.rebalance(now=1.0, reason="departure")  # inside min_interval
+    assert ctrl.migrations  # decisions were taken, not gated away
+    # An adopted migration keeps log and counter in correspondence.
+    assert sum(1 for r in ctrl.log if r.replanned) == ctrl.n_replans
+    # Active adaptive backoff, by contrast, does suppress.
+    backed = JobSetController(
+        js, hw=HW,
+        policy=ReoptPolicy.reactive(
+            fiber_move_latency=1e6, adaptive=True, max_migrations=2,
+            payback_horizon=1e6, migration_restart=1e-6),
+        plan=frag_plan, seed=0,
+    )
+    backed.fail((0, 3), now=0.0)  # adaptive skip: backs off the interval
+    assert backed._adaptive_interval > backed.policy.min_interval
+    n_before = len(backed.migrations)
+    assert backed.rebalance(now=1e-6, reason="departure") is None
+    assert len(backed.migrations) == n_before  # gated: no decisions taken
+
+
+def test_rebalance_disabled_is_noop(frag_plan):
+    ctrl = JobSetController(
+        _fragmented_jobset(), hw=HW, policy=ReoptPolicy.never(),
+        plan=frag_plan, seed=0,
+    )
+    assert ctrl.rebalance(now=0.0) is None
+    assert ctrl.migrations == []
+    assert ctrl.n_replans == 0
+
+
+def test_migration_planupdate_conserves_bytes_and_reports_records():
+    """A mid-run migration PlanUpdate behaves like any fabric swap: flows
+    keep their remaining bytes, the pause is charged, and the records
+    surface in ScenarioResult.migrations."""
+    rec = MigrationRecord(time=1.0, tenant="j", src=(0,), dst=(2,),
+                          cost=2.0, adopted=True, reason="departure")
+
+    class Migrate(ScenarioObserver):
+        fired = False
+
+        def on_failure(self, view, link):
+            if Migrate.fired:
+                return None
+            Migrate.fired = True
+            return PlanUpdate(
+                links={(0, 2): 100.0, (2, 1): 100.0},
+                pause=2.0, label="rebalance:departure", edges_moved=2,
+                migrations=(rec,),
+            )
+
+    r = SimEngine().run(Scenario(
+        links={(0, 1): 100.0, (0, 2): 100.0, (2, 1): 100.0},
+        jobs=[SimJob("j", [
+            Task(tid=0, kind="flow", nbytes=1000.0, route=(0, 1))])],
+        failures=(LinkFailure(time=5.0, link=(0, 1)),),
+        n=3,
+    ), observer=Migrate())
+    assert r.migrations == (rec,)
+    assert r.edges_moved == 2
+    assert r.delivered["j"] == pytest.approx(1000.0)
+    # 5 s direct + 2 s pause + 500 B over the 2-hop detour at 100 B/s.
+    assert r.makespan == pytest.approx(12.0, rel=1e-6)
+    assert not r.stalled
+
+
+def test_run_online_jobset_reports_migrations(frag_plan):
+    js = _fragmented_jobset()
+    trace = (
+        TraceEvent(iteration=0, kind="fail", link=(2, 5)),
+        TraceEvent(iteration=0, kind="fail", link=(5, 8)),
+        TraceEvent(iteration=1, kind="arrive", job=MOE_16E, k=3, name="moe"),
+        TraceEvent(iteration=2, kind="depart", name="bert"),
+    )
+    r = run_online_jobset(
+        js, HW,
+        policy=ReoptPolicy.reactive(
+            replan_latency=1e-3, candidates=4, max_migrations=2,
+            payback_horizon=1e6, migration_restart=1e-6),
+        trace=trace, n_iters=4, seed=0, plan=frag_plan)
+    assert r.n_migrations == sum(1 for m in r.migrations if m.adopted)
+    final = {t.label for t in r.final_jobset.tenants}
+    assert final == {"dlrm", "moe"}
+    r.final_jobset.validate()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: rebase_demand (placement rebase without union rebuild)
+# ---------------------------------------------------------------------------
+
+
+def test_rebase_demand_equals_remap_at_new_placement():
+    d = job_demand(DLRM, 4, table_hosts=(0, 2))
+    old = (1, 3, 5, 7)
+    new = (0, 2, 4, 6)
+    a = rebase_demand(remap_demand(d, old, 8), old, new)
+    b = remap_demand(d, new, 8)
+    np.testing.assert_array_equal(a.mp, b.mp)
+    assert [(g.members, g.nbytes) for g in a.allreduce] == \
+        [(g.members, g.nbytes) for g in b.allreduce]
+
+
+def test_rebase_demand_validates():
+    d = remap_demand(job_demand(VGG16, 2), (0, 1), 4)
+    with pytest.raises(ValueError):
+        rebase_demand(d, (0, 1), (2,))  # size mismatch
+    with pytest.raises(ValueError):
+        rebase_demand(d, (0, 1), (2, 2))  # repeat
+    with pytest.raises(ValueError):
+        rebase_demand(d, (0, 1), (2, 9))  # outside
+
+
+def test_placement_diff_and_with_placement():
+    js = _fragmented_jobset()
+    moved = js.with_placement("bert", (2, 5, 8, 11))
+    diff = placement_diff(js, moved)
+    assert set(diff) == {"bert"}
+    assert diff["bert"] == (js.tenant("bert").servers, (2, 5, 8, 11))
+    assert placement_diff(js, js) == {}
+    # Departures/arrivals are not migrations.
+    assert placement_diff(js, js.without("bert")) == {}
+    with pytest.raises(KeyError):
+        js.with_placement("nope", (0,))
+    with pytest.raises(ValueError):  # overlap rejected by validation
+        js.with_placement("bert", js.tenant("dlrm").servers)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: per-tenant comm-time decomposition
+# ---------------------------------------------------------------------------
+
+
+def test_tenant_comm_times_decomposition(frag_plan):
+    js = _fragmented_jobset()
+    strategies = {t.label: default_strategy(t.spec) for t in js.tenants}
+    obj, union, per_job, per_comm = evaluate_jobset(
+        strategies, js, frag_plan.topology, HW, decompose=True)
+    assert set(per_comm) == {"dlrm", "bert"}
+    from repro.core.planeval import plan_evaluator
+
+    union_comm = plan_evaluator(frag_plan.topology, HW).comm_time(union)
+    for label, own in per_comm.items():
+        assert 0.0 < own
+        # A tenant's own weighted-share time never exceeds the union time
+        # scaled by the contention it actually sees.
+        assert own <= union_comm * sum(t.weight for t in js.tenants) + 1e-12
+    # The objective is identical with and without decomposition.
+    obj2, _, per_job2 = evaluate_jobset(
+        strategies, js, frag_plan.topology, HW)
+    assert obj == obj2 and per_job == per_job2
+
+
+def test_tenant_comm_alone_equals_union_time():
+    js = JobSet(n=8, tenants=[
+        TenantJob(spec=VGG16, servers=tuple(range(8)), name="vgg")])
+    plan = co_optimize_jobset(js, HW, rounds=1, mcmc_iters=5, seed=0)
+    per_comm = tenant_comm_times(plan.strategies, js, plan.topology, HW)
+    from repro.core.planeval import plan_evaluator
+
+    ev = plan_evaluator(plan.topology, HW)
+    union = js.union_for(plan.strategies)
+    assert per_comm["vgg"] == pytest.approx(ev.comm_time(union), rel=1e-12)
+
+
+def test_plan_reports_per_job_comm(frag_plan):
+    assert set(frag_plan.per_job_comm) == {"dlrm", "bert"}
+    assert all(v >= 0 for v in frag_plan.per_job_comm.values())
+
+
+# ---------------------------------------------------------------------------
+# Satellite: deadline-aware replanning
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_policy_scales_replan_weights(frag_plan):
+    pol = DeadlineFairness(deadlines={"bert": 1.0}, horizon=2.0,
+                           max_boost=8.0)
+    ctrl = JobSetController(
+        _fragmented_jobset(), hw=HW, policy=ReoptPolicy.reactive(),
+        plan=frag_plan, seed=0, deadline_policy=pol,
+    )
+    scaled = ctrl._opt_jobset(ctrl.jobset, now=1.0)  # at the deadline
+    weights = {t.label: t.weight for t in scaled.tenants}
+    assert weights["bert"] == pytest.approx(pol.weight("bert", 1.0))
+    assert weights["dlrm"] == pytest.approx(1.0)
+    assert pol.weight("bert", 1.0) > 4.0  # deep into the ramp
+    # The engine-side fairness prices the same weight * urgency product —
+    # static tenant weights are not discarded by the deadline policy.
+    fair = ctrl.fairness()
+    assert fair.time_varying
+    assert fair.weight("bert", 1.0) == pytest.approx(
+        ctrl.jobset.tenant("bert").weight * pol.weight("bert", 1.0))
+    assert fair.weight("dlrm", 1.0) == pytest.approx(
+        ctrl.jobset.tenant("dlrm").weight * pol.weight("dlrm", 1.0))
+    # Without a deadline policy the jobset passes through untouched.
+    plain = JobSetController(_fragmented_jobset(), hw=HW,
+                             policy=ReoptPolicy.never(), plan=frag_plan)
+    assert plain._opt_jobset(plain.jobset, now=1.0) is plain.jobset
+
+
+def test_deadline_replan_matches_manually_scaled_jobset(frag_plan):
+    """A deadline-aware replan is exactly a replan of the urgency-scaled
+    JobSet: same seed, same warm start, same plan."""
+    from dataclasses import replace
+
+    from repro.core.topology_finder import remove_pair
+
+    pol = DeadlineFairness(deadlines={"bert": 0.5}, horizon=1.0,
+                           max_boost=8.0)
+    now, pair = 0.25, (0, 3)
+    ctrl = JobSetController(
+        _fragmented_jobset(), hw=HW,
+        policy=ReoptPolicy(on_failure=True, replan_latency=1e-3),
+        plan=frag_plan, seed=0, deadline_policy=pol,
+    )
+    warm_strategies = ctrl.strategies()
+    degraded = remove_pair(ctrl.topology, pair)
+    ctrl.fail(pair, now=now)
+    assert ctrl.n_replans == 1
+    scaled = JobSet(n=12, tenants=[
+        replace(t, weight=t.weight * pol.weight(t.label, now))
+        for t in _fragmented_jobset().tenants
+    ])
+    manual = co_optimize_jobset(
+        scaled, HW, rounds=ctrl.policy.rounds,
+        mcmc_iters=ctrl.policy.mcmc_iters, seed=ctrl.seed + 1,
+        warm_topology=degraded, warm_strategies=warm_strategies,
+        forbidden=(pair,),
+    )
+    applied = [r for r in ctrl.log if r.replanned][-1]
+    if applied.est_after <= applied.est_before:  # plan adopted
+        assert ctrl.plan.strategies == manual.strategies
+        assert sorted(ctrl.plan.topology.graph.edges()) == \
+            sorted(manual.topology.graph.edges())
