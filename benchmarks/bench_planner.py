@@ -227,5 +227,26 @@ def _write_perf_record(rows: list[dict], smoke: bool) -> None:
 
 
 if __name__ == "__main__":
-    for row in run(smoke=True):
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                    help="jax runs the batched-planner bench "
+                         "(benchmarks.bench_planner_jax) instead")
+    ap.add_argument("--full", action="store_true",
+                    help="full sizes (direct runs default to smoke)")
+    cli = ap.parse_args()
+    if cli.backend == "jax":
+        if __package__ in (None, ""):  # script-style: python benchmarks/...
+            import sys
+
+            sys.path.insert(
+                0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+            )
+        from benchmarks.bench_planner_jax import run as run_jax
+
+        rows = run_jax(smoke=not cli.full)
+    else:
+        rows = run(smoke=not cli.full)
+    for row in rows:
         print(row["name"], row["derived"])

@@ -1,0 +1,222 @@
+"""JAX planner backend speed: batched on-device chains vs NumPy pricing.
+
+The acceptance bar of the JAX port (:mod:`repro.core.planeval_jax`) is raw
+candidate-pricing throughput: the batched MCMC kernel — ``chains``
+independent annealing chains carried through one jitted ``lax.scan`` —
+must price candidate assignments at least **5x** faster than the NumPy
+incremental path (:meth:`JobSetEvaluator.propose`, itself already the
+fast path that beat the reference walk in ``bench_planner``).
+
+* ``planner_jax_chains`` — chain-step throughput: ``chains x iters``
+  candidate evaluations in one device dispatch vs the same number of
+  sequential incremental proposals.  The jit compile is warmed on the
+  exact shapes first; the measured dispatch is steady-state.  Asserts the
+  >= 5x acceptance bar and records ``chains_per_s`` / both
+  ``evals_per_s`` figures.
+* ``planner_jax_pricing`` — batched demand pricing
+  (:meth:`JaxPlanEvaluator.comm_times`): K padded demands in one
+  ``segment_sum`` dispatch vs a loop of bit-exact ``comm_time`` calls
+  (reported, not gated: on CPU the scatter is memory-bound and the win is
+  modest — the chains are where the batching pays).
+
+A perf record lands in ``experiments/bench/BENCH_planner_jax.json``.
+Run directly, or as ``python benchmarks/bench_planner.py --backend=jax``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.bench_planner import _candidate_moves, _jobset
+from repro.core.netsim import HardwareSpec, compute_time
+from repro.core.planeval import JobSetEvaluator, plan_evaluator
+from repro.core.planeval_jax import (
+    JAX_EQUIV_RTOL,
+    ChainKernel,
+    draw_proposal_streams,
+    jax_plan_evaluator,
+    strategy_pool,
+)
+from repro.core.strategy_search import default_strategy
+from repro.core.topology_finder import topology_finder
+from repro.core.workloads import JobSet
+
+DEGREE = 4
+PERF_RECORD = os.path.join("experiments", "bench", "BENCH_planner_jax.json")
+
+# The tentpole acceptance bar: batched chains must price candidates at
+# least this much faster than the NumPy incremental path.
+MIN_CHAIN_SPEEDUP = 5.0
+
+
+def _numpy_evals_per_s(js: JobSet, topo, hw: HardwareSpec,
+                       n_moves: int) -> float:
+    """Throughput of the NumPy incremental candidate pricer (the
+    ``bench_planner`` fast path), warmed exactly like that bench."""
+    init, moves = _candidate_moves(js, n_moves)
+    cache: dict = {}
+    jse = JobSetEvaluator(js, topo, hw, demand_cache=cache,
+                          vector_cache_size=n_moves + len(js.tenants) + 1)
+    jse.set_strategies(init)
+    for label, cand in moves:
+        jse.tenant_loads(label, cand)
+    t0 = time.perf_counter()
+    for label, cand in moves:
+        jse.propose(label, cand)
+    return n_moves / (time.perf_counter() - t0)
+
+
+def _bench_chain_throughput(n: int, chains: int, iters: int,
+                            pool_size: int, hw: HardwareSpec) -> dict:
+    js = _jobset(n)
+    init = {t.label: default_strategy(t.spec) for t in js.tenants}
+    topo = topology_finder(js.union_for(init), hw.degree, pack="per_node")
+
+    np_evals_per_s = _numpy_evals_per_s(js, topo, hw, n_moves=600)
+
+    # Build the chain kernel exactly as jax_mcmc_search_jobset does.
+    jse = JobSetEvaluator(js, topo, hw)
+    tenants = js.tenants
+    pools = [
+        strategy_pool(t.spec, t.k, pool_size, seed=i, init=init[t.label])
+        for i, t in enumerate(tenants)
+    ]
+    vecs = [
+        [jse.tenant_loads_at(t.label, s, t.servers) for s in pools[i]]
+        for i, t in enumerate(tenants)
+    ]
+    L = jse.ev.n_links
+    V = np.zeros((len(tenants), pool_size, L))
+    for i in range(len(tenants)):
+        for s, v in enumerate(vecs[i]):
+            V[i, s, : v.size] = v
+    comps = np.array([
+        compute_time(t.flops_per_iteration, t.k, hw) for t in tenants
+    ])
+    weights = np.array([t.weight for t in tenants])
+    kernel = ChainKernel(V, jse.ev.caps, comps, weights)
+    t_idx, s_idx, u = draw_proposal_streams(
+        0, chains, iters, len(tenants), pool_size
+    )
+    temps = np.full(chains, 0.1)
+    a0 = np.zeros(len(tenants), dtype=np.int64)
+
+    # Warm the jit cache on the exact shapes, then time steady-state.
+    kernel.run(a0, temps, t_idx, s_idx, u)
+    t_best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        kernel.run(a0, temps, t_idx, s_idx, u)
+        t_best = min(t_best, time.perf_counter() - t0)
+
+    total_evals = chains * iters
+    jax_evals_per_s = total_evals / t_best
+    chains_per_s = chains / t_best
+    speedup = jax_evals_per_s / np_evals_per_s
+    assert speedup >= MIN_CHAIN_SPEEDUP, (
+        f"jax chains priced {speedup:.1f}x the NumPy path, "
+        f"need >= {MIN_CHAIN_SPEEDUP}x"
+    )
+    return dict(
+        name=f"planner_jax_chains_n{n}",
+        us_per_call=t_best * 1e6,
+        derived=(
+            f"speedup={speedup:.1f}x;"
+            f"jax_evals_per_s={jax_evals_per_s:.0f};"
+            f"numpy_evals_per_s={np_evals_per_s:.0f};"
+            f"chains_per_s={chains_per_s:.0f}"
+        ),
+        speedup=speedup,
+        jax_evals_per_s=jax_evals_per_s,
+        numpy_evals_per_s=np_evals_per_s,
+        chains_per_s=chains_per_s,
+        chains=chains,
+        iters=iters,
+    )
+
+
+def _bench_batched_pricing(n: int, batch: int, hw: HardwareSpec) -> dict:
+    js = _jobset(n)
+    init = {t.label: default_strategy(t.spec) for t in js.tenants}
+    topo = topology_finder(js.union_for(init), hw.degree, pack="per_node")
+    demands = []
+    for i, t in enumerate(js.tenants):
+        for s in strategy_pool(t.spec, t.k, batch // len(js.tenants) + 1,
+                               seed=50 + i):
+            demands.append(js.union_for({**init, t.label: s}))
+    demands = demands[:batch]
+
+    ev = plan_evaluator(topo, hw)
+    jev = jax_plan_evaluator(topo, hw)
+    jev.comm_times(demands)  # warm: compiles scatter + jit at these shapes
+
+    t0 = time.perf_counter()
+    ref = np.array([ev.comm_time(d) for d in demands])
+    t_np = time.perf_counter() - t0
+    t_jax = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        out = jev.comm_times(demands)
+        t_jax = min(t_jax, time.perf_counter() - t0)
+    max_rel = float(np.max(np.abs(out - ref) / np.maximum(np.abs(ref),
+                                                          1e-30)))
+    assert max_rel <= JAX_EQUIV_RTOL, f"jax pricing drifted: {max_rel}"
+    return dict(
+        name=f"planner_jax_pricing_n{n}",
+        us_per_call=t_jax / batch * 1e6,
+        derived=(
+            f"speedup={t_np / t_jax:.1f}x;"
+            f"jax_evals_per_s={batch / t_jax:.0f};"
+            f"numpy_evals_per_s={batch / t_np:.0f};"
+            f"max_rel_err={max_rel:.1e}"
+        ),
+        speedup=t_np / t_jax,
+        jax_evals_per_s=batch / t_jax,
+        numpy_evals_per_s=batch / t_np,
+        max_rel_err=max_rel,
+    )
+
+
+def run(smoke: bool = False) -> list[dict]:
+    hw = HardwareSpec(link_bandwidth=12.5e9, degree=DEGREE)
+    if smoke:
+        n, chains, iters, pool, batch = 12, 8, 200, 16, 48
+    else:
+        n, chains, iters, pool, batch = 24, 32, 400, 32, 128
+    rows = [
+        _bench_chain_throughput(n, chains, iters, pool, hw),
+        _bench_batched_pricing(n, batch, hw),
+    ]
+    _write_perf_record(rows, smoke=smoke)
+    return rows
+
+
+def _write_perf_record(rows: list[dict], smoke: bool) -> None:
+    """BENCH_planner_jax.json: the acceptance numbers CI tracks."""
+    os.makedirs(os.path.dirname(PERF_RECORD), exist_ok=True)
+    by_name = {r["name"].rsplit("_n", 1)[0]: r for r in rows}
+    chains_row = by_name["planner_jax_chains"]
+    pricing_row = by_name["planner_jax_pricing"]
+    record = dict(
+        bench="planner_jax",
+        smoke=smoke,
+        chain_speedup=chains_row["speedup"],
+        chains_per_s=chains_row["chains_per_s"],
+        jax_evals_per_s=chains_row["jax_evals_per_s"],
+        numpy_evals_per_s=chains_row["numpy_evals_per_s"],
+        pricing_speedup=pricing_row["speedup"],
+        pricing_max_rel_err=pricing_row["max_rel_err"],
+        meets_bar=bool(chains_row["speedup"] >= MIN_CHAIN_SPEEDUP),
+        wall_us=sum(r["us_per_call"] for r in rows),
+    )
+    with open(PERF_RECORD, "w") as f:
+        json.dump(record, f, indent=1)
+
+
+if __name__ == "__main__":
+    for row in run(smoke=True):
+        print(row["name"], row["derived"])

@@ -22,6 +22,7 @@ BENCHES = [
     ("online", "Online re-optimization: static vs reactive replanning"),
     ("multitenant", "Multi-tenant shared fabric: JobSet churn + fairness"),
     ("planner", "Compiled plan evaluator: reference vs compiled planner speed"),
+    ("planner_jax", "JAX planner backend: batched chains vs NumPy pricing"),
     ("placement", "Placement co-search + churn-priced migration vs greedy"),
     ("roofline", "Roofline dry-run terms"),
 ]

@@ -35,7 +35,7 @@ from dataclasses import dataclass, field
 
 from .demand import TrafficDemand
 from .netsim import HardwareSpec, compute_time, iteration_time, topoopt_comm_time
-from .planeval import LRUCache
+from .planeval import JobSetEvaluator, LRUCache
 from .simengine import SimEngine
 from .strategy_search import (
     DEMAND_CACHE_SIZE,
@@ -44,6 +44,7 @@ from .strategy_search import (
     Strategy,
     default_strategy,
     evaluate_jobset,
+    evaluate_jobset_decomposed,
     mcmc_search,
     mcmc_search_jobset,
     tenant_comm_times,
@@ -139,6 +140,9 @@ def alternating_optimize(
     forbidden: tuple[tuple[int, int], ...] = (),
     compiled: bool = True,
     proposals_per_step: int = 1,
+    backend: str = "numpy",
+    chains: int = 1,
+    pool_size: int = 64,
 ) -> CoOptResult:
     """TopoOpt's off-line co-optimization loop.
 
@@ -155,7 +159,10 @@ def alternating_optimize(
     ``compiled`` / ``proposals_per_step`` select the candidate-pricing path
     of the inner MCMC (:func:`~repro.core.strategy_search.mcmc_search`):
     the compiled evaluator is the default and must match the
-    ``compiled=False`` reference at fixed seeds.
+    ``compiled=False`` reference at fixed seeds.  ``backend="jax"`` runs
+    each round's strategy search as ``chains`` batched on-device chains
+    (:mod:`repro.core.planeval_jax`); the default NumPy backend is
+    byte-stable against it.
     """
     warm = warm_topology is not None
     topo = (
@@ -173,6 +180,7 @@ def alternating_optimize(
             job, topo, hw, iters=mcmc_iters, overlap=overlap,
             seed=seed + r, init=strategy_init,
             compiled=compiled, proposals_per_step=proposals_per_step,
+            backend=backend, chains=chains, pool_size=pool_size,
         )
         # Comm x Topo plane: rebuild the topology for the found demand.
         new_topo = topology_finder(
@@ -216,6 +224,10 @@ def _co_optimize_single(
     compiled: bool,
     proposals_per_step: int,
     demand_cache,
+    objective: str = "union",
+    backend: str = "numpy",
+    chains: int = 1,
+    pool_size: int = 64,
 ) -> JobSetPlan:
     """The two-plane alternating loop for one fixed tenant placement —
     exactly the pre-placement-search ``co_optimize_jobset`` body."""
@@ -241,16 +253,26 @@ def _co_optimize_single(
             jobset, topo, hw, iters=mcmc_iters, overlap=overlap,
             seed=seed + r, init=strategy_init,
             compiled=compiled, proposals_per_step=proposals_per_step,
-            demand_cache=demand_cache,
+            demand_cache=demand_cache, objective=objective,
+            backend=backend, chains=chains, pool_size=pool_size,
         )
         new_topo = topology_finder(
             res.demand, hw.degree, forbidden=forbidden,
             warm_start=topo if warm else None, pack="per_node",
         )
-        t_new, union, per_job = evaluate_jobset(
-            res.strategies, jobset, new_topo, hw, overlap,
-            _demand_cache=demand_cache, compiled=compiled,
-        )
+        if objective == "decomposed":
+            # Round scoring must match what the chains annealed on, or the
+            # outer loop would keep undoing the inner one's preferences.
+            t_new, per_job = evaluate_jobset_decomposed(
+                res.strategies, jobset, new_topo, hw, overlap,
+                _demand_cache=demand_cache,
+            )
+            union = jobset.union_for(res.strategies)
+        else:
+            t_new, union, per_job = evaluate_jobset(
+                res.strategies, jobset, new_topo, hw, overlap,
+                _demand_cache=demand_cache, compiled=compiled,
+            )
         round_times.append(t_new)
 
         if best is None or t_new < best.iter_time:
@@ -286,6 +308,11 @@ def co_optimize_jobset(
     compiled: bool = True,
     proposals_per_step: int = 1,
     placement_candidates: list[JobSet] | None = None,
+    screen_candidates: int | None = None,
+    objective: str = "union",
+    backend: str = "numpy",
+    chains: int = 1,
+    pool_size: int = 64,
 ) -> JobSetPlan:
     """Multi-tenant alternating optimization: co-optimize every resident
     job's parallelization strategy against one *shared* topology.
@@ -312,7 +339,23 @@ def co_optimize_jobset(
     resolved toward the earlier candidate (the greedy seed comes first).
     ``None`` — and a single-candidate list equal to ``jobset`` — follow the
     exact pre-search code path, so fixed-seed plans are unchanged.
-    The winning plan records its ``jobset`` and ``candidate_index``.
+    The winning plan records its ``jobset`` and ``candidate_index``
+    (always the index into the *original* candidate list).
+
+    ``screen_candidates=k`` bounds the cost of a wide candidate list: every
+    candidate is first scored with the *incremental*
+    :class:`~repro.core.planeval.JobSetEvaluator` on its warm (or cold
+    per-candidate) topology — synthetic rings for placements the incumbent
+    fabric never carried, exactly the ``rebalance`` screen — and only the
+    ``k`` best-screened candidates pay the full alternating loop.  ``None``
+    (default) and any ``k >= len(candidates)`` run every candidate:
+    byte-identical to the unscreened behaviour.
+
+    ``objective="decomposed"`` anneals and scores rounds on the weighted
+    decomposed per-tenant comm times
+    (:func:`~repro.core.strategy_search.evaluate_jobset_decomposed`);
+    ``backend="jax"`` / ``chains`` run each round's search as batched
+    on-device chains.  The defaults preserve existing goldens.
 
     One LRU-bounded per-tenant demand cache is shared across every round's
     MCMC and the final pricing (the caches used to be rebuilt per round);
@@ -334,14 +377,47 @@ def co_optimize_jobset(
             )
     if not jobset.tenants:
         raise ValueError("co_optimize_jobset needs at least one tenant")
+    if screen_candidates is not None and screen_candidates < 1:
+        raise ValueError("screen_candidates must be >= 1 when given")
     demand_cache = LRUCache(DEMAND_CACHE_SIZE)
 
+    order = list(range(len(candidates)))
+    if screen_candidates is not None and screen_candidates < len(candidates):
+        # Fast screen (bugfix: wide candidate lists used to pay the full
+        # alternating loop per candidate): incremental evaluator pricing of
+        # each candidate's warm-start state, survivors in original order so
+        # the tie-toward-earlier contract below is unchanged.
+        scores: list[tuple[float, int]] = []
+        for ci, js in enumerate(candidates):
+            init = {
+                t.label: (warm_strategies or {}).get(t.label)
+                or default_strategy(t.spec)
+                for t in js.tenants
+            }
+            topo0 = (
+                warm_topology
+                if warm_topology is not None
+                else topology_finder(
+                    js.union_for(init), hw.degree, forbidden=forbidden,
+                    pack="per_node",
+                )
+            )
+            jse = JobSetEvaluator(
+                js, topo0, hw, overlap=overlap, demand_cache=demand_cache,
+                synth_missing_rings=True,
+            )
+            scores.append((jse.set_strategies(init)[0], ci))
+        scores.sort()
+        order = sorted(ci for _, ci in scores[:screen_candidates])
+
     best: JobSetPlan | None = None
-    for ci, js in enumerate(candidates):
+    for ci in order:
         plan = _co_optimize_single(
-            js, hw, rounds, mcmc_iters, overlap, seed, rel_tol,
+            candidates[ci], hw, rounds, mcmc_iters, overlap, seed, rel_tol,
             warm_topology, warm_strategies, forbidden, compiled,
             proposals_per_step, demand_cache,
+            objective=objective, backend=backend, chains=chains,
+            pool_size=pool_size,
         )
         plan.candidate_index = ci
         if best is None or plan.iter_time < best.iter_time:

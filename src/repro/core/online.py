@@ -207,6 +207,26 @@ class ReoptPolicy:
     # evaluator (repro.core.planeval) by default; False pins the reference
     # topoopt_comm_time path (fixed seeds must agree between the two).
     compiled: bool = True
+    # Planner backend of the replan optimizer's inner MCMC: "jax" runs
+    # ``chains`` batched on-device annealing chains per round
+    # (repro.core.planeval_jax); "numpy" (default) is byte-stable against
+    # its introduction.
+    backend: str = "numpy"
+    chains: int = 1
+    # Multi-tenant annealing objective: "decomposed" prices each tenant's
+    # own weighted-share comm time instead of charging everyone the union
+    # bottleneck (see mcmc_search_jobset).  Default preserves goldens.
+    objective: str = "union"
+    # Admission-time preemption: an *arriving* tenant triggers the same
+    # churn-priced rebalance pass a departure does (max_migrations > 0
+    # required), displacing cheap residents when the migration-priced win
+    # clears its cost.  Off by default — the pre-fix behaviour, where only
+    # departures could rebalance.
+    rebalance_on_arrival: bool = False
+    # Pre-screen wide placement-candidate lists inside co_optimize_jobset:
+    # only the k best candidates by the incremental evaluator pay the full
+    # alternating loop (None = screen nothing, the pre-fix behaviour).
+    screen_candidates: int | None = None
 
     @classmethod
     def never(cls) -> "ReoptPolicy":
@@ -341,6 +361,8 @@ class ReoptController(ScenarioObserver):
                 seed=self.seed,
                 forbidden=tuple(self.dead),
                 compiled=self.policy.compiled,
+                backend=self.policy.backend,
+                chains=self.policy.chains,
             )
         return alternating_optimize(
             self.job, self.n, self.hw,
@@ -351,6 +373,8 @@ class ReoptController(ScenarioObserver):
             warm_strategy=self.strategy,
             forbidden=tuple(self.dead),
             compiled=self.policy.compiled,
+            backend=self.policy.backend,
+            chains=self.policy.chains,
         )
 
     def ensure_plan(self) -> CoOptResult:
@@ -772,6 +796,9 @@ class JobSetController(ReoptController):
                 seed=self.seed,
                 forbidden=tuple(self.dead),
                 compiled=self.policy.compiled,
+                objective=self.policy.objective,
+                backend=self.policy.backend,
+                chains=self.policy.chains,
             )
         candidates = None
         if self._pending_candidates is not None:
@@ -788,6 +815,10 @@ class JobSetController(ReoptController):
             forbidden=tuple(self.dead),
             compiled=self.policy.compiled,
             placement_candidates=candidates,
+            screen_candidates=self.policy.screen_candidates,
+            objective=self.policy.objective,
+            backend=self.policy.backend,
+            chains=self.policy.chains,
         )
 
     def _adopt_plan(self, res) -> None:
@@ -935,6 +966,19 @@ class JobSetController(ReoptController):
                 self._pending_candidates = None
             if update is not None:
                 pause = update.pause
+        if (
+            self.policy.rebalance_on_arrival
+            and self.policy.max_migrations > 0
+            and self.jobset.tenants
+        ):
+            # Admission-time preemption (bugfix: rebalancing used to fire
+            # only on departures): offer the post-admission fabric to every
+            # resident — the arrival included — so a high-value newcomer
+            # can displace cheap residents when the migration-priced win
+            # clears its cost.
+            update = self.rebalance(now + pause, reason="arrival")
+            if update is not None:
+                pause += update.pause
         return self.jobset.tenant(label).servers, pause
 
     def depart(self, label: str, now: float = 0.0) -> float:
@@ -1073,6 +1117,9 @@ class JobSetController(ReoptController):
                     warm_strategies=self.strategies(),
                     forbidden=tuple(self.dead),
                     compiled=self.policy.compiled,
+                    objective=self.policy.objective,
+                    backend=self.policy.backend,
+                    chains=self.policy.chains,
                 )
                 saved = self.jobset
                 self.jobset = trial

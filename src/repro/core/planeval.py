@@ -581,6 +581,49 @@ class JobSetEvaluator:
             self.ev.comm_time_from_loads(self._full_total(strategies))
         )
 
+    def decomposed_objective_of(
+        self, strategies: dict[str, object]
+    ) -> tuple[float, dict[str, float]]:
+        """Weighted *decomposed* objective of an arbitrary assignment: each
+        tenant charged its own bottleneck comm time under weighted processor
+        sharing of the links it loads
+        (:func:`~repro.core.strategy_search.tenant_comm_times` semantics).
+
+        Computed from the cached per-tenant vectors with the exact
+        expressions of the reference decomposition, so it matches
+        :func:`~repro.core.strategy_search.evaluate_jobset_decomposed` to
+        the bit — the ``objective="decomposed"`` MCMC path needs compiled
+        and reference chains to make identical fixed-seed decisions."""
+        ts = self.jobset.tenants
+        vecs = [
+            self.tenant_loads(t.label, strategies[t.label]) for t in ts
+        ]
+        n_links = self.ev.n_links
+        per_comm = {t.label: 0.0 for t in ts}
+        if n_links:
+            mat = np.zeros((len(vecs), n_links), dtype=np.float64)
+            for row, v in zip(mat, vecs):
+                row[: v.size] = v
+            weights = np.asarray([t.weight for t in ts])
+            active = mat > 0
+            active_w = active.T @ weights
+            caps = self.ev.caps
+            for i, t in enumerate(ts):
+                mask = active[i]
+                if mask.any():
+                    per_comm[t.label] = float(np.max(
+                        mat[i, mask] * active_w[mask]
+                        / (weights[i] * caps[mask])
+                    ))
+        per_job: dict[str, float] = {}
+        obj = 0.0
+        for t in ts:
+            per_job[t.label] = iteration_time(
+                per_comm[t.label], self._comp[t.label], overlap=self.overlap
+            )
+            obj += t.weight * per_job[t.label]
+        return obj / self.jobset.total_weight, per_job
+
     def set_strategies(
         self, strategies: dict[str, object]
     ) -> tuple[float, dict[str, float]]:

@@ -1,0 +1,659 @@
+"""JAX-native batched planner: jit/vmap port of the compiled plan evaluator
+(ROADMAP open item 1 — "compile once, evaluate many", on accelerator).
+
+:mod:`repro.core.planeval` compiles a fixed
+:class:`~repro.core.topology_finder.Topology` into flat NumPy structure
+arrays (link-id table, per-group ring-edge incidence, CSR route cache) and
+prices one candidate demand per Python call.  Those arrays are already
+array-shaped, so this module lifts the whole scatter + bottleneck-division
+pipeline onto JAX:
+
+* :func:`pack_demand` flattens one demand's pricing work into two flat
+  arrays — per-occurrence link ids and per-occurrence byte shares (AllReduce
+  ring-edge occurrences first, then MP route hops, exactly the occurrences
+  the NumPy ``np.add.at`` scatters walk);
+* :class:`JaxPlanEvaluator` pads K such packs to one static shape and
+  prices all K demands in **one device dispatch**: a vmapped
+  ``jax.ops.segment_sum`` scatter over the link universe followed by one
+  vectorized ``max(loads / caps)`` bottleneck division;
+* :class:`ChainKernel` runs K independent MCMC chains entirely on device:
+  the per-tenant strategy space is pre-priced into a ``(tenants, pool,
+  links)`` load-vector tensor, a chain state is one pool index per tenant,
+  and ``lax.scan`` carries (state, objective, best) through all iterations
+  with the annealing rule applied per step — one compiled dispatch for the
+  whole batch of chains (vmapped over the chain axis, per-chain
+  temperatures supported).
+
+**Numerics.**  The NumPy path stays the bit-exact reference.
+:func:`repro.compat.ensure_x64` pins float64 so the JAX pipeline prices the
+same arithmetic — but ``segment_sum`` and ``jnp.sum`` may reassociate float
+additions, so JAX results match the reference to ~1e-9 relative
+(:data:`JAX_EQUIV_RTOL`), not to the bit.  Chain *semantics* are exactly
+reproducible: every random draw (proposed tenant, proposed pool index,
+acceptance uniform) is pre-drawn on host with ``random.Random(seed +
+chain)`` (:func:`draw_proposal_streams`), and
+:func:`run_chains_reference` re-runs the identical chain sequentially in
+NumPy — ``tests/test_planeval_jax.py`` pins batched-vs-sequential agreement
+at fixed seeds.  Because the JAX chain explores a *pre-priced pool* rather
+than proposing unbounded host subsets per step, it is a documented
+different chain from ``backend="numpy"`` (same annealing rule, different
+move space) — the NumPy backend is byte-stable against it.
+
+House style: the jit/parametrized idiom follows the jaxnet excerpts in
+SNIPPETS.md (compile once at construction, apply many); the Pallas kernels
+under :mod:`repro.kernels` own the lower-level accelerator hot loops.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+
+import numpy as np
+
+from ..compat import ensure_x64
+from .netsim import HardwareSpec
+from .planeval import PlanEvaluator, plan_evaluator
+
+__all__ = [
+    "JAX_EQUIV_RTOL",
+    "have_jax",
+    "pack_demand",
+    "JaxPlanEvaluator",
+    "jax_plan_evaluator",
+    "ChainKernel",
+    "draw_proposal_streams",
+    "run_chains_reference",
+    "strategy_pool",
+    "jax_mcmc_search",
+    "jax_mcmc_search_jobset",
+]
+
+# Decorrelates the pool-construction RNG from the per-chain proposal
+# streams (both are seeded from the caller's one seed).
+_POOL_SEED_OFFSET = 0x9E3779B9
+
+# Documented JAX-vs-NumPy agreement: float64 throughout (ensure_x64), but
+# segment_sum/jnp.sum reassociate additions the reference performs
+# sequentially, so compiled values agree to reassociation level only.
+JAX_EQUIV_RTOL = 1e-9
+
+_jax = None
+
+
+def _require_jax():
+    """Import jax lazily (and exactly once), pinning x64 before first use."""
+    global _jax
+    if _jax is None:
+        ensure_x64()
+        import jax  # noqa: PLC0415
+
+        _jax = jax
+    return _jax
+
+
+def have_jax() -> bool:
+    """True when the JAX backend can run (import succeeds)."""
+    try:
+        _require_jax()
+        return True
+    except Exception:  # pragma: no cover - jax is baked into the image
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Demand packing: one demand -> flat (link ids, byte shares) scatter arrays
+# ---------------------------------------------------------------------------
+
+
+def pack_demand(ev: PlanEvaluator, demand) -> tuple[np.ndarray, np.ndarray]:
+    """Flatten ``demand`` into per-occurrence ``(link_ids, shares)``.
+
+    The occurrence stream is exactly what the NumPy evaluator scatters:
+    AllReduce groups in demand order (each group's ring edges in reference
+    walk order, share ``2(k-1)/k * nbytes / n_rings``), then MP entries in
+    ``np.nonzero`` order (each pair's route hops, share
+    ``bytes / n_routes``).  ``segment_sum`` over these ids reproduces the
+    reference load vector up to float reassociation.
+
+    Compiles lazily through the shared :class:`PlanEvaluator` caches — pack
+    every demand of a batch *before* reading ``ev.n_links``/``ev.caps`` so
+    the link universe stops growing first.
+    """
+    pids, vals = ev._ensure_compiled(demand)
+    ids_parts: list[np.ndarray] = []
+    share_parts: list[np.ndarray] = []
+    for g in demand.allreduce:
+        entry = ev._group(g.members)
+        if entry is None:
+            continue
+        ids, n_rings, k = entry
+        per_link_total = 2.0 * (k - 1) / k * g.nbytes
+        if per_link_total == 0.0:
+            continue
+        ids_parts.append(ids)
+        share_parts.append(
+            np.full(ids.size, per_link_total / n_rings, dtype=np.float64)
+        )
+    if pids.size:
+        starts = ev._pair_start[pids]
+        lens = ev._pair_len[pids]
+        total = int(lens.sum())
+        if total:
+            seg_off = np.cumsum(lens) - lens
+            idx = (
+                np.arange(total, dtype=np.int64)
+                - np.repeat(seg_off, lens)
+                + np.repeat(starts, lens)
+            )
+            ids_parts.append(ev._mp_ids[idx])
+            share_parts.append(
+                np.repeat(vals / ev._pair_nroutes[pids], lens)
+            )
+    if not ids_parts:
+        return (
+            np.zeros(0, dtype=np.int64),
+            np.zeros(0, dtype=np.float64),
+        )
+    return np.concatenate(ids_parts), np.concatenate(share_parts)
+
+
+class JaxPlanEvaluator:
+    """Batched demand pricing on device: K candidates, one dispatch.
+
+    Wraps the (memoized) NumPy :class:`PlanEvaluator` of the same topology:
+    structure compilation (link ids, ring incidence, routes) stays on host
+    and is shared with every NumPy caller; only the scatter + bottleneck
+    arithmetic moves to JAX.  Padding: each demand's occurrence stream is
+    padded to the batch maximum with a sentinel id pointing one past the
+    link universe (a dummy segment whose zero shares cannot leak into any
+    real link).
+    """
+
+    def __init__(self, topo, hw: HardwareSpec):
+        jax = _require_jax()
+        self.ev = plan_evaluator(topo, hw)
+        self.topo = topo
+        self.hw = hw
+
+        def _batched(idx, val, caps):
+            n_links = caps.shape[0]
+
+            def one(i, v):
+                loads = jax.ops.segment_sum(
+                    v, i, num_segments=n_links + 1
+                )
+                return jax.numpy.max(loads[:n_links] / caps)
+
+            return jax.vmap(one)(idx, val)
+
+        # jit recompiles per (K, pad, n_links) shape triple; shapes repeat
+        # across MCMC steps, so steady-state runs hit the compile cache.
+        self._batched = jax.jit(_batched)
+
+    def pack(self, demands) -> tuple[np.ndarray, np.ndarray]:
+        """Padded ``(K, pad)`` id/share arrays for a batch of demands (all
+        compiled into the shared link universe first)."""
+        packs = [pack_demand(self.ev, d) for d in demands]
+        n_links = self.ev.n_links
+        pad = max((ids.size for ids, _ in packs), default=0)
+        idx = np.full((len(packs), max(pad, 1)), n_links, dtype=np.int64)
+        val = np.zeros((len(packs), max(pad, 1)), dtype=np.float64)
+        for row, (ids, shares) in enumerate(packs):
+            idx[row, : ids.size] = ids
+            val[row, : ids.size] = shares
+        return idx, val
+
+    def comm_times(self, demands) -> np.ndarray:
+        """Bottleneck comm times of K demands in one device dispatch —
+        agrees with :meth:`PlanEvaluator.comm_time` per demand to
+        :data:`JAX_EQUIV_RTOL`."""
+        demands = list(demands)
+        if not demands:
+            return np.zeros(0)
+        idx, val = self.pack(demands)
+        if not self.ev.n_links:
+            return np.zeros(len(demands))
+        return np.asarray(
+            self._batched(idx, val, self.ev.caps), dtype=np.float64
+        )
+
+    def comm_time(self, demand) -> float:
+        """Single-demand comm time through the batched kernel."""
+        return float(self.comm_times([demand])[0])
+
+    def comm(self, demand) -> dict[str, float]:
+        """Drop-in for :meth:`PlanEvaluator.comm` with the comm time priced
+        on device (the bandwidth tax reuses the host route cache — it is a
+        per-pair average, not a hot-loop quantity)."""
+        out = self.ev.comm(demand)
+        return {
+            "comm_time": self.comm_time(demand),
+            "bandwidth_tax": out["bandwidth_tax"],
+        }
+
+
+def jax_plan_evaluator(topo, hw: HardwareSpec) -> JaxPlanEvaluator:
+    """Memoized :class:`JaxPlanEvaluator` per (topology, hw) — the JAX
+    analogue of :func:`~repro.core.planeval.plan_evaluator`, sharing its
+    host-side structure caches."""
+    cache = getattr(topo, "_jax_planevals", None)
+    if cache is None:
+        cache = {}
+        topo._jax_planevals = cache
+    ev = cache.get(hw)
+    if ev is None:
+        ev = JaxPlanEvaluator(topo, hw)
+        cache[hw] = ev
+    return ev
+
+
+# ---------------------------------------------------------------------------
+# Strategy pool: the pre-priced move space of the on-device chains
+# ---------------------------------------------------------------------------
+
+
+def strategy_pool(job, n: int, size: int, seed: int, init=None) -> list:
+    """A deterministic pool of ``size`` candidate strategies for one job.
+
+    Index 0 is the chain's start state (``init`` or the cold default); the
+    rest come from a fixed-seed random walk of the NumPy proposal kernel
+    (:func:`~repro.core.strategy_search._propose`), deduplicated.  When the
+    reachable space is smaller than ``size`` the pool is padded by cycling
+    (duplicate entries are harmless: a move onto a duplicate prices
+    identically to its twin).
+    """
+    from .strategy_search import _propose, default_strategy
+
+    if size < 1:
+        raise ValueError("strategy pool needs size >= 1")
+    rng = random.Random(seed)
+    current = init if init is not None else default_strategy(job)
+    pool = [current]
+    seen = {current}
+    tries = 0
+    while len(pool) < size and tries < 64 * size:
+        cand = _propose(current, job, n, rng)
+        tries += 1
+        if cand not in seen:
+            seen.add(cand)
+            pool.append(cand)
+        current = cand  # random-walk the space for coverage
+    distinct = len(pool)
+    while len(pool) < size:
+        pool.append(pool[len(pool) % distinct])
+    return pool
+
+
+# ---------------------------------------------------------------------------
+# Batched MCMC chains: K chains, one lax.scan, one dispatch
+# ---------------------------------------------------------------------------
+
+
+def draw_proposal_streams(
+    seed: int, chains: int, iters: int, n_tenants: int, pool_size: int
+):
+    """Host-side randomness of K chains, pre-drawn and replayable.
+
+    Chain ``c`` draws from ``random.Random(seed + c)`` in strict
+    (tenant, pool index, acceptance uniform) per-iteration order — the
+    exact stream :func:`run_chains_reference` replays sequentially, so the
+    batched device run and the NumPy reference are the *same* chains.
+
+    Returns ``(t_idx, s_idx, u)`` each of shape ``(chains, iters)``.
+    """
+    t_idx = np.zeros((chains, iters), dtype=np.int64)
+    s_idx = np.zeros((chains, iters), dtype=np.int64)
+    u = np.zeros((chains, iters), dtype=np.float64)
+    for c in range(chains):
+        rng = random.Random(seed + c)
+        for i in range(iters):
+            t_idx[c, i] = rng.randrange(n_tenants)
+            s_idx[c, i] = rng.randrange(pool_size)
+            u[c, i] = rng.random()
+    return t_idx, s_idx, u
+
+
+class ChainKernel:
+    """K annealing chains over a pre-priced strategy pool, on device.
+
+    ``V[t, s, :]`` is tenant ``t``'s cluster-level link-load vector under
+    pool strategy ``s`` (priced once on host by the bit-exact NumPy
+    evaluator); a chain state is one pool index per tenant.  Each scan step
+    re-prices the proposed state *from scratch* — gather T rows, sum, one
+    bottleneck division — so chain objectives carry no incremental float
+    lineage, and the batched chains match the sequential NumPy reference to
+    reassociation level.
+
+    ``objective="union"`` anneals on the union bottleneck comm time (the
+    historical jobset objective); ``objective="decomposed"`` anneals on the
+    weighted per-tenant decomposed comm times
+    (:func:`~repro.core.strategy_search.tenant_comm_times` semantics:
+    each tenant's own bytes under weighted processor sharing of every link
+    it loads).
+    """
+
+    def __init__(
+        self,
+        V: np.ndarray,  # (T, S, L) per-(tenant, pool strategy) load vectors
+        caps: np.ndarray,  # (L,)
+        comps: np.ndarray,  # (T,) per-tenant compute times
+        weights: np.ndarray,  # (T,) tenant weights
+        overlap: float = 0.0,
+        objective: str = "union",
+    ):
+        jax = _require_jax()
+        jnp = jax.numpy
+        if objective not in ("union", "decomposed"):
+            raise ValueError(f"unknown chain objective {objective!r}")
+        self.objective = objective
+        T, S, L = V.shape
+        self.shape = (T, S, L)
+        V_d = jnp.asarray(V, dtype=jnp.float64)
+        caps_d = jnp.asarray(caps, dtype=jnp.float64)
+        comps_d = jnp.asarray(comps, dtype=jnp.float64)
+        w_d = jnp.asarray(weights, dtype=jnp.float64)
+        total_w = float(np.sum(weights))
+        t_arange = jnp.arange(T)
+
+        def _objective(a):
+            rows = V_d[t_arange, a]  # (T, L)
+            if objective == "union":
+                comm = jnp.max(rows.sum(axis=0) / caps_d)
+                comm_t = jnp.full((T,), comm)
+            else:
+                active = rows > 0.0
+                active_w = jnp.sum(
+                    jnp.where(active, w_d[:, None], 0.0), axis=0
+                )  # (L,) contending weight per link
+                per = jnp.where(
+                    active,
+                    rows * active_w[None, :]
+                    / (w_d[:, None] * caps_d[None, :]),
+                    0.0,
+                )
+                comm_t = jnp.max(per, axis=1)
+            hidden = jnp.minimum(comm_t * overlap, comps_d)
+            iters_t = comps_d + comm_t - hidden
+            return jnp.sum(w_d * iters_t) / total_w
+
+        def _one_chain(init_a, temperature, t_idx, s_idx, u):
+            def step(carry, inp):
+                a, cur, best_a, best = carry
+                ti, si, ui = inp
+                cand_a = a.at[ti].set(si)
+                cand = _objective(cand_a)
+                temp = temperature * jnp.maximum(cur, 1e-12)
+                accept = (cand <= cur) | (
+                    ui < jnp.exp(-(cand - cur) / temp)
+                )
+                a = jnp.where(accept, cand_a, a)
+                cur = jnp.where(accept, cand, cur)
+                better = accept & (cand < best)
+                best_a = jnp.where(better, cand_a, best_a)
+                best = jnp.where(better, cand, best)
+                return (a, cur, best_a, best), cur
+
+            cur0 = _objective(init_a)
+            (a, cur, best_a, best), hist = jax.lax.scan(
+                step, (init_a, cur0, init_a, cur0), (t_idx, s_idx, u)
+            )
+            return best_a, best, jnp.concatenate([cur0[None], hist])
+
+        self._run = jax.jit(
+            jax.vmap(_one_chain, in_axes=(None, 0, 0, 0, 0))
+        )
+        self._objective_np = None  # built on demand for the reference path
+
+    def run(
+        self,
+        init_a: np.ndarray,  # (T,) shared start state
+        temperatures: np.ndarray,  # (K,) per-chain temperature
+        t_idx: np.ndarray,  # (K, iters)
+        s_idx: np.ndarray,
+        u: np.ndarray,
+    ):
+        """All K chains in one dispatch.  Returns
+        ``(best_assignments (K, T), best_objs (K,), history (K, iters+1))``
+        as NumPy arrays."""
+        jnp = _require_jax().numpy
+        best_a, best, hist = self._run(
+            jnp.asarray(init_a, dtype=jnp.int64),
+            jnp.asarray(temperatures, dtype=jnp.float64),
+            jnp.asarray(t_idx, dtype=jnp.int64),
+            jnp.asarray(s_idx, dtype=jnp.int64),
+            jnp.asarray(u, dtype=jnp.float64),
+        )
+        return (
+            np.asarray(best_a),
+            np.asarray(best, dtype=np.float64),
+            np.asarray(hist, dtype=np.float64),
+        )
+
+
+def _objective_reference(
+    V: np.ndarray,
+    caps: np.ndarray,
+    comps: np.ndarray,
+    weights: np.ndarray,
+    overlap: float,
+    objective: str,
+    a: np.ndarray,
+) -> float:
+    """NumPy mirror of :class:`ChainKernel`'s on-device objective."""
+    T = V.shape[0]
+    rows = V[np.arange(T), a]
+    if objective == "union":
+        comm_t = np.full(T, np.max(rows.sum(axis=0) / caps))
+    else:
+        active = rows > 0.0
+        active_w = np.where(active, weights[:, None], 0.0).sum(axis=0)
+        per = np.where(
+            active,
+            rows * active_w[None, :] / (weights[:, None] * caps[None, :]),
+            0.0,
+        )
+        comm_t = per.max(axis=1)
+    hidden = np.minimum(comm_t * overlap, comps)
+    iters_t = comps + comm_t - hidden
+    return float(np.sum(weights * iters_t) / np.sum(weights))
+
+
+def jax_mcmc_search(
+    job,
+    topo,
+    hw: HardwareSpec,
+    iters: int = 200,
+    temperature: float = 0.1,
+    overlap: float = 0.0,
+    seed: int = 0,
+    init=None,
+    chains: int = 1,
+    pool_size: int = 64,
+):
+    """Batched single-job strategy search — the ``backend="jax"`` body of
+    :func:`~repro.core.strategy_search.mcmc_search`.
+
+    The pool's load vectors are priced once on host by the bit-exact
+    evaluator; all ``chains`` annealing chains then run in one device
+    dispatch (:class:`ChainKernel` with one tenant).  The winning
+    strategy's reported ``iter_time`` is re-priced on the NumPy path, so
+    result values carry no device float lineage; ``history`` is the best
+    chain's on-device objective trace.
+    """
+    from .netsim import compute_time, iteration_time
+    from .strategy_search import SearchResult
+
+    n = topo.n
+    pool = strategy_pool(
+        job, n, pool_size, seed + _POOL_SEED_OFFSET, init=init
+    )
+    ev = plan_evaluator(topo, hw)
+    demands = [s.demand(job, n) for s in pool]
+    vecs = [ev.loads(d) for d in demands]  # grows the link universe
+    L = ev.n_links
+    S = len(pool)
+    V = np.zeros((1, S, max(L, 1)), dtype=np.float64)
+    for s, v in enumerate(vecs):
+        V[0, s, : v.size] = v
+    caps = ev.caps if L else np.ones(1)
+    comp = compute_time(job.flops_per_sample * job.batch_per_gpu * n, n, hw)
+    kernel = ChainKernel(
+        V, caps, np.array([comp]), np.array([1.0]), overlap=overlap
+    )
+    t_idx, s_idx, u = draw_proposal_streams(seed, chains, iters, 1, S)
+    best_a, best_obj, hist = kernel.run(
+        np.zeros(1, dtype=np.int64),
+        np.full(chains, temperature, dtype=np.float64),
+        t_idx, s_idx, u,
+    )
+    c = int(np.argmin(best_obj))
+    strategy = pool[int(best_a[c, 0])]
+    demand = demands[int(best_a[c, 0])]
+    iter_time = iteration_time(ev.comm_time(demand), comp, overlap=overlap)
+    return SearchResult(
+        strategy=strategy, iter_time=iter_time, demand=demand,
+        history=[float(h) for h in hist[c]],
+    )
+
+
+def jax_mcmc_search_jobset(
+    jobset,
+    topo,
+    hw: HardwareSpec,
+    iters: int = 200,
+    temperature: float = 0.1,
+    overlap: float = 0.0,
+    seed: int = 0,
+    init=None,
+    chains: int = 1,
+    pool_size: int = 64,
+    objective: str = "union",
+    demand_cache=None,
+):
+    """Batched multi-tenant strategy search — the ``backend="jax"`` body of
+    :func:`~repro.core.strategy_search.mcmc_search_jobset`.
+
+    Per tenant, a pool of ``pool_size`` candidate strategies is priced once
+    into cluster-level link-load vectors (through the incremental
+    evaluator's caches, so repeat pricings are shared with the NumPy path);
+    ``chains`` chains of per-tenant pool moves then anneal in one dispatch
+    under the requested objective.  The winner's reported
+    ``iter_time``/``per_job`` are re-priced on the bit-exact NumPy path
+    (union) or the reference decomposition (decomposed).
+    """
+    from .netsim import compute_time
+    from .planeval import JobSetEvaluator, LRUCache
+    from .strategy_search import (
+        DEMAND_CACHE_SIZE,
+        JobSetSearchResult,
+        default_strategy,
+        evaluate_jobset,
+        evaluate_jobset_decomposed,
+    )
+
+    if not jobset.tenants:
+        raise ValueError("jax_mcmc_search_jobset needs at least one tenant")
+    if demand_cache is None:
+        demand_cache = LRUCache(DEMAND_CACHE_SIZE)
+    jse = JobSetEvaluator(
+        jobset, topo, hw, overlap=overlap, demand_cache=demand_cache
+    )
+    tenants = jobset.tenants
+    T = len(tenants)
+    init = init or {}
+    pools = []
+    for i, t in enumerate(tenants):
+        start = init.get(t.label) or default_strategy(t.spec)
+        pools.append(strategy_pool(
+            t.spec, t.k, pool_size, seed + _POOL_SEED_OFFSET + i, init=start
+        ))
+    # Price every pool entry first (the link universe grows as new MP
+    # routes are compiled), then pad all vectors to the final width.
+    vecs = [
+        [jse.tenant_loads_at(t.label, s, t.servers) for s in pools[i]]
+        for i, t in enumerate(tenants)
+    ]
+    L = jse.ev.n_links
+    S = pool_size
+    V = np.zeros((T, S, max(L, 1)), dtype=np.float64)
+    for i in range(T):
+        for s, v in enumerate(vecs[i]):
+            V[i, s, : v.size] = v
+    caps = jse.ev.caps if L else np.ones(1)
+    comps = np.array([
+        compute_time(t.flops_per_iteration, t.k, hw) for t in tenants
+    ])
+    weights = np.array([t.weight for t in tenants], dtype=np.float64)
+    kernel = ChainKernel(
+        V, caps, comps, weights, overlap=overlap, objective=objective
+    )
+    t_idx, s_idx, u = draw_proposal_streams(seed, chains, iters, T, S)
+    best_a, best_obj, hist = kernel.run(
+        np.zeros(T, dtype=np.int64),
+        np.full(chains, temperature, dtype=np.float64),
+        t_idx, s_idx, u,
+    )
+    c = int(np.argmin(best_obj))
+    best = {
+        t.label: pools[i][int(best_a[c, i])] for i, t in enumerate(tenants)
+    }
+    if objective == "decomposed":
+        obj, per_job = evaluate_jobset_decomposed(
+            best, jobset, topo, hw, overlap, _demand_cache=demand_cache
+        )
+        union = jse.union_for(best)
+    else:
+        obj, union, per_job = evaluate_jobset(
+            best, jobset, topo, hw, overlap,
+            _demand_cache=demand_cache, compiled=True,
+        )
+    return JobSetSearchResult(
+        strategies=best, iter_time=obj, demand=union, per_job=per_job,
+        history=[float(h) for h in hist[c]],
+    )
+
+
+def run_chains_reference(
+    V: np.ndarray,
+    caps: np.ndarray,
+    comps: np.ndarray,
+    weights: np.ndarray,
+    overlap: float,
+    objective: str,
+    init_a: np.ndarray,
+    temperatures: np.ndarray,
+    t_idx: np.ndarray,
+    s_idx: np.ndarray,
+    u: np.ndarray,
+):
+    """Sequential NumPy replay of the batched chains: same pre-drawn
+    streams, same annealing rule, one chain at a time — the equivalence
+    oracle ``tests/test_planeval_jax.py`` pins the device kernel against."""
+    K, iters = t_idx.shape
+    T = V.shape[0]
+    best_as = np.zeros((K, T), dtype=np.int64)
+    bests = np.zeros(K, dtype=np.float64)
+    hists = np.zeros((K, iters + 1), dtype=np.float64)
+    for c in range(K):
+        a = np.array(init_a, dtype=np.int64)
+        cur = _objective_reference(
+            V, caps, comps, weights, overlap, objective, a
+        )
+        best_a, best = a.copy(), cur
+        hists[c, 0] = cur
+        for i in range(iters):
+            cand_a = a.copy()
+            cand_a[t_idx[c, i]] = s_idx[c, i]
+            cand = _objective_reference(
+                V, caps, comps, weights, overlap, objective, cand_a
+            )
+            temp = temperatures[c] * max(cur, 1e-12)
+            if cand <= cur or u[c, i] < math.exp(-(cand - cur) / temp):
+                a, cur = cand_a, cand
+                if cand < best:
+                    best_a, best = cand_a.copy(), cand
+            hists[c, i + 1] = cur
+        best_as[c] = best_a
+        bests[c] = best
+    return best_as, bests, hists

@@ -585,13 +585,26 @@ class SimEngine:
     engine caches per-job topologies for dedicated-cluster sweeps.
     """
 
-    def __init__(self, hw: HardwareSpec | None = None, compiled: bool = True):
+    def __init__(
+        self,
+        hw: HardwareSpec | None = None,
+        compiled: bool = True,
+        backend: str = "numpy",
+    ):
         self.hw = hw or HardwareSpec()
         # Fluid pricing path: the compiled plan evaluator
         # (:func:`repro.core.planeval.plan_evaluator`, cached per topology)
         # by default; ``compiled=False`` forces the reference
         # :func:`~repro.core.netsim.topoopt_comm_time` walk.
         self.compiled = compiled
+        # ``backend="jax"`` prices fluid comm times on the batched device
+        # evaluator (:func:`repro.core.planeval_jax.jax_plan_evaluator`) —
+        # agrees with the NumPy path to
+        # :data:`~repro.core.planeval_jax.JAX_EQUIV_RTOL`, not to the bit;
+        # "numpy" (default) keeps the bit-exact reference behaviour.
+        if backend not in ("numpy", "jax"):
+            raise ValueError(f"unknown SimEngine backend {backend!r}")
+        self.backend = backend
         self._dedicated_cache: dict = {}
         # job name -> (src, dst, bytes) arrays in job-local index space,
         # shared by every tree_times call on this engine.
@@ -600,6 +613,10 @@ class SimEngine:
     # -- fluid facade (netsim) ---------------------------------------------
 
     def comm_time(self, topo: Topology, demand: TrafficDemand) -> dict[str, float]:
+        if self.backend == "jax":
+            from .planeval_jax import jax_plan_evaluator
+
+            return jax_plan_evaluator(topo, self.hw).comm(demand)
         if self.compiled:
             return plan_evaluator(topo, self.hw).comm(demand)
         return topoopt_comm_time(topo, demand, self.hw)

@@ -141,6 +141,9 @@ def mcmc_search(
     init: Strategy | None = None,
     compiled: bool = True,
     proposals_per_step: int = 1,
+    backend: str = "numpy",
+    chains: int = 1,
+    pool_size: int = 64,
 ) -> SearchResult:
     """Search the Comp x Comm plane for a fixed topology (§4.1).
 
@@ -157,7 +160,29 @@ def mcmc_search(
     incumbent (:meth:`PlanEvaluator.loads_delta`) in one vectorized pass,
     and the annealing rule is applied to the best of them.  It consumes the
     RNG differently, so its chain legitimately differs from ``K=1``.
+
+    ``backend="jax"`` runs ``chains`` independent annealing chains over a
+    pre-priced pool of ``pool_size`` strategies in one device dispatch
+    (:func:`repro.core.planeval_jax.jax_mcmc_search` — ``lax.scan`` carries
+    each chain, ``vmap`` batches them).  A documented different chain from
+    the NumPy walk (finite move space, its own RNG streams); the default
+    ``backend="numpy"`` is byte-stable against its introduction, and the
+    returned ``iter_time`` is always re-priced on the bit-exact NumPy path.
     """
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown mcmc_search backend {backend!r}")
+    if chains < 1:
+        raise ValueError("chains must be >= 1")
+    if backend == "jax":
+        from .planeval_jax import jax_mcmc_search
+
+        return jax_mcmc_search(
+            job, topo, hw, iters=iters, temperature=temperature,
+            overlap=overlap, seed=seed, init=init, chains=chains,
+            pool_size=pool_size,
+        )
+    if chains != 1:
+        raise ValueError("chains > 1 needs backend='jax'")
     if proposals_per_step < 1:
         raise ValueError("proposals_per_step must be >= 1")
     if proposals_per_step > 1 and not compiled:
@@ -368,6 +393,118 @@ def evaluate_jobset(
     return obj / jobset.total_weight, union, per_job
 
 
+def evaluate_jobset_decomposed(
+    strategies: dict[str, Strategy],
+    jobset: JobSet,
+    topo: Topology,
+    hw: HardwareSpec,
+    overlap: float = 0.0,
+    _demand_cache: dict | None = None,
+) -> tuple[float, dict[str, float]]:
+    """(weighted decomposed objective, per-job iteration times).
+
+    The decomposed counterpart of :func:`evaluate_jobset`: each tenant is
+    charged its *own* bottleneck comm time under weighted processor sharing
+    (:func:`tenant_comm_times`) instead of the union's, so heavy-weight
+    tenants actually shape the objective.  This is the reference pricing of
+    ``mcmc_search_jobset(objective="decomposed")`` — the compiled path
+    (:meth:`~repro.core.planeval.JobSetEvaluator.decomposed_objective_of`)
+    computes the identical expressions from cached vectors and matches it
+    to the bit."""
+    comm = tenant_comm_times(
+        strategies, jobset, topo, hw, _demand_cache=_demand_cache
+    )
+    per_job: dict[str, float] = {}
+    obj = 0.0
+    for t in jobset.tenants:
+        comp = compute_time(t.flops_per_iteration, t.k, hw)
+        per_job[t.label] = iteration_time(
+            comm[t.label], comp, overlap=overlap
+        )
+        obj += t.weight * per_job[t.label]
+    return obj / jobset.total_weight, per_job
+
+
+def _mcmc_jobset_decomposed(
+    jobset: JobSet,
+    topo: Topology,
+    hw: HardwareSpec,
+    iters: int,
+    temperature: float,
+    overlap: float,
+    seed: int,
+    init: dict[str, Strategy] | None,
+    compiled: bool,
+    proposals_per_step: int,
+    demand_cache: dict,
+) -> JobSetSearchResult:
+    """The ``objective="decomposed"`` annealing loop (bugfix for the PR-5
+    gap where heavy tenants could not shape the union-annealed plan).
+
+    Every candidate state is priced *from scratch* on its per-tenant
+    vectors — the decomposition has no incremental ``total - old + new``
+    form (a move flips which tenants contend on which links) — so no
+    tie-confirmation pass is needed: compiled and reference paths compute
+    bit-identical objectives and make identical fixed-seed decisions."""
+    rng = random.Random(seed)
+    current: dict[str, Strategy] = {
+        t.label: (init or {}).get(t.label) or default_strategy(t.spec)
+        for t in jobset.tenants
+    }
+    if compiled:
+        jse = JobSetEvaluator(
+            jobset, topo, hw, overlap=overlap, demand_cache=demand_cache
+        )
+
+        def _eval(state):
+            return jse.decomposed_objective_of(state)
+
+    else:
+
+        def _eval(state):
+            return evaluate_jobset_decomposed(
+                state, jobset, topo, hw, overlap,
+                _demand_cache=demand_cache,
+            )
+
+    cur_obj, cur_per_job = _eval(current)
+    best = dict(current)
+    best_obj, best_per_job = cur_obj, cur_per_job
+    history = [cur_obj]
+
+    for _ in range(iters):
+        if proposals_per_step > 1:
+            cands = []
+            for _k in range(proposals_per_step):
+                t = jobset.tenants[rng.randrange(len(jobset.tenants))]
+                cand = dict(current)
+                cand[t.label] = _propose(current[t.label], t.spec, t.k, rng)
+                cands.append(cand)
+            evals = [_eval(c) for c in cands]
+            j = int(np.argmin([e[0] for e in evals]))
+            cand, (cand_obj, cand_per_job) = cands[j], evals[j]
+        else:
+            t = jobset.tenants[rng.randrange(len(jobset.tenants))]
+            cand = dict(current)
+            cand[t.label] = _propose(current[t.label], t.spec, t.k, rng)
+            cand_obj, cand_per_job = _eval(cand)
+        temp = temperature * max(cur_obj, 1e-12)
+        if cand_obj <= cur_obj or rng.random() < math.exp(
+            -(cand_obj - cur_obj) / temp
+        ):
+            current, cur_obj, cur_per_job = cand, cand_obj, cand_per_job
+            if cur_obj < best_obj:
+                best, best_obj = dict(current), cur_obj
+                best_per_job = cur_per_job
+        history.append(cur_obj)
+
+    union = jobset.union(_tenant_demands(best, jobset, demand_cache))
+    return JobSetSearchResult(
+        strategies=best, iter_time=best_obj, demand=union,
+        per_job=best_per_job, history=history,
+    )
+
+
 def mcmc_search_jobset(
     jobset: JobSet,
     topo: Topology,
@@ -380,6 +517,10 @@ def mcmc_search_jobset(
     compiled: bool = True,
     proposals_per_step: int = 1,
     demand_cache: dict | None = None,
+    objective: str = "union",
+    backend: str = "numpy",
+    chains: int = 1,
+    pool_size: int = 64,
 ) -> JobSetSearchResult:
     """Joint Comp x Comm search for a shared cluster (fixed topology).
 
@@ -402,16 +543,50 @@ def mcmc_search_jobset(
     ``DEMAND_CACHE_SIZE``) memoizes per-tenant demand construction;
     :func:`~repro.core.alternating.co_optimize_jobset` passes one cache
     shared across all of its rounds.
+
+    ``objective="decomposed"`` anneals on the weighted *decomposed*
+    per-tenant comm times (:func:`tenant_comm_times` semantics) instead of
+    charging every tenant the union bottleneck — the PR-5 gap where a
+    heavy-weight tenant could not pull the plan toward its own traffic.
+    The default ``"union"`` preserves all existing goldens byte-for-byte.
+
+    ``backend="jax"`` runs ``chains`` batched annealing chains over
+    per-tenant pools of ``pool_size`` strategies in one device dispatch
+    (:func:`repro.core.planeval_jax.jax_mcmc_search_jobset`); the reported
+    result is re-priced on the bit-exact NumPy path.  ``backend="numpy"``
+    (default) is byte-stable against its introduction.
     """
     if not jobset.tenants:
         raise ValueError("mcmc_search_jobset needs at least one tenant")
+    if objective not in ("union", "decomposed"):
+        raise ValueError(f"unknown jobset objective {objective!r}")
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown mcmc_search_jobset backend {backend!r}")
+    if chains < 1:
+        raise ValueError("chains must be >= 1")
+    if backend == "jax":
+        from .planeval_jax import jax_mcmc_search_jobset
+
+        return jax_mcmc_search_jobset(
+            jobset, topo, hw, iters=iters, temperature=temperature,
+            overlap=overlap, seed=seed, init=init, chains=chains,
+            pool_size=pool_size, objective=objective,
+            demand_cache=demand_cache,
+        )
+    if chains != 1:
+        raise ValueError("chains > 1 needs backend='jax'")
     if proposals_per_step < 1:
         raise ValueError("proposals_per_step must be >= 1")
     if proposals_per_step > 1 and not compiled:
         raise ValueError("batched proposals need the compiled evaluator")
-    rng = random.Random(seed)
     if demand_cache is None:
         demand_cache = LRUCache(DEMAND_CACHE_SIZE)
+    if objective == "decomposed":
+        return _mcmc_jobset_decomposed(
+            jobset, topo, hw, iters, temperature, overlap, seed, init,
+            compiled, proposals_per_step, demand_cache,
+        )
+    rng = random.Random(seed)
     current: dict[str, Strategy] = {
         t.label: (init or {}).get(t.label) or default_strategy(t.spec)
         for t in jobset.tenants

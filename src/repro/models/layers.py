@@ -216,11 +216,16 @@ def attention_decode(p, x, cache_k, cache_v, pos, cfg, *, window: int = 0):
         slot = pos % T
     else:
         slot = pos
+    # All start indices must share one dtype; literal zeros would promote
+    # to int64 when x64 is enabled (the planner pins it) while a traced
+    # `pos` stays int32, so build them from slot's own dtype.
+    slot = jnp.asarray(slot)
+    zero = jnp.zeros((), dtype=slot.dtype)
     new_k = lax.dynamic_update_slice(
-        cache_k, k[:, :, None, :].astype(cache_k.dtype), (0, 0, slot, 0)
+        cache_k, k[:, :, None, :].astype(cache_k.dtype), (zero, zero, slot, zero)
     )
     new_v = lax.dynamic_update_slice(
-        cache_v, v[:, :, None, :].astype(cache_v.dtype), (0, 0, slot, 0)
+        cache_v, v[:, :, None, :].astype(cache_v.dtype), (zero, zero, slot, zero)
     )
 
     g = cfg.n_heads // cfg.n_kv_heads
