@@ -24,6 +24,7 @@ BENCHES = [
     ("planner", "Compiled plan evaluator: reference vs compiled planner speed"),
     ("planner_jax", "JAX planner backend: batched chains vs NumPy pricing"),
     ("placement", "Placement co-search + churn-priced migration vs greedy"),
+    ("collectives_sched", "Collective-schedule co-optimization vs ring-only"),
     ("roofline", "Roofline dry-run terms"),
 ]
 

@@ -143,8 +143,13 @@ def alternating_optimize(
     backend: str = "numpy",
     chains: int = 1,
     pool_size: int = 64,
+    schedules: tuple[str, ...] | None = None,
 ) -> CoOptResult:
     """TopoOpt's off-line co-optimization loop.
+
+    ``schedules`` opens the collective-schedule axis in every round's
+    strategy search (:func:`~repro.core.strategy_search.mcmc_search`);
+    ``None`` (default) keeps the ring-only move set byte-identical to HEAD.
 
     Online re-optimization (:mod:`repro.core.online`) re-enters this loop
     mid-run with a **warm start**: ``warm_topology`` / ``warm_strategy``
@@ -181,6 +186,7 @@ def alternating_optimize(
             seed=seed + r, init=strategy_init,
             compiled=compiled, proposals_per_step=proposals_per_step,
             backend=backend, chains=chains, pool_size=pool_size,
+            schedules=schedules,
         )
         # Comm x Topo plane: rebuild the topology for the found demand.
         new_topo = topology_finder(
@@ -228,6 +234,7 @@ def _co_optimize_single(
     backend: str = "numpy",
     chains: int = 1,
     pool_size: int = 64,
+    schedules: tuple[str, ...] | None = None,
 ) -> JobSetPlan:
     """The two-plane alternating loop for one fixed tenant placement —
     exactly the pre-placement-search ``co_optimize_jobset`` body."""
@@ -255,6 +262,7 @@ def _co_optimize_single(
             compiled=compiled, proposals_per_step=proposals_per_step,
             demand_cache=demand_cache, objective=objective,
             backend=backend, chains=chains, pool_size=pool_size,
+            schedules=schedules,
         )
         new_topo = topology_finder(
             res.demand, hw.degree, forbidden=forbidden,
@@ -313,6 +321,7 @@ def co_optimize_jobset(
     backend: str = "numpy",
     chains: int = 1,
     pool_size: int = 64,
+    schedules: tuple[str, ...] | None = None,
 ) -> JobSetPlan:
     """Multi-tenant alternating optimization: co-optimize every resident
     job's parallelization strategy against one *shared* topology.
@@ -417,7 +426,7 @@ def co_optimize_jobset(
             warm_topology, warm_strategies, forbidden, compiled,
             proposals_per_step, demand_cache,
             objective=objective, backend=backend, chains=chains,
-            pool_size=pool_size,
+            pool_size=pool_size, schedules=schedules,
         )
         plan.candidate_index = ci
         if best is None or plan.iter_time < best.iter_time:

@@ -153,6 +153,150 @@ def multi_ring_all_reduce(
     return out.reshape(shape)
 
 
+def recursive_hd_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
+    """Recursive halving-doubling AllReduce (the latency-optimal schedule of
+    :mod:`repro.core.schedules`): ``log2(n)`` halving exchanges
+    (reduce-scatter with partner ``i XOR d``) followed by ``log2(n)``
+    doubling exchanges (all-gather), ``2 log2(n)`` ppermute rounds total vs
+    the ring's ``2 (n-1)``.  Power-of-two groups only — the demand compiler
+    folds stragglers into the core, the runtime kernel keeps the strict
+    form.  Equivalent to ``lax.psum(x, axis)`` (exact for integer inputs:
+    every addition is a disjoint pairwise tree).
+    """
+    n = axis_size(axis_name)
+    if n == 1:
+        return x
+    if n < 2 or n & (n - 1):
+        raise ValueError(
+            f"recursive halving-doubling needs a power-of-two group, got {n}"
+        )
+    me = lax.axis_index(axis_name)
+
+    shape = x.shape
+    flat = x.reshape(-1)
+    seg = -(-flat.size // n)  # ceil
+    pad = seg * n - flat.size
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    acc = flat.reshape(n, seg)
+
+    # Recursive halving: the live block [lo, lo + 2d) splits at each round;
+    # the kept half accumulates the partner's complementary half.
+    lo = jnp.zeros_like(me)
+    d = n // 2
+    while d >= 1:
+        bit = (me >> (d.bit_length() - 1)) & 1
+        keep_lo = lo + bit * d
+        send_lo = lo + (1 - bit) * d
+        perm = [(i, i ^ d) for i in range(n)]
+        sent = lax.dynamic_slice_in_dim(acc, send_lo, d, axis=0)
+        received = lax.ppermute(sent, axis_name, perm)
+        kept = lax.dynamic_slice_in_dim(acc, keep_lo, d, axis=0)
+        acc = lax.dynamic_update_slice_in_dim(
+            acc, kept + received, keep_lo, axis=0
+        )
+        lo = keep_lo
+        d //= 2
+    # Device i now owns fully-reduced segment i (lo == me by construction).
+    # Recursive doubling: exchange ever-larger aligned blocks back.
+    d = 1
+    while d < n:
+        perm = [(i, i ^ d) for i in range(n)]
+        sent = lax.dynamic_slice_in_dim(acc, lo, d, axis=0)
+        received = lax.ppermute(sent, axis_name, perm)
+        acc = lax.dynamic_update_slice_in_dim(acc, received, lo ^ d, axis=0)
+        lo = jnp.minimum(lo, lo ^ d)
+        d *= 2
+
+    out = acc.reshape(-1)
+    if pad:
+        out = out[: flat.size - pad]
+    return out.reshape(shape)
+
+
+def _tree_all_reduce(x: jax.Array, axis_name: str, order: list[int]) -> jax.Array:
+    """AllReduce over one balanced binary tree: heap node ``i`` (device
+    ``order[i]``) parents ``order[(i-1)//2]``.  Reduce runs deepest level
+    first (left/right children in separate ppermute rounds — a parent has
+    one source per round), then the root's total broadcasts back down."""
+    n = len(order)
+    me = lax.axis_index(axis_name)
+    # Heap indices grouped by depth: [1,2], [3..6], [7..14], ...
+    levels: list[list[int]] = []
+    start, width = 1, 2
+    while start < n:
+        levels.append(list(range(start, min(start + width, n))))
+        start += width
+        width *= 2
+    acc = x
+    for level in reversed(levels):
+        for parity in (1, 0):  # left children first, then right
+            pairs = [
+                (order[i], order[(i - 1) // 2])
+                for i in level
+                if i % 2 == parity
+            ]
+            if not pairs:
+                continue
+            # Non-recipients get zeros from ppermute, so a plain add only
+            # touches the parents.
+            acc = acc + lax.ppermute(acc, axis_name, pairs)
+    for level in levels:
+        for parity in (1, 0):
+            pairs = [
+                (order[(i - 1) // 2], order[i])
+                for i in level
+                if i % 2 == parity
+            ]
+            if not pairs:
+                continue
+            received = lax.ppermute(acc, axis_name, pairs)
+            mask = jnp.zeros((), dtype=bool)
+            for _, dst in pairs:
+                mask = mask | (me == dst)
+            acc = jnp.where(mask, received, acc)
+    return acc
+
+
+def multi_tree_all_reduce(
+    x: jax.Array, axis_name: str, strides: tuple[int, ...] | list[int]
+) -> jax.Array:
+    """AllReduce load-balanced over several balanced binary trees, one per
+    TotientPerms ring order (the ``multi_tree`` schedule of
+    :mod:`repro.core.schedules`): ``x`` splits into ``len(strides)`` chunks
+    and chunk ``r`` reduces up / broadcasts down the tree laid over the
+    stride ``strides[r]`` ring order.  ``2 floor(log2(n))`` serial rounds
+    per tree; the trees are independent programs over (mostly) disjoint
+    edges, so they overlap.  Equivalent to ``lax.psum`` (exact for integer
+    inputs)."""
+    strides = tuple(strides)
+    r = len(strides)
+    if r == 0:
+        raise ValueError("need at least one tree stride")
+    from .totient import ring_order
+
+    n = axis_size(axis_name)
+    if n == 1:
+        return x
+    orders = [[int(v) for v in ring_order(n, p)] for p in strides]
+
+    shape = x.shape
+    flat = x.reshape(-1)
+    chunk = -(-flat.size // r)
+    pad = chunk * r - flat.size
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    chunks = flat.reshape(r, chunk)
+
+    reduced = [
+        _tree_all_reduce(chunks[i], axis_name, orders[i]) for i in range(r)
+    ]
+    out = jnp.concatenate(reduced).reshape(-1)
+    if pad:
+        out = out[: flat.size - pad]
+    return out.reshape(shape)
+
+
 def topoopt_psum_fn(strides: tuple[int, ...] | None, axis_name: str):
     """The gradient-sync collective a training step should use: multi-ring
     TotientPerms AllReduce when a TopoOpt plan supplies strides, otherwise

@@ -47,12 +47,17 @@ class TrafficDemand:
     n: int
     allreduce: list[AllReduceGroup] = field(default_factory=list)
     mp: np.ndarray | None = None  # (n, n) bytes, mp[i, j] = i -> j
+    # Serial latency rounds pinned by compiled collective schedules
+    # (repro.core.schedules); uncompiled ring groups contribute their
+    # 2 (k-1) rounds through demand_steps() instead.
+    steps: float = 0.0
 
     def __post_init__(self):
         if self.mp is None:
             self.mp = np.zeros((self.n, self.n), dtype=np.float64)
         self.mp = np.asarray(self.mp, dtype=np.float64)
         assert self.mp.shape == (self.n, self.n)
+        self.steps = float(self.steps)
 
     @property
     def sum_allreduce(self) -> float:
@@ -128,7 +133,7 @@ def remap_demand(
         raise ValueError(f"placement {servers!r} repeats a server")
     if servers and not (0 <= min(servers) and max(servers) < n_cluster):
         raise ValueError(f"placement {servers!r} outside cluster of {n_cluster}")
-    out = TrafficDemand(n=n_cluster)
+    out = TrafficDemand(n=n_cluster, steps=demand.steps)
     for g in demand.allreduce:
         out.allreduce.append(
             AllReduceGroup(
@@ -168,7 +173,7 @@ def rebase_demand(
     if new_servers and not (0 <= min(new_servers) and max(new_servers) < n):
         raise ValueError(f"placement {new_servers!r} outside cluster of {n}")
     mapping = dict(zip(old_servers, new_servers))
-    out = TrafficDemand(n=n)
+    out = TrafficDemand(n=n, steps=demand.steps)
     for g in demand.allreduce:
         out.allreduce.append(
             AllReduceGroup(
@@ -210,6 +215,7 @@ def union_demand(
         if p.n != n:
             raise ValueError(f"demand on {p.n} nodes in a union over {n}")
         out.mp += p.mp
+        out.steps = max(out.steps, p.steps)
         for g in p.allreduce:
             if g.members not in merged:
                 order.append(g.members)
@@ -219,6 +225,19 @@ def union_demand(
         AllReduceGroup(members=m, nbytes=merged[m]) for m in order
     ]
     return out
+
+
+def demand_steps(demand: TrafficDemand) -> float:
+    """Serial latency rounds of a demand — the α multiplier of the (α, β)
+    cost model: the compiled-schedule ``demand.steps`` floor, raised to each
+    active (nbytes > 0, k > 1) uncompiled ring group's ``2 (k-1)`` rounds.
+    Topology-independent, so evaluators can memoize it per demand."""
+    steps = demand.steps
+    for g in demand.allreduce:
+        k = len(g.members)
+        if g.nbytes > 0.0 and k > 1:
+            steps = max(steps, 2.0 * (k - 1))
+    return steps
 
 
 # ---------------------------------------------------------------------------

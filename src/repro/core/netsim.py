@@ -22,7 +22,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .demand import TrafficDemand
+from .demand import TrafficDemand, demand_steps
 from .routing import bandwidth_tax, link_loads
 from .topology_finder import Topology
 
@@ -35,6 +35,11 @@ class HardwareSpec:
     degree: int = 4
     compute_flops: float = 312e12  # A100 bf16 peak
     compute_efficiency: float = 0.45
+    # α of the (α, β) collective cost model: per-round link latency (s).
+    # 0.0 keeps the pure fluid model (and every pre-schedule result)
+    # bit-identical; set it to price latency-dominated schedules
+    # (repro.core.schedules) against bandwidth-optimal rings.
+    link_latency: float = 0.0
 
     @property
     def node_bandwidth(self) -> float:
@@ -92,6 +97,8 @@ def topoopt_comm_time(
     """
     loads, flows, routing = _reference_loads(topo, demand)
     worst = _reference_worst(topo, loads, hw)
+    if hw.link_latency:
+        worst = worst + hw.link_latency * demand_steps(demand)
     tax = bandwidth_tax(flows, routing) if flows else 1.0
     return {"comm_time": worst, "bandwidth_tax": tax}
 
@@ -103,7 +110,10 @@ def reference_comm_time(
     without paying for the bandwidth tax — the search loops' reference
     objective (and the compiled path's tie-breaking authority)."""
     loads, _, _ = _reference_loads(topo, demand)
-    return _reference_worst(topo, loads, hw)
+    worst = _reference_worst(topo, loads, hw)
+    if hw.link_latency:
+        worst = worst + hw.link_latency * demand_steps(demand)
+    return worst
 
 
 def _reference_loads(topo: Topology, demand: TrafficDemand):
@@ -216,6 +226,7 @@ def fat_tree_comm_time(
         degree=hw.degree,
         compute_flops=hw.compute_flops,
         compute_efficiency=hw.compute_efficiency,
+        link_latency=hw.link_latency,
     )
     return ideal_switch_comm_time(demand, scaled)
 

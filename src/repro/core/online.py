@@ -227,6 +227,12 @@ class ReoptPolicy:
     # only the k best candidates by the incremental evaluator pay the full
     # alternating loop (None = screen nothing, the pre-fix behaviour).
     screen_candidates: int | None = None
+    # Collective-schedule search axis of the replan optimizer's inner MCMC
+    # (repro.core.schedules): a tuple of schedule names the proposal kernel
+    # may flip per AllReduce-bearing strategy, e.g. ("ring",
+    # "recursive_hd", "multi_tree").  None / ("ring",) keeps the search
+    # (and its RNG streams) byte-identical to the pre-schedule behaviour.
+    schedules: tuple[str, ...] | None = None
 
     @classmethod
     def never(cls) -> "ReoptPolicy":
@@ -363,6 +369,7 @@ class ReoptController(ScenarioObserver):
                 compiled=self.policy.compiled,
                 backend=self.policy.backend,
                 chains=self.policy.chains,
+                schedules=self.policy.schedules,
             )
         return alternating_optimize(
             self.job, self.n, self.hw,
@@ -375,6 +382,7 @@ class ReoptController(ScenarioObserver):
             compiled=self.policy.compiled,
             backend=self.policy.backend,
             chains=self.policy.chains,
+            schedules=self.policy.schedules,
         )
 
     def ensure_plan(self) -> CoOptResult:
@@ -799,6 +807,7 @@ class JobSetController(ReoptController):
                 objective=self.policy.objective,
                 backend=self.policy.backend,
                 chains=self.policy.chains,
+                schedules=self.policy.schedules,
             )
         candidates = None
         if self._pending_candidates is not None:
@@ -819,6 +828,7 @@ class JobSetController(ReoptController):
             objective=self.policy.objective,
             backend=self.policy.backend,
             chains=self.policy.chains,
+            schedules=self.policy.schedules,
         )
 
     def _adopt_plan(self, res) -> None:
@@ -1120,6 +1130,7 @@ class JobSetController(ReoptController):
                     objective=self.policy.objective,
                     backend=self.policy.backend,
                     chains=self.policy.chains,
+                    schedules=self.policy.schedules,
                 )
                 saved = self.jobset
                 self.jobset = trial

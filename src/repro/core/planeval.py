@@ -59,7 +59,7 @@ from collections import OrderedDict
 
 import numpy as np
 
-from .demand import TrafficDemand, remap_demand
+from .demand import TrafficDemand, demand_steps, remap_demand
 from .netsim import (
     HardwareSpec,
     _routing_with_fallback,
@@ -392,24 +392,38 @@ class PlanEvaluator:
             tax = float(vals @ self._pair_tax[pids]) / logical
         else:
             tax = 1.0
+        worst = self.comm_time_from_loads(loads)
+        if self.hw.link_latency:
+            worst = worst + self.hw.link_latency * demand_steps(demand)
         return {
-            "comm_time": self.comm_time_from_loads(loads),
+            "comm_time": worst,
             "bandwidth_tax": tax,
         }
 
     def comm_time(self, demand: TrafficDemand) -> float:
         """Bottleneck comm time of ``demand`` — bit-identical to
-        ``topoopt_comm_time(...)["comm_time"]``."""
-        return self.comm_time_from_loads(self._eval(demand)[0])
+        ``topoopt_comm_time(...)["comm_time"]`` (including the α latency
+        term when ``hw.link_latency`` is set: same ``worst + α * steps``
+        expression as the reference)."""
+        worst = self.comm_time_from_loads(self._eval(demand)[0])
+        if self.hw.link_latency:
+            worst = worst + self.hw.link_latency * demand_steps(demand)
+        return worst
 
     def comm_times(self, demands) -> np.ndarray:
         """Batched pricing: bottleneck comm time of ``K`` demands in one
-        vectorized max over a (K, n_links) load matrix."""
+        vectorized max over a (K, n_links) load matrix (plus each demand's
+        α latency term when ``hw.link_latency`` is set)."""
         demands = list(demands)
         if not demands:
             return np.zeros(0)
         rows = [self.loads(d) for d in demands]
-        return self.comm_times_from_loads(rows)
+        times = self.comm_times_from_loads(rows)
+        if self.hw.link_latency:
+            times = times + self.hw.link_latency * np.asarray(
+                [demand_steps(d) for d in demands]
+            )
+        return times
 
 
 def plan_evaluator(topo, hw: HardwareSpec) -> PlanEvaluator:
@@ -485,6 +499,9 @@ class JobSetEvaluator:
         self._pending: tuple[str, object, np.ndarray] | None = None
         # Last propose_batch's (moves, rows, comms) for select().
         self._batch: tuple | None = None
+        # Per-(label, strategy) schedule step counts (α latency term) —
+        # topology- and placement-independent, so memoized flat.
+        self._steps_memo: dict[tuple, float] = {}
 
     # -- per-tenant vectors --------------------------------------------------
 
@@ -550,7 +567,47 @@ class JobSetEvaluator:
                 out.add_mp(g.members[i], g.members[(i + 1) % k], per_link)
         return out
 
-    def _objective(self, comm: float) -> tuple[float, dict[str, float]]:
+    def _steps(self, label: str, strategy) -> float:
+        """Serial latency rounds of one tenant's demand under ``strategy``
+        (:func:`~repro.core.demand.demand_steps` of the job-local demand —
+        equal to the remapped/unioned value, since placement preserves
+        group sizes)."""
+        key = (label, strategy)
+        v = self._steps_memo.get(key)
+        if v is None:
+            v = demand_steps(
+                self._local_demand(self._tenant[label], strategy)
+            )
+            self._steps_memo[key] = v
+        return v
+
+    def _move_steps(self, label: str, strategy) -> float:
+        """Union step count of the current state with ``label`` moved to
+        ``strategy`` — max over tenants, mirroring ``demand_steps`` of the
+        union demand the reference walk prices."""
+        if not self.hw.link_latency:
+            return 0.0
+        steps = 0.0
+        for t in self.jobset.tenants:
+            s = strategy if t.label == label else self.strategies[t.label]
+            steps = max(steps, self._steps(t.label, s))
+        return steps
+
+    def _steps_of(self, strategies: dict[str, object]) -> float:
+        if not self.hw.link_latency:
+            return 0.0
+        steps = 0.0
+        for t in self.jobset.tenants:
+            steps = max(steps, self._steps(t.label, strategies[t.label]))
+        return steps
+
+    def _objective(
+        self, comm: float, steps: float = 0.0
+    ) -> tuple[float, dict[str, float]]:
+        if self.hw.link_latency:
+            # Same ``worst + α * steps`` expression as the reference
+            # (the cached load vectors carry only the β term).
+            comm = comm + self.hw.link_latency * steps
         per_job: dict[str, float] = {}
         obj = 0.0
         for t in self.jobset.tenants:
@@ -578,7 +635,8 @@ class JobSetEvaluator:
         """Objective of an arbitrary strategy assignment, computed from the
         full sum of per-tenant vectors (no incremental lineage)."""
         return self._objective(
-            self.ev.comm_time_from_loads(self._full_total(strategies))
+            self.ev.comm_time_from_loads(self._full_total(strategies)),
+            self._steps_of(strategies),
         )
 
     def decomposed_objective_of(
@@ -615,6 +673,15 @@ class JobSetEvaluator:
                         mat[i, mask] * active_w[mask]
                         / (weights[i] * caps[mask])
                     ))
+        if self.hw.link_latency:
+            # α term: each tenant pays its own schedule's rounds — the
+            # exact expression of the reference ``tenant_comm_times``.
+            for t in ts:
+                per_comm[t.label] = (
+                    per_comm[t.label]
+                    + self.hw.link_latency
+                    * self._steps(t.label, strategies[t.label])
+                )
         per_job: dict[str, float] = {}
         obj = 0.0
         for t in ts:
@@ -632,7 +699,10 @@ class JobSetEvaluator:
         self.strategies = dict(strategies)
         self._total = self._full_total(strategies)
         self._pending = None
-        return self._objective(self.ev.comm_time_from_loads(self._total))
+        return self._objective(
+            self.ev.comm_time_from_loads(self._total),
+            self._steps_of(strategies),
+        )
 
     def _move_row(self, label: str, strategy) -> np.ndarray:
         """Load vector of the current state with ``label`` moved to
@@ -679,7 +749,8 @@ class JobSetEvaluator:
         return self._objective(
             self.ev.comm_time_from_loads(
                 self.placement_row(label, strategy, servers)
-            )
+            ),
+            self._move_steps(label, strategy),
         )[0]
 
     def propose(
@@ -691,7 +762,10 @@ class JobSetEvaluator:
         assert self._total is not None, "call set_strategies first"
         row = self._move_row(label, strategy)
         self._pending = (label, strategy, row)
-        return self._objective(self.ev.comm_time_from_loads(row))
+        return self._objective(
+            self.ev.comm_time_from_loads(row),
+            self._move_steps(label, strategy),
+        )
 
     def propose_batch(
         self, moves: list[tuple[str, object]]
@@ -704,7 +778,10 @@ class JobSetEvaluator:
         rows = [self._move_row(label, strategy) for label, strategy in moves]
         comms = self.ev.comm_times_from_loads(rows)
         self._batch = (list(moves), rows, comms)
-        return np.asarray([self._objective(float(c))[0] for c in comms])
+        return np.asarray([
+            self._objective(float(c), self._move_steps(label, strategy))[0]
+            for (label, strategy), c in zip(moves, comms)
+        ])
 
     def select(self, index: int) -> tuple[float, dict[str, float]]:
         """Stage move ``index`` of the last :meth:`propose_batch` as the
@@ -713,7 +790,9 @@ class JobSetEvaluator:
         moves, rows, comms = self._batch
         label, strategy = moves[index]
         self._pending = (label, strategy, rows[index])
-        return self._objective(float(comms[index]))
+        return self._objective(
+            float(comms[index]), self._move_steps(label, strategy)
+        )
 
     def accept(self) -> None:
         """Adopt the last proposed move as the current state."""

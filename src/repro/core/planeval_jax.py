@@ -212,11 +212,19 @@ class JaxPlanEvaluator:
         if not demands:
             return np.zeros(0)
         idx, val = self.pack(demands)
-        if not self.ev.n_links:
-            return np.zeros(len(demands))
-        return np.asarray(
-            self._batched(idx, val, self.ev.caps), dtype=np.float64
-        )
+        if self.ev.n_links:
+            times = np.asarray(
+                self._batched(idx, val, self.ev.caps), dtype=np.float64
+            )
+        else:
+            times = np.zeros(len(demands))
+        if self.hw.link_latency:
+            from .demand import demand_steps
+
+            times = times + self.hw.link_latency * np.asarray(
+                [demand_steps(d) for d in demands]
+            )
+        return times
 
     def comm_time(self, demand) -> float:
         """Single-demand comm time through the batched kernel."""
@@ -253,7 +261,9 @@ def jax_plan_evaluator(topo, hw: HardwareSpec) -> JaxPlanEvaluator:
 # ---------------------------------------------------------------------------
 
 
-def strategy_pool(job, n: int, size: int, seed: int, init=None) -> list:
+def strategy_pool(
+    job, n: int, size: int, seed: int, init=None, schedules=None
+) -> list:
     """A deterministic pool of ``size`` candidate strategies for one job.
 
     Index 0 is the chain's start state (``init`` or the cold default); the
@@ -261,7 +271,10 @@ def strategy_pool(job, n: int, size: int, seed: int, init=None) -> list:
     (:func:`~repro.core.strategy_search._propose`), deduplicated.  When the
     reachable space is smaller than ``size`` the pool is padded by cycling
     (duplicate entries are harmless: a move onto a duplicate prices
-    identically to its twin).
+    identically to its twin).  ``schedules`` (a tuple of collective
+    schedule names) widens the walk with schedule flips exactly as in the
+    NumPy proposal kernel; ``None`` / single-entry keeps the walk (and its
+    RNG stream) byte-identical to the pre-schedule pool.
     """
     from .strategy_search import _propose, default_strategy
 
@@ -273,7 +286,7 @@ def strategy_pool(job, n: int, size: int, seed: int, init=None) -> list:
     seen = {current}
     tries = 0
     while len(pool) < size and tries < 64 * size:
-        cand = _propose(current, job, n, rng)
+        cand = _propose(current, job, n, rng, schedules=schedules)
         tries += 1
         if cand not in seen:
             seen.add(cand)
@@ -341,6 +354,8 @@ class ChainKernel:
         weights: np.ndarray,  # (T,) tenant weights
         overlap: float = 0.0,
         objective: str = "union",
+        steps: np.ndarray | None = None,  # (T, S) latency rounds per entry
+        alpha: float = 0.0,  # per-round link latency (hw.link_latency)
     ):
         jax = _require_jax()
         jnp = jax.numpy
@@ -355,11 +370,21 @@ class ChainKernel:
         w_d = jnp.asarray(weights, dtype=jnp.float64)
         total_w = float(np.sum(weights))
         t_arange = jnp.arange(T)
+        alpha = float(alpha)
+        steps_d = (
+            jnp.asarray(steps, dtype=jnp.float64)
+            if steps is not None and alpha
+            else None
+        )
 
         def _objective(a):
             rows = V_d[t_arange, a]  # (T, L)
             if objective == "union":
                 comm = jnp.max(rows.sum(axis=0) / caps_d)
+                if steps_d is not None:
+                    # Union latency rounds = the worst tenant's rounds
+                    # (remap/union preserve group sizes and pinned steps).
+                    comm = comm + alpha * jnp.max(steps_d[t_arange, a])
                 comm_t = jnp.full((T,), comm)
             else:
                 active = rows > 0.0
@@ -373,6 +398,8 @@ class ChainKernel:
                     0.0,
                 )
                 comm_t = jnp.max(per, axis=1)
+                if steps_d is not None:
+                    comm_t = comm_t + alpha * steps_d[t_arange, a]
             hidden = jnp.minimum(comm_t * overlap, comps_d)
             iters_t = comps_d + comm_t - hidden
             return jnp.sum(w_d * iters_t) / total_w
@@ -439,12 +466,17 @@ def _objective_reference(
     overlap: float,
     objective: str,
     a: np.ndarray,
+    steps: np.ndarray | None = None,
+    alpha: float = 0.0,
 ) -> float:
     """NumPy mirror of :class:`ChainKernel`'s on-device objective."""
     T = V.shape[0]
     rows = V[np.arange(T), a]
     if objective == "union":
-        comm_t = np.full(T, np.max(rows.sum(axis=0) / caps))
+        comm = np.max(rows.sum(axis=0) / caps)
+        if steps is not None and alpha:
+            comm = comm + alpha * np.max(steps[np.arange(T), a])
+        comm_t = np.full(T, comm)
     else:
         active = rows > 0.0
         active_w = np.where(active, weights[:, None], 0.0).sum(axis=0)
@@ -454,6 +486,8 @@ def _objective_reference(
             0.0,
         )
         comm_t = per.max(axis=1)
+        if steps is not None and alpha:
+            comm_t = comm_t + alpha * steps[np.arange(T), a]
     hidden = np.minimum(comm_t * overlap, comps)
     iters_t = comps + comm_t - hidden
     return float(np.sum(weights * iters_t) / np.sum(weights))
@@ -470,6 +504,7 @@ def jax_mcmc_search(
     init=None,
     chains: int = 1,
     pool_size: int = 64,
+    schedules=None,
 ):
     """Batched single-job strategy search — the ``backend="jax"`` body of
     :func:`~repro.core.strategy_search.mcmc_search`.
@@ -479,14 +514,18 @@ def jax_mcmc_search(
     dispatch (:class:`ChainKernel` with one tenant).  The winning
     strategy's reported ``iter_time`` is re-priced on the NumPy path, so
     result values carry no device float lineage; ``history`` is the best
-    chain's on-device objective trace.
+    chain's on-device objective trace.  ``schedules`` widens the pool with
+    collective-schedule flips; with ``hw.link_latency`` set the chains
+    anneal on the same (α, β) objective the NumPy path prices.
     """
+    from .demand import demand_steps
     from .netsim import compute_time, iteration_time
     from .strategy_search import SearchResult
 
     n = topo.n
     pool = strategy_pool(
-        job, n, pool_size, seed + _POOL_SEED_OFFSET, init=init
+        job, n, pool_size, seed + _POOL_SEED_OFFSET, init=init,
+        schedules=schedules,
     )
     ev = plan_evaluator(topo, hw)
     demands = [s.demand(job, n) for s in pool]
@@ -498,8 +537,14 @@ def jax_mcmc_search(
         V[0, s, : v.size] = v
     caps = ev.caps if L else np.ones(1)
     comp = compute_time(job.flops_per_sample * job.batch_per_gpu * n, n, hw)
+    steps = (
+        np.asarray([[demand_steps(d) for d in demands]], dtype=np.float64)
+        if hw.link_latency
+        else None
+    )
     kernel = ChainKernel(
-        V, caps, np.array([comp]), np.array([1.0]), overlap=overlap
+        V, caps, np.array([comp]), np.array([1.0]), overlap=overlap,
+        steps=steps, alpha=hw.link_latency,
     )
     t_idx, s_idx, u = draw_proposal_streams(seed, chains, iters, 1, S)
     best_a, best_obj, hist = kernel.run(
@@ -530,6 +575,7 @@ def jax_mcmc_search_jobset(
     pool_size: int = 64,
     objective: str = "union",
     demand_cache=None,
+    schedules=None,
 ):
     """Batched multi-tenant strategy search — the ``backend="jax"`` body of
     :func:`~repro.core.strategy_search.mcmc_search_jobset`.
@@ -566,7 +612,8 @@ def jax_mcmc_search_jobset(
     for i, t in enumerate(tenants):
         start = init.get(t.label) or default_strategy(t.spec)
         pools.append(strategy_pool(
-            t.spec, t.k, pool_size, seed + _POOL_SEED_OFFSET + i, init=start
+            t.spec, t.k, pool_size, seed + _POOL_SEED_OFFSET + i,
+            init=start, schedules=schedules,
         ))
     # Price every pool entry first (the link universe grows as new MP
     # routes are compiled), then pad all vectors to the final width.
@@ -585,8 +632,18 @@ def jax_mcmc_search_jobset(
         compute_time(t.flops_per_iteration, t.k, hw) for t in tenants
     ])
     weights = np.array([t.weight for t in tenants], dtype=np.float64)
+    steps = None
+    if hw.link_latency:
+        # Per-(tenant, pool entry) latency rounds of the tenant's *local*
+        # embedded demand — union rounds are the max over tenants, which
+        # the kernel's union objective takes per chain state.
+        steps = np.asarray([
+            [jse._steps(t.label, s) for s in pools[i]]
+            for i, t in enumerate(tenants)
+        ], dtype=np.float64)
     kernel = ChainKernel(
-        V, caps, comps, weights, overlap=overlap, objective=objective
+        V, caps, comps, weights, overlap=overlap, objective=objective,
+        steps=steps, alpha=hw.link_latency,
     )
     t_idx, s_idx, u = draw_proposal_streams(seed, chains, iters, T, S)
     best_a, best_obj, hist = kernel.run(
@@ -626,6 +683,8 @@ def run_chains_reference(
     t_idx: np.ndarray,
     s_idx: np.ndarray,
     u: np.ndarray,
+    steps: np.ndarray | None = None,
+    alpha: float = 0.0,
 ):
     """Sequential NumPy replay of the batched chains: same pre-drawn
     streams, same annealing rule, one chain at a time — the equivalence
@@ -638,7 +697,8 @@ def run_chains_reference(
     for c in range(K):
         a = np.array(init_a, dtype=np.int64)
         cur = _objective_reference(
-            V, caps, comps, weights, overlap, objective, a
+            V, caps, comps, weights, overlap, objective, a,
+            steps=steps, alpha=alpha,
         )
         best_a, best = a.copy(), cur
         hists[c, 0] = cur
@@ -646,7 +706,8 @@ def run_chains_reference(
             cand_a = a.copy()
             cand_a[t_idx[c, i]] = s_idx[c, i]
             cand = _objective_reference(
-                V, caps, comps, weights, overlap, objective, cand_a
+                V, caps, comps, weights, overlap, objective, cand_a,
+                steps=steps, alpha=alpha,
             )
             temp = temperatures[c] * max(cur, 1e-12)
             if cand <= cur or u[c, i] < math.exp(-(cand - cur) / temp):

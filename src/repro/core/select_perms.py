@@ -65,6 +65,41 @@ def select_permutations(perm_set: PermutationSet, d_k: int) -> list[RingPermutat
     return [by_stride[p] for p in selected]
 
 
+def schedule_strides(
+    n: int, family: str, d: int | None = None
+) -> tuple[int, ...]:
+    """Stride set for one collective-schedule family on a group of ``n``
+    (the TotientPerms extension backing :mod:`repro.core.schedules`).
+
+    * ``"ring"`` / ``"multi_tree"`` — Algorithm 3's geometric selection over
+      the coprime strides (``d`` rings, or ``d`` tree-seeding ring orders).
+    * ``"recursive_hd"`` — the power-of-two exchange distances
+      ``1, 2, 4, ... < p2`` where ``p2`` is the largest power of two
+      ``<= n`` (the halving-doubling pairing offsets, not modular rings).
+
+    ``d=None`` keeps the family's natural length.
+    """
+    if n < 2:
+        return ()
+    if family in ("ring", "multi_tree"):
+        from .totient import totient_perms
+
+        perms = totient_perms(tuple(range(n)))
+        want = len(perms.perms) if d is None else d
+        return tuple(r.p for r in select_permutations(perms, want))
+    if family == "recursive_hd":
+        out: list[int] = []
+        s = 1
+        while s * 2 <= n:
+            out.append(s)
+            s *= 2
+        return tuple(out if d is None else out[:d])
+    raise ValueError(
+        f"unknown schedule family {family!r}: "
+        "expected 'ring', 'recursive_hd' or 'multi_tree'"
+    )
+
+
 def coin_change_diameter(n: int, strides: list[int]) -> int:
     """Exact diameter of the union of the stride rings under directed
     coin-change routing (BFS over Z_n with the strides as +coins).

@@ -20,11 +20,11 @@ from __future__ import annotations
 
 import math
 import random
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
-from .demand import TrafficDemand
+from .demand import TrafficDemand, demand_steps
 from .netsim import (
     HardwareSpec,
     compute_time,
@@ -49,15 +49,23 @@ _TIE_RTOL = 1e-12
 
 @dataclass(frozen=True)
 class Strategy:
-    """A point in the Comp x Comm plane."""
+    """A point in the Comp x Comm plane.
+
+    ``schedule`` is the collective-schedule axis (ROADMAP item 2): the
+    AllReduce schedule the strategy's demand compiles under
+    (:mod:`repro.core.schedules` — ``"ring"`` keeps mutable ring demand,
+    byte-identical to the pre-schedule search space)."""
 
     mode: str  # "dp" | "hybrid"
     table_hosts: tuple[int, ...] = ()
     ep_group_size: int = 0
+    schedule: str = "ring"
 
     def demand(self, job: JobSpec, n: int) -> TrafficDemand:
         hosts = self.table_hosts if self.mode == "hybrid" else None
-        return job_demand(job, n, table_hosts=hosts, ep_group_size=self.ep_group_size)
+        return job_demand(job, n, table_hosts=hosts,
+                          ep_group_size=self.ep_group_size,
+                          schedule=self.schedule)
 
 
 def default_strategy(job: JobSpec) -> Strategy:
@@ -93,21 +101,37 @@ def _evaluate(
     return iteration_time(comm, comp, overlap=overlap), demand
 
 
-def _propose(strategy: Strategy, job: JobSpec, n: int, rng: random.Random) -> Strategy:
+def _propose(
+    strategy: Strategy,
+    job: JobSpec,
+    n: int,
+    rng: random.Random,
+    schedules: tuple[str, ...] | None = None,
+) -> Strategy:
     moves = ["toggle_mode"]
     if job.n_tables:
         moves += ["move_host", "add_host", "drop_host"]
     if job.n_experts:
         moves += ["ep_size"]
+    if schedules and len(schedules) > 1:
+        # The collective-schedule axis joins the move set only when the
+        # caller opted into searching it — a None/singleton ``schedules``
+        # consumes the RNG exactly like the pre-schedule proposal kernel.
+        moves += ["schedule"]
     move = rng.choice(moves)
 
+    if move == "schedule":
+        options = [s for s in schedules if s != strategy.schedule]
+        return replace(strategy, schedule=rng.choice(options))
     if move == "toggle_mode":
         if strategy.mode == "dp" and job.n_tables:
             k = max(1, min(job.n_tables, n // 4))
             hosts = tuple(sorted(rng.sample(range(n), k)))
             return Strategy(mode="hybrid", table_hosts=hosts,
-                            ep_group_size=strategy.ep_group_size)
-        return Strategy(mode="dp", ep_group_size=strategy.ep_group_size)
+                            ep_group_size=strategy.ep_group_size,
+                            schedule=strategy.schedule)
+        return Strategy(mode="dp", ep_group_size=strategy.ep_group_size,
+                        schedule=strategy.schedule)
 
     hosts = list(strategy.table_hosts) or [rng.randrange(n)]
     if move == "move_host":
@@ -123,11 +147,26 @@ def _propose(strategy: Strategy, job: JobSpec, n: int, rng: random.Random) -> St
             return Strategy(
                 mode=strategy.mode, table_hosts=strategy.table_hosts,
                 ep_group_size=rng.choice(sizes),
+                schedule=strategy.schedule,
             )
     return Strategy(
         mode="hybrid", table_hosts=tuple(sorted(set(hosts))),
         ep_group_size=strategy.ep_group_size,
+        schedule=strategy.schedule,
     )
+
+
+def _check_schedules(schedules: tuple[str, ...] | None) -> tuple[str, ...] | None:
+    """Validate a searchable-schedule tuple (None = ring-only, the
+    byte-identical default)."""
+    if schedules is None:
+        return None
+    from .schedules import get_schedule
+
+    schedules = tuple(schedules)
+    for s in schedules:
+        get_schedule(s)
+    return schedules
 
 
 def mcmc_search(
@@ -144,8 +183,15 @@ def mcmc_search(
     backend: str = "numpy",
     chains: int = 1,
     pool_size: int = 64,
+    schedules: tuple[str, ...] | None = None,
 ) -> SearchResult:
     """Search the Comp x Comm plane for a fixed topology (§4.1).
+
+    ``schedules`` opens the collective-schedule axis: a tuple of schedule
+    names (:data:`repro.core.schedules.SCHEDULES`) the proposal kernel may
+    flip between alongside the strategy moves.  ``None`` (default) or a
+    singleton keeps the pre-schedule move set — and the exact RNG stream —
+    so fixed-seed results stay byte-identical to HEAD.
 
     ``compiled=True`` (default) prices candidates on the compiled evaluator
     (:func:`repro.core.planeval.plan_evaluator`): demands and objective
@@ -173,13 +219,14 @@ def mcmc_search(
         raise ValueError(f"unknown mcmc_search backend {backend!r}")
     if chains < 1:
         raise ValueError("chains must be >= 1")
+    schedules = _check_schedules(schedules)
     if backend == "jax":
         from .planeval_jax import jax_mcmc_search
 
         return jax_mcmc_search(
             job, topo, hw, iters=iters, temperature=temperature,
             overlap=overlap, seed=seed, init=init, chains=chains,
-            pool_size=pool_size,
+            pool_size=pool_size, schedules=schedules,
         )
     if chains != 1:
         raise ValueError("chains > 1 needs backend='jax'")
@@ -227,7 +274,7 @@ def mcmc_search(
     for it in range(iters):
         if proposals_per_step > 1:
             cands = [
-                _propose(current, job, n, rng)
+                _propose(current, job, n, rng, schedules=schedules)
                 for _ in range(proposals_per_step)
             ]
             loads_list = [
@@ -235,6 +282,12 @@ def mcmc_search(
                 for c in cands
             ]
             comms = ev.comm_times_from_loads(loads_list)
+            if hw.link_latency:
+                # Same ``worst + α * steps`` expression as the reference
+                # (the load-vector path prices only the β term).
+                comms = comms + hw.link_latency * np.asarray(
+                    [demand_steps(demand_for(c)) for c in cands]
+                )
             times = [
                 iteration_time(float(c), comp, overlap=overlap) for c in comms
             ]
@@ -242,7 +295,7 @@ def mcmc_search(
             cand, cand_time, cand_loads = cands[j], times[j], loads_list[j]
             cand_demand = demand_for(cand)
         else:
-            cand = _propose(current, job, n, rng)
+            cand = _propose(current, job, n, rng, schedules=schedules)
             cand_loads = None
             if compiled:
                 cand_demand = demand_for(cand)
@@ -319,22 +372,30 @@ def tenant_comm_times(
     n_links = ev.n_links
     out: dict[str, float] = {}
     if not n_links:
-        return {t.label: 0.0 for t in jobset.tenants}
-    mat = np.zeros((len(vecs), n_links), dtype=np.float64)
-    for row, v in zip(mat, vecs):
-        row[: v.size] = v
-    weights = np.asarray([t.weight for t in jobset.tenants])
-    active = mat > 0
-    active_w = active.T @ weights  # per-link sum of contending weights
-    caps = ev.caps
-    for i, t in enumerate(jobset.tenants):
-        mask = active[i]
-        if not mask.any():
-            out[t.label] = 0.0
-            continue
-        out[t.label] = float(np.max(
-            mat[i, mask] * active_w[mask] / (weights[i] * caps[mask])
-        ))
+        out = {t.label: 0.0 for t in jobset.tenants}
+    else:
+        mat = np.zeros((len(vecs), n_links), dtype=np.float64)
+        for row, v in zip(mat, vecs):
+            row[: v.size] = v
+        weights = np.asarray([t.weight for t in jobset.tenants])
+        active = mat > 0
+        active_w = active.T @ weights  # per-link sum of contending weights
+        caps = ev.caps
+        for i, t in enumerate(jobset.tenants):
+            mask = active[i]
+            if not mask.any():
+                out[t.label] = 0.0
+                continue
+            out[t.label] = float(np.max(
+                mat[i, mask] * active_w[mask] / (weights[i] * caps[mask])
+            ))
+    if hw.link_latency:
+        # α term: each tenant pays its *own* schedule's serial rounds.
+        for t in jobset.tenants:
+            out[t.label] = (
+                out[t.label]
+                + hw.link_latency * demand_steps(demands[t.label])
+            )
     return out
 
 
@@ -437,6 +498,7 @@ def _mcmc_jobset_decomposed(
     compiled: bool,
     proposals_per_step: int,
     demand_cache: dict,
+    schedules: tuple[str, ...] | None = None,
 ) -> JobSetSearchResult:
     """The ``objective="decomposed"`` annealing loop (bugfix for the PR-5
     gap where heavy tenants could not shape the union-annealed plan).
@@ -478,7 +540,9 @@ def _mcmc_jobset_decomposed(
             for _k in range(proposals_per_step):
                 t = jobset.tenants[rng.randrange(len(jobset.tenants))]
                 cand = dict(current)
-                cand[t.label] = _propose(current[t.label], t.spec, t.k, rng)
+                cand[t.label] = _propose(
+                    current[t.label], t.spec, t.k, rng, schedules=schedules
+                )
                 cands.append(cand)
             evals = [_eval(c) for c in cands]
             j = int(np.argmin([e[0] for e in evals]))
@@ -486,7 +550,9 @@ def _mcmc_jobset_decomposed(
         else:
             t = jobset.tenants[rng.randrange(len(jobset.tenants))]
             cand = dict(current)
-            cand[t.label] = _propose(current[t.label], t.spec, t.k, rng)
+            cand[t.label] = _propose(
+                current[t.label], t.spec, t.k, rng, schedules=schedules
+            )
             cand_obj, cand_per_job = _eval(cand)
         temp = temperature * max(cur_obj, 1e-12)
         if cand_obj <= cur_obj or rng.random() < math.exp(
@@ -521,8 +587,14 @@ def mcmc_search_jobset(
     backend: str = "numpy",
     chains: int = 1,
     pool_size: int = 64,
+    schedules: tuple[str, ...] | None = None,
 ) -> JobSetSearchResult:
     """Joint Comp x Comm search for a shared cluster (fixed topology).
+
+    ``schedules`` opens the per-tenant collective-schedule axis (see
+    :func:`mcmc_search`): proposal moves may flip a tenant's AllReduce
+    schedule alongside its strategy moves.  ``None``/singleton keeps the
+    pre-schedule move set and RNG stream byte-identical to HEAD.
 
     Each MCMC move picks one tenant and proposes a per-job move in its local
     index space (:func:`_propose` — table-host shuffles, EP-group resizes);
@@ -564,6 +636,7 @@ def mcmc_search_jobset(
         raise ValueError(f"unknown mcmc_search_jobset backend {backend!r}")
     if chains < 1:
         raise ValueError("chains must be >= 1")
+    schedules = _check_schedules(schedules)
     if backend == "jax":
         from .planeval_jax import jax_mcmc_search_jobset
 
@@ -571,7 +644,7 @@ def mcmc_search_jobset(
             jobset, topo, hw, iters=iters, temperature=temperature,
             overlap=overlap, seed=seed, init=init, chains=chains,
             pool_size=pool_size, objective=objective,
-            demand_cache=demand_cache,
+            demand_cache=demand_cache, schedules=schedules,
         )
     if chains != 1:
         raise ValueError("chains > 1 needs backend='jax'")
@@ -585,6 +658,7 @@ def mcmc_search_jobset(
         return _mcmc_jobset_decomposed(
             jobset, topo, hw, iters, temperature, overlap, seed, init,
             compiled, proposals_per_step, demand_cache,
+            schedules=schedules,
         )
     rng = random.Random(seed)
     current: dict[str, Strategy] = {
@@ -624,9 +698,11 @@ def mcmc_search_jobset(
                 moves = []
                 for _k in range(proposals_per_step):
                     t = jobset.tenants[rng.randrange(len(jobset.tenants))]
-                    moves.append(
-                        (t.label, _propose(current[t.label], t.spec, t.k, rng))
-                    )
+                    moves.append((
+                        t.label,
+                        _propose(current[t.label], t.spec, t.k, rng,
+                                 schedules=schedules),
+                    ))
                 objs = jse.propose_batch(moves)
                 j = int(np.argmin(objs))
                 label, cand_s = moves[j]
@@ -634,7 +710,8 @@ def mcmc_search_jobset(
             else:
                 t = jobset.tenants[rng.randrange(len(jobset.tenants))]
                 label = t.label
-                cand_s = _propose(current[label], t.spec, t.k, rng)
+                cand_s = _propose(current[label], t.spec, t.k, rng,
+                                  schedules=schedules)
                 cand_obj, cand_per_job = jse.propose(label, cand_s)
             better = cand_obj <= cur_obj
             if (
@@ -687,7 +764,8 @@ def mcmc_search_jobset(
     for _ in range(iters):
         t = jobset.tenants[rng.randrange(len(jobset.tenants))]
         cand = dict(current)
-        cand[t.label] = _propose(current[t.label], t.spec, t.k, rng)
+        cand[t.label] = _propose(current[t.label], t.spec, t.k, rng,
+                                 schedules=schedules)
         cand_obj, cand_union, cand_per_job = evaluate_jobset(
             cand, jobset, topo, hw, overlap, _demand_cache=demand_cache
         )

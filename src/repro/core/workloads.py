@@ -281,12 +281,24 @@ def job_demand(
     n: int,
     table_hosts: Sequence[int] | None = None,
     ep_group_size: int = 0,
+    schedule: str = "ring",
 ) -> TrafficDemand:
     """Translate (job, parallelization strategy) -> per-iteration demand.
 
     ``table_hosts`` None => pure data parallelism (embedding tables, if any,
     are replicated and join the AllReduce — the paper's Fig. 1a 44 GB case).
+    ``schedule`` picks the collective schedule the AllReduce groups compile
+    under (:mod:`repro.core.schedules`); ``"ring"`` is the byte-identical
+    default (groups stay mutable ring demand).
     """
+    if schedule != "ring":
+        from .schedules import apply_schedule
+
+        return apply_schedule(
+            job_demand(job, n, table_hosts=table_hosts,
+                       ep_group_size=ep_group_size),
+            schedule,
+        )
     if job.n_experts and ep_group_size > 1:
         # Clamp to the job's node count (a tenant's shard may be smaller
         # than the strategy's preferred EP group).

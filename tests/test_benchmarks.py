@@ -88,3 +88,22 @@ def test_planner_bench_smoke(tmp_path, monkeypatch):
     assert by_name["planner_replan"]["identical"]
     assert (tmp_path / "experiments" / "bench"
             / "BENCH_planner.json").exists()
+
+
+def test_collectives_sched_bench_smoke(tmp_path, monkeypatch):
+    """Searched collective schedules must beat ring-only on the
+    latency-dominated arms, keep ring on the bandwidth-dominated arm, and
+    price bit-identically on the compiled and reference paths."""
+    from benchmarks import bench_collectives_sched
+
+    monkeypatch.chdir(tmp_path)  # perf record lands in a scratch dir
+    rows = bench_collectives_sched.run(smoke=True)
+    by_name = {r["name"].rsplit("_n", 1)[0]: r for r in rows}
+    assert by_name["sched_small_bert"]["comm_win"] >= 1.2
+    assert by_name["sched_small_bert"]["schedule"] != "ring"
+    assert by_name["sched_jobset"]["comm_win"] >= 1.2
+    assert by_name["sched_jobset"]["flipped"]
+    assert by_name["sched_dlrm_bandwidth"]["schedule"] == "ring"
+    assert max(r["max_rel_err"] for r in rows) == 0.0
+    assert (tmp_path / "experiments" / "bench"
+            / "BENCH_collectives_sched.json").exists()

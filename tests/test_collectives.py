@@ -118,6 +118,85 @@ print("PASS")
     assert "PASS" in out
 
 
+def test_recursive_hd_allreduce_matches_psum():
+    """Halving-doubling AllReduce == lax.psum, exact on integers, plus the
+    odd-size ValueError (the runtime kernel keeps the strict power-of-two
+    form the demand compiler folds around)."""
+    out = run_with_devices(
+        """
+import jax, numpy as np
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+try:
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+from repro.core.collectives import recursive_hd_all_reduce
+
+mesh = jax.make_mesh((8,), ("x",))
+x = jnp.arange(8 * 13, dtype=jnp.float32).reshape(8, 13)
+ref = jax.jit(shard_map(lambda v: jax.lax.psum(v, "x"), mesh=mesh,
+                        in_specs=P("x"), out_specs=P("x")))(x)
+out = jax.jit(shard_map(lambda v: recursive_hd_all_reduce(v, "x"),
+                        mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
+assert np.allclose(out, ref)
+
+xi = jnp.arange(8 * 11, dtype=jnp.int32).reshape(8, 11)
+outi = jax.jit(shard_map(lambda v: recursive_hd_all_reduce(v, "x"),
+                         mesh=mesh, in_specs=P("x"), out_specs=P("x")))(xi)
+assert np.array_equal(np.asarray(outi)[0], np.asarray(xi).sum(0))
+
+# Odd-size groups are a host-visible ValueError, not silent corruption.
+mesh6 = jax.make_mesh((6,), ("y",), devices=jax.devices()[:6])
+x6 = jnp.arange(6 * 4, dtype=jnp.float32).reshape(6, 4)
+try:
+    jax.jit(shard_map(lambda v: recursive_hd_all_reduce(v, "y"),
+                      mesh=mesh6, in_specs=P("y"), out_specs=P("y")))(x6)
+except ValueError as e:
+    assert "power-of-two" in str(e)
+else:
+    raise SystemExit("expected ValueError for group of 6")
+print("PASS")
+""",
+        n_devices=8,
+    )
+    assert "PASS" in out
+
+
+def test_multi_tree_allreduce_matches_psum():
+    """Multi-tree AllReduce == lax.psum for 1/2/3-tree splits, exact on
+    integers (the runtime form of the ``multi_tree`` schedule)."""
+    out = run_with_devices(
+        """
+import jax, numpy as np
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+try:
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+from repro.core.collectives import multi_tree_all_reduce
+
+mesh = jax.make_mesh((8,), ("x",))
+x = jnp.arange(8 * 13, dtype=jnp.float32).reshape(8, 13)
+ref = jax.jit(shard_map(lambda v: jax.lax.psum(v, "x"), mesh=mesh,
+                        in_specs=P("x"), out_specs=P("x")))(x)
+for strides in [(1,), (1, 3), (1, 3, 5)]:
+    fn = (lambda ss: lambda v: multi_tree_all_reduce(v, "x", ss))(strides)
+    out = jax.jit(shard_map(fn, mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
+    assert np.allclose(out, ref), strides
+
+xi = jnp.arange(8 * 11, dtype=jnp.int32).reshape(8, 11)
+outi = jax.jit(shard_map(lambda v: multi_tree_all_reduce(v, "x", (1, 3)),
+                         mesh=mesh, in_specs=P("x"), out_specs=P("x")))(xi)
+assert np.array_equal(np.asarray(outi)[0], np.asarray(xi).sum(0))
+print("PASS")
+""",
+        n_devices=8,
+    )
+    assert "PASS" in out
+
+
 def test_device_order_mesh():
     out = run_with_devices(
         """

@@ -1,0 +1,158 @@
+"""Property tests for the collective-schedule demand compilers
+(repro.core.schedules): wire-byte conservation, degree-budget respect,
+and byte-identity of the default ``ring`` schedule.
+
+Runs under real hypothesis when installed, else the seeded shim
+(tests/_hypothesis_compat.py) sweeps a deterministic example batch.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.demand import AllReduceGroup, TrafficDemand, demand_steps
+from repro.core.schedules import (
+    SCHEDULES,
+    apply_schedule,
+    get_schedule,
+)
+from repro.core.topology_finder import topology_finder
+from repro.core.workloads import BERT, DLRM, MOE_16E, job_demand
+
+COMPILED = [s for s in SCHEDULES if s != "ring"]
+
+
+# ---------------------------------------------------------------------------
+# Conservation: every schedule moves exactly 2 (k-1) M wire bytes
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    k=st.integers(min_value=2, max_value=33),
+    name=st.sampled_from(COMPILED),
+    nbytes=st.floats(min_value=1.0, max_value=1e9),
+)
+def test_pair_loads_conserve_wire_bytes(k, name, nbytes):
+    members = tuple(range(100, 100 + k))  # arbitrary non-contiguous labels
+    loads = get_schedule(name).pair_loads(members, nbytes)
+    total = sum(loads.values())
+    assert total == pytest.approx(2.0 * (k - 1) * nbytes, rel=1e-9)
+    for (a, b), x in loads.items():
+        assert a != b
+        assert a in members and b in members
+        assert x > 0.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(k=st.integers(min_value=2, max_value=64))
+def test_steps_never_exceed_ring(k):
+    ring_steps = get_schedule("ring").steps(k)
+    assert ring_steps == 2.0 * (k - 1)
+    for name in COMPILED:
+        s = get_schedule(name).steps(k)
+        assert 0.0 < s <= ring_steps
+        # Log-depth beats linear once the group is big enough (k=2 ties;
+        # k=3 halving-doubling also ties: a 2-core plus the fold's 2 rounds).
+        if k > 3:
+            assert s < ring_steps
+
+
+# ---------------------------------------------------------------------------
+# apply_schedule: totals bookkeeping + steps semantics on random demands
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    name=st.sampled_from(COMPILED),
+)
+def test_apply_schedule_bookkeeping(seed, name):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 17))
+    d = TrafficDemand(n=n)
+    d.mp[:] = rng.uniform(0.0, 1e6, size=(n, n))
+    np.fill_diagonal(d.mp, 0.0)
+    n_groups = int(rng.integers(1, 4))
+    for _ in range(n_groups):
+        k = int(rng.integers(1, n + 1))
+        members = tuple(int(v) for v in rng.choice(n, size=k, replace=False))
+        d.allreduce.append(
+            AllReduceGroup(members=members, nbytes=float(rng.uniform(0.0, 1e8)))
+        )
+    sched = get_schedule(name)
+    out = apply_schedule(d, name)
+    assert out is not d
+    active = [g for g in d.allreduce if g.nbytes > 0.0 and len(g.members) > 1]
+    expect_mp = d.sum_mp + sum(
+        2.0 * (len(g.members) - 1) * g.nbytes for g in active
+    )
+    assert out.sum_mp == pytest.approx(expect_mp, rel=1e-9)
+    # Compiled groups keep their members (connectivity ring) at zero bytes.
+    assert [g.members for g in out.allreduce] == [
+        g.members for g in d.allreduce
+    ]
+    for g_in, g_out in zip(d.allreduce, out.allreduce):
+        if g_in.nbytes > 0.0 and len(g_in.members) > 1:
+            assert g_out.nbytes == 0.0
+        else:
+            assert g_out.nbytes == g_in.nbytes
+    # Latency rounds: the compiled schedule's steps, never worse than ring.
+    if active:
+        assert out.steps == max(
+            float(sched.steps(len(g.members))) for g in active
+        )
+    assert demand_steps(out) <= demand_steps(d)
+    # The input demand is untouched.
+    assert d.steps == 0.0
+    assert all(g.nbytes >= 0.0 for g in d.allreduce)
+
+
+# ---------------------------------------------------------------------------
+# Degree budgets: TopologyFinder still packs compiled demands feasibly
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    name=st.sampled_from(list(SCHEDULES)),
+    degree=st.integers(min_value=3, max_value=6),
+)
+def test_topology_respects_degree_budget(seed, name, degree):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 13))
+    d = TrafficDemand(n=n)
+    d.allreduce.append(
+        AllReduceGroup(members=tuple(range(n)), nbytes=float(rng.uniform(1e6, 1e9)))
+    )
+    k = int(rng.integers(2, n + 1))
+    sub = tuple(int(v) for v in rng.choice(n, size=k, replace=False))
+    d.allreduce.append(AllReduceGroup(members=sub, nbytes=float(rng.uniform(0, 1e8))))
+    topo = topology_finder(apply_schedule(d, name), degree=degree)
+    assert max(topo.out_degrees()) <= degree
+
+
+# ---------------------------------------------------------------------------
+# Ring schedule: byte-identical to the pre-schedule job_demand output
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    spec=st.sampled_from([BERT, DLRM, MOE_16E]),
+    n=st.integers(min_value=4, max_value=16),
+)
+def test_ring_schedule_is_byte_identical(spec, n):
+    base = job_demand(spec, n)
+    ring = job_demand(spec, n, schedule="ring")
+    assert np.array_equal(base.mp, ring.mp)
+    assert base.allreduce == ring.allreduce
+    assert base.steps == ring.steps == 0.0
+    assert demand_steps(base) == demand_steps(ring)
+
+
+def test_apply_schedule_ring_is_identity_object():
+    d = job_demand(DLRM, 8, table_hosts=(0, 1))
+    assert apply_schedule(d, "ring") is d

@@ -1,0 +1,320 @@
+"""Collective-schedule co-optimization: the schedule axis of the strategy
+search (repro.core.schedules threaded through mcmc_search / jobset search /
+alternating), pinned three ways:
+
+* **HEAD goldens** — with no ``schedules`` argument and ``link_latency=0``
+  every search entry point must reproduce the exact pre-schedule results
+  (fixed seeds, hardcoded values captured before the schedule axis landed).
+* **Compiled == reference** — schedule-tagged demands price bit-identically
+  on the compiled planner and the reference fluid model, healthy and
+  degraded, with the (α, β) latency term on.
+* **Error paths** — unknown schedules, non-coprime strides, degenerate
+  groups all fail loudly.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.alternating import (
+    alternating_optimize,
+    co_optimize_jobset,
+    initial_topology,
+)
+from repro.core.demand import demand_steps
+from repro.core.netsim import HardwareSpec, compute_time, iteration_time, reference_comm_time
+from repro.core.planeval import plan_evaluator
+from repro.core.schedules import SCHEDULES, get_schedule, validate_hd_group
+from repro.core.select_perms import schedule_strides
+from repro.core.strategy_search import (
+    Strategy,
+    default_strategy,
+    mcmc_search,
+    mcmc_search_jobset,
+)
+from repro.core.topology_finder import remove_pair, topology_finder
+from repro.core.workloads import (
+    BERT,
+    DLRM,
+    MOE_16E,
+    JobSet,
+    TenantJob,
+    job_demand,
+)
+
+HW = HardwareSpec(link_bandwidth=12.5e9, degree=4)
+# α > 0 turns the latency term on; big enough to matter at these scales.
+HW_LAT = HardwareSpec(link_bandwidth=12.5e9, degree=4, link_latency=2e-5)
+ALL = ("ring", "recursive_hd", "multi_tree")
+
+
+def _jobset12() -> JobSet:
+    return JobSet(n=12, tenants=[
+        TenantJob(spec=DLRM, servers=tuple(range(0, 4))),
+        TenantJob(spec=BERT, servers=tuple(range(4, 8))),
+        TenantJob(spec=MOE_16E, servers=tuple(range(8, 12))),
+    ])
+
+
+# ---------------------------------------------------------------------------
+# HEAD goldens: the ring default is byte-identical to the pre-schedule tree
+# ---------------------------------------------------------------------------
+
+
+def test_golden_mcmc_search_ring_default():
+    res = mcmc_search(DLRM, initial_topology(16, 4), HW, iters=60, seed=0)
+    assert res.strategy == Strategy(
+        mode="hybrid", table_hosts=(2, 3, 4, 6, 7, 14, 15), ep_group_size=0
+    )
+    assert res.strategy.schedule == "ring"
+    assert res.iter_time == 0.04776528704703296
+
+
+def test_golden_alternating_optimize_ring_default():
+    res = alternating_optimize(DLRM, 16, HW, rounds=2, mcmc_iters=40, seed=0)
+    assert res.strategy == Strategy(
+        mode="hybrid", table_hosts=(2, 3, 4, 6, 7, 14, 15), ep_group_size=0
+    )
+    assert res.iter_time == float.fromhex("0x1.874b113808acdp-5")
+
+
+def test_golden_mcmc_search_jobset_ring_default():
+    res = mcmc_search_jobset(
+        _jobset12(), initial_topology(12, 4), HW, iters=40, seed=0
+    )
+    assert res.strategies == {
+        "dlrm": Strategy(mode="dp"),
+        "bert": Strategy(mode="dp"),
+        "moe16": Strategy(mode="dp", ep_group_size=2),
+    }
+    assert all(s.schedule == "ring" for s in res.strategies.values())
+    assert res.iter_time == 0.006020768047407407
+
+
+def test_golden_co_optimize_jobset_ring_default():
+    res = co_optimize_jobset(_jobset12(), HW, rounds=2, mcmc_iters=30, seed=1)
+    assert res.strategies == {
+        "dlrm": Strategy(mode="hybrid", table_hosts=(2,)),
+        "bert": Strategy(mode="dp"),
+        "moe16": Strategy(mode="dp", ep_group_size=2),
+    }
+    assert res.iter_time == float.fromhex("0x1.82292122132c0p-4")
+
+
+def test_singleton_schedules_tuple_matches_none():
+    """schedules=("ring",) adds no proposal move, so the RNG stream — and
+    every result byte — matches the default search exactly."""
+    topo = initial_topology(12, 4)
+    base = mcmc_search(DLRM, topo, HW, iters=50, seed=7)
+    same = mcmc_search(DLRM, topo, HW, iters=50, seed=7, schedules=("ring",))
+    assert same.strategy == base.strategy
+    assert same.iter_time == base.iter_time
+    assert same.history == base.history
+    js = _jobset12()
+    topo_js = initial_topology(12, 4)
+    b = mcmc_search_jobset(js, topo_js, HW, iters=30, seed=3)
+    s = mcmc_search_jobset(js, topo_js, HW, iters=30, seed=3,
+                           schedules=("ring",))
+    assert s.strategies == b.strategies
+    assert s.iter_time == b.iter_time
+    assert s.history == b.history
+
+
+# ---------------------------------------------------------------------------
+# Compiled == reference on schedule-tagged demands (healthy + degraded)
+# ---------------------------------------------------------------------------
+
+
+def _schedule_demands(n: int) -> list:
+    out = []
+    for name in ALL:
+        out.append(job_demand(BERT, n, schedule=name))
+        out.append(job_demand(MOE_16E, n, ep_group_size=4, schedule=name))
+        out.append(
+            job_demand(DLRM, n, table_hosts=(0, 3), schedule=name)
+        )
+    return out
+
+
+@pytest.mark.parametrize("degrade", [False, True])
+def test_compiled_pricing_bit_identical_with_latency(degrade):
+    n = 8
+    topo = topology_finder(job_demand(DLRM, n, table_hosts=(0, 3)), HW.degree)
+    if degrade:
+        topo = remove_pair(topo, (0, 1))
+    ev = plan_evaluator(topo, HW_LAT)
+    for d in _schedule_demands(n):
+        fast = ev.comm_time(d)
+        ref = reference_comm_time(topo, d, HW_LAT)
+        assert fast == ref  # bit-identical: max_rel_err == 0
+        assert fast > 0.0
+
+
+def test_jax_batched_pricing_matches_with_latency():
+    from repro.core.planeval_jax import JAX_EQUIV_RTOL, jax_plan_evaluator
+
+    n = 8
+    topo = topology_finder(job_demand(DLRM, n, table_hosts=(0, 3)), HW.degree)
+    jev = jax_plan_evaluator(topo, HW_LAT)
+    demands = _schedule_demands(n)
+    batch = jev.comm_times(demands)
+    ev = plan_evaluator(topo, HW_LAT)
+    single = np.asarray([ev.comm_time(d) for d in demands])
+    assert np.allclose(batch, single, rtol=JAX_EQUIV_RTOL)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_mcmc_search_with_schedules_compiled_identical(seed):
+    topo = initial_topology(8, 4)
+    ref = mcmc_search(MOE_16E, topo, HW_LAT, iters=60, seed=seed,
+                      schedules=ALL, compiled=False)
+    fast = mcmc_search(MOE_16E, topo, HW_LAT, iters=60, seed=seed,
+                       schedules=ALL, compiled=True)
+    assert fast.strategy == ref.strategy
+    assert fast.iter_time == pytest.approx(ref.iter_time, rel=1e-9)
+    assert np.allclose(fast.history, ref.history, rtol=1e-9)
+    assert ref.strategy.schedule in ALL
+
+
+@pytest.mark.parametrize("objective", ["union", "decomposed"])
+def test_mcmc_search_jobset_with_schedules_compiled_identical(objective):
+    js = _jobset12()
+    init = {t.label: default_strategy(t.spec) for t in js.tenants}
+    topo = topology_finder(js.union_for(init), HW.degree, pack="per_node")
+    ref = mcmc_search_jobset(js, topo, HW_LAT, iters=40, seed=2,
+                             schedules=ALL, objective=objective,
+                             compiled=False)
+    fast = mcmc_search_jobset(js, topo, HW_LAT, iters=40, seed=2,
+                              schedules=ALL, objective=objective,
+                              compiled=True)
+    assert fast.strategies == ref.strategies
+    assert fast.iter_time == pytest.approx(ref.iter_time, rel=1e-9)
+    assert np.allclose(fast.history, ref.history, rtol=1e-9)
+    for label in ref.per_job:
+        assert fast.per_job[label] == pytest.approx(
+            ref.per_job[label], rel=1e-9
+        )
+
+
+def test_jax_backend_with_schedules_repriced_on_numpy():
+    """backend="jax" explores a schedule-widened pool; the winner's
+    iter_time must equal the bit-exact NumPy pricing of that strategy."""
+    n = 8
+    topo = initial_topology(n, 4)
+    res = mcmc_search(MOE_16E, topo, HW_LAT, iters=40, seed=0,
+                      backend="jax", schedules=ALL, pool_size=24)
+    assert res.strategy.schedule in ALL
+    ev = plan_evaluator(topo, HW_LAT)
+    demand = res.strategy.demand(MOE_16E, n)
+    comp = compute_time(
+        MOE_16E.flops_per_sample * MOE_16E.batch_per_gpu * n, n, HW_LAT
+    )
+    assert res.iter_time == iteration_time(ev.comm_time(demand), comp)
+
+
+def test_chain_kernel_latency_matches_reference():
+    """ChainKernel's trailing (steps, alpha) params agree with the
+    sequential NumPy replay to reassociation level."""
+    from repro.core.planeval_jax import (
+        ChainKernel,
+        draw_proposal_streams,
+        run_chains_reference,
+    )
+
+    rng = np.random.default_rng(0)
+    T, S, L = 3, 6, 10
+    V = rng.uniform(0.0, 1.0, size=(T, S, L))
+    V[V < 0.3] = 0.0
+    caps = rng.uniform(0.5, 2.0, size=L)
+    comps = rng.uniform(0.1, 0.5, size=T)
+    weights = rng.uniform(0.5, 2.0, size=T)
+    steps = rng.integers(2, 30, size=(T, S)).astype(np.float64)
+    alpha = 1e-2
+    t_idx, s_idx, u = draw_proposal_streams(5, 4, 25, T, S)
+    init_a = np.zeros(T, dtype=np.int64)
+    temps = np.full(4, 0.1)
+    for objective in ("union", "decomposed"):
+        kernel = ChainKernel(V, caps, comps, weights, overlap=0.3,
+                             objective=objective, steps=steps, alpha=alpha)
+        best_a, best, hist = kernel.run(init_a, temps, t_idx, s_idx, u)
+        ref_a, ref_best, ref_hist = run_chains_reference(
+            V, caps, comps, weights, 0.3, objective, init_a, temps,
+            t_idx, s_idx, u, steps=steps, alpha=alpha,
+        )
+        assert np.array_equal(best_a, ref_a), objective
+        assert np.allclose(best, ref_best, rtol=1e-9)
+        assert np.allclose(hist, ref_hist, rtol=1e-9)
+
+
+def test_reopt_policy_threads_schedules():
+    """ReoptPolicy.schedules reaches the replan optimizer: a controller
+    with the full schedule tuple plans successfully and its strategy
+    carries a valid schedule tag."""
+    from repro.core.online import ReoptController, ReoptPolicy
+
+    ctrl = ReoptController(
+        MOE_16E, 8, hw=HW_LAT,
+        policy=ReoptPolicy(on_failure=True, replan_latency=1e-3,
+                           schedules=ALL),
+    )
+    plan = ctrl.ensure_plan()
+    assert plan.strategy.schedule in ALL
+    ctrl.fail((0, 1), now=0.0)
+    assert ctrl.strategy.schedule in ALL
+
+
+# ---------------------------------------------------------------------------
+# Error paths: unknown schedules, bad strides, degenerate groups
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_schedule_errors():
+    with pytest.raises(ValueError, match="unknown collective schedule"):
+        get_schedule("butterfly")
+    with pytest.raises(ValueError, match="unknown collective schedule"):
+        job_demand(BERT, 8, schedule="butterfly")
+    with pytest.raises(ValueError, match="unknown collective schedule"):
+        mcmc_search(BERT, initial_topology(8, 4), HW, iters=1,
+                    schedules=("ring", "butterfly"))
+    with pytest.raises(ValueError, match="unknown schedule family"):
+        schedule_strides(8, "butterfly")
+
+
+def test_stride_validation_errors():
+    from repro.core.collectives import _mod_inverse, multi_ring_all_reduce
+    from repro.core.totient import ring_order
+
+    with pytest.raises(ValueError, match="not coprime"):
+        _mod_inverse(2, 8)  # gcd(2, 8) = 2: no ring
+    with pytest.raises(ValueError, match="not a ring"):
+        ring_order(8, 4)
+    with pytest.raises(ValueError, match="at least one ring stride"):
+        multi_ring_all_reduce(np.zeros(4), "x", ())
+    with pytest.raises(ValueError, match="at least one tree stride"):
+        from repro.core.collectives import multi_tree_all_reduce
+
+        multi_tree_all_reduce(np.zeros(4), "x", ())
+
+
+def test_degenerate_group_errors():
+    with pytest.raises(ValueError, match=">= 2"):
+        validate_hd_group(1)  # n=1 "group" has nothing to halve
+    with pytest.raises(ValueError, match=">= 2"):
+        get_schedule("multi_tree").pair_loads((5,), 100.0)
+    with pytest.raises(TypeError, match="not compiled"):
+        get_schedule("ring").pair_loads((0, 1), 1.0)
+    # Schedule stride families: empty below 2 ranks, never above.
+    assert schedule_strides(1, "recursive_hd") == ()
+    assert schedule_strides(1, "multi_tree") == ()
+    assert schedule_strides(8, "recursive_hd") == (1, 2, 4)
+
+
+def test_compiled_demand_keeps_connectivity_ring():
+    """apply_schedule leaves a zero-byte group so the TopologyFinder still
+    reserves a ring over the members (the schedule's pinned pairs then ride
+    matched direct links)."""
+    d = job_demand(BERT, 8, schedule="recursive_hd")
+    assert [g.nbytes for g in d.allreduce] == [0.0]
+    assert d.allreduce[0].members == tuple(range(8))
+    assert demand_steps(d) == 6.0  # 2 log2(8) rounds vs ring's 14
+    topo = topology_finder(d, 4)
+    assert max(topo.out_degrees()) <= 4
