@@ -1,0 +1,298 @@
+"""Fleet-scale pricing core: sparse vs dense at 256-1024 nodes (ISSUE 8).
+
+The paper's headline claims rest on pricing direct-connect fabrics far
+beyond the 12-64 nodes the seed engine was written for.  This benchmark
+gates the O(active-edges) fast paths — COO demand caching + segment-sum
+pricing in :class:`~repro.core.planeval.PlanEvaluator`, the embedded
+incremental union (:func:`~repro.core.demand.union_embedded`), and the
+event-queue max-min filling in :mod:`~repro.core.simengine` — against the
+dense baseline (forced via ``REPRO_SPARSE_MIN_NODES`` /
+``REPRO_MAXMIN_METHOD``, the same knobs fleet operators tune):
+
+* **candidate pricing** — per-tenant demand pricing through the compiled
+  evaluator at 256 nodes must beat the dense path by >= 10x,
+* **end-to-end replan** — churn events (tenant departs / arrives, union
+  demand rebuilt and re-priced) must beat dense by >= 5x,
+* **bit identity** — sparse and dense agree to the bit on union matrices,
+  load vectors, comm times, and max-min rates at seed sizes *and* at the
+  gate size,
+* **fleet churn** — a 512-node (smoke; 1024 full) fabric with ~200
+  churning tenants completes a full trace on the sparse path, the regime
+  where the dense path stops being interactive.
+
+A perf record lands in ``experiments/bench/BENCH_fleet.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from contextlib import contextmanager
+
+import numpy as np
+
+from repro.core.alternating import initial_topology
+from repro.core.demand import remap_demand
+from repro.core.netsim import HardwareSpec
+from repro.core.planeval import PlanEvaluator
+from repro.core.workloads import BERT, DLRM, JobSet, TenantJob, job_demand
+
+DEGREE = 4
+PERF_RECORD = os.path.join("experiments", "bench", "BENCH_fleet.json")
+
+# Gates from ISSUE 8 acceptance criteria.
+MIN_PRICING_SPEEDUP = 10.0
+MIN_REPLAN_SPEEDUP = 5.0
+
+_DENSE_ENV = {
+    "REPRO_SPARSE_MIN_NODES": str(1 << 30),  # no fabric is "big enough"
+    "REPRO_MAXMIN_METHOD": "dense",
+}
+
+
+@contextmanager
+def _forced_dense():
+    """Run a block on the dense baseline paths (env knobs, restored after)."""
+    old = {k: os.environ.get(k) for k in _DENSE_ENV}
+    os.environ.update(_DENSE_ENV)
+    try:
+        yield
+    finally:
+        for k, v in old.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+
+
+def _fleet(n: int, n_tenants: int, seed: int) -> tuple[JobSet, dict]:
+    """~``n_tenants`` disjoint tenants (mixed DP transformer / DLRM) plus
+    their job-local demands keyed by label."""
+    rng = np.random.default_rng(seed)
+    nodes = rng.permutation(n)
+    tenants, demands, at = [], {}, 0
+    for t in range(n_tenants):
+        k = 2 + (t % 2)  # mixed 2/3-server jobs (~200 fit on 512 nodes)
+        if at + k > n:
+            break
+        servers = tuple(int(v) for v in nodes[at:at + k])
+        at += k
+        spec = DLRM if t % 2 else BERT
+        label = f"t{t}"
+        tenants.append(TenantJob(spec=spec, servers=servers, name=label))
+        demands[label] = (
+            job_demand(spec, k, table_hosts=tuple(range(0, k, 2)))
+            if spec is DLRM else job_demand(spec, k)
+        )
+    return JobSet(n=n, tenants=tenants), demands
+
+
+def _embedded(jobset: JobSet, demands: dict, n: int) -> list:
+    return [
+        remap_demand(demands[t.label], t.servers, n) for t in jobset.tenants
+    ]
+
+
+def _time_pricing(ev: PlanEvaluator, pool: list, reps: int) -> float:
+    """Seconds per candidate (one ``comm_time`` call), warm caches."""
+    for d in pool:  # compile routes / group incidence outside the clock
+        ev.comm_time(d)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for d in pool:
+            ev.comm_time(d)
+    return (time.perf_counter() - t0) / (reps * len(pool))
+
+
+def _churn_events(jobset: JobSet, demands: dict, n_events: int):
+    """Alternating depart / re-arrive trace over the tenant list."""
+    events = []
+    for i in range(n_events):
+        events.append(("depart" if i % 2 == 0 else "arrive",
+                       jobset.tenants[i % len(jobset.tenants)].label))
+    return events
+
+
+def _run_replan(jobset: JobSet, demands: dict, ev: PlanEvaluator,
+                events, n: int) -> tuple[float, float]:
+    """Process the churn trace: every event rebuilds + re-prices the union.
+
+    Returns (seconds per event, last union comm_time)."""
+    resident = list(jobset.tenants)
+    by_label = {t.label: t for t in jobset.tenants}
+    last = 0.0
+    t0 = time.perf_counter()
+    for kind, label in events:
+        if kind == "depart":
+            resident = [t for t in resident if t.label != label]
+        elif all(t.label != label for t in resident):
+            resident = resident + [by_label[label]]
+        js = JobSet(n=n, tenants=resident)
+        union = js.union(demands)
+        last = ev.comm_time(union)
+    dt = (time.perf_counter() - t0) / max(len(events), 1)
+    return dt, last
+
+
+def _assert_bit_identity(n: int, hw: HardwareSpec) -> None:
+    """Sparse == dense to the bit at seed sizes: union matrix, load
+    vectors, comm times, and event-queue max-min rates."""
+    from repro.core.simengine import Task, _FlowState, _LinkTable, _max_min_rates
+
+    jobset, demands = _fleet(n, n_tenants=max(3, n // 4), seed=n)
+    topo = initial_topology(n, DEGREE)
+    sparse_ev = PlanEvaluator(topo, hw)
+    dense_ev = PlanEvaluator(topo, hw, sparse_min_nodes_=1 << 30)
+
+    sparse_union = jobset.union(demands)
+    with _forced_dense():
+        dense_union = jobset.union(demands)
+    assert np.array_equal(sparse_union.mp, dense_union.mp), n
+
+    for d in _embedded(jobset, demands, n) + [sparse_union]:
+        assert sparse_ev.comm_time(d) == dense_ev.comm_time(d), n
+        assert np.array_equal(sparse_ev.loads(d), dense_ev.loads(d)), n
+
+    rng = np.random.default_rng(n)
+    table = _LinkTable({
+        (i, (i + s) % n): float(rng.uniform(1.0, 50.0))
+        for i in range(n) for s in (1, 2)
+    })
+    flows = []
+    for t in range(2 * n):
+        a = int(rng.integers(n))
+        route = (a, (a + 1) % n, (a + 3) % n)
+        lids, cnts = table.indices_for(route)
+        flows.append(_FlowState(
+            task=Task(tid=t, kind="flow", nbytes=1e3, route=route),
+            remaining=1e3, lids=lids, cnts=cnts, hops=2,
+        ))
+    dense_r = _max_min_rates(flows, table.cap, method="dense")
+    heap_r = _max_min_rates(flows, table.cap, method="heap")
+    assert np.array_equal(dense_r, heap_r), n
+
+
+def run(smoke: bool = False) -> list[dict]:
+    hw = HardwareSpec(link_bandwidth=12.5e9, degree=DEGREE)
+    rows: list[dict] = []
+
+    # -- bit identity at seed sizes (the existing goldens' regime) ----------
+    t0 = time.perf_counter()
+    for n in (12, 16, 24):
+        _assert_bit_identity(n, hw)
+    rows.append(dict(
+        name="fleet_bit_identity",
+        us_per_call=(time.perf_counter() - t0) * 1e6,
+        derived="sparse==dense bitwise at n=12/16/24",
+    ))
+
+    # -- candidate pricing + replan gates at 256 nodes ----------------------
+    n_gate = 256
+    jobset, demands = _fleet(n_gate, n_tenants=80, seed=0)
+    topo = initial_topology(n_gate, DEGREE)
+    pool = _embedded(jobset, demands, n_gate)
+
+    sparse_ev = PlanEvaluator(topo, hw)
+    dense_ev = PlanEvaluator(topo, hw, sparse_min_nodes_=1 << 30)
+    sparse_s = _time_pricing(sparse_ev, pool, reps=6 if smoke else 20)
+    dense_s = _time_pricing(dense_ev, pool, reps=2 if smoke else 5)
+    pricing_speedup = dense_s / sparse_s
+    # Same candidates, same bits, 10x less time.
+    for d in pool[:8]:
+        assert sparse_ev.comm_time(d) == dense_ev.comm_time(d)
+    assert pricing_speedup >= MIN_PRICING_SPEEDUP, (
+        f"candidate pricing speedup {pricing_speedup:.1f}x < "
+        f"{MIN_PRICING_SPEEDUP}x at n={n_gate} "
+        f"(sparse {sparse_s*1e6:.1f}us vs dense {dense_s*1e6:.1f}us)"
+    )
+    rows.append(dict(
+        name="fleet_candidate_pricing",
+        us_per_call=sparse_s * 1e6,
+        derived=f"speedup={pricing_speedup:.1f}x;dense_us={dense_s*1e6:.1f}",
+        sparse_us=sparse_s * 1e6,
+        dense_us=dense_s * 1e6,
+        speedup=pricing_speedup,
+        n=n_gate,
+        n_tenants=len(jobset.tenants),
+    ))
+
+    events = _churn_events(jobset, demands, 10 if smoke else 30)
+    sparse_ev.comm_time(jobset.union(demands))  # warm route compile
+    sparse_dt, sparse_ct = _run_replan(jobset, demands, sparse_ev, events,
+                                       n_gate)
+    with _forced_dense():
+        dense_ev.comm_time(jobset.union(demands))
+        dense_dt, dense_ct = _run_replan(
+            jobset, demands, dense_ev,
+            events[: max(4, len(events) // 3)], n_gate)
+    assert sparse_ct == dense_ct  # same final union, same bits
+    replan_speedup = dense_dt / sparse_dt
+    assert replan_speedup >= MIN_REPLAN_SPEEDUP, (
+        f"replan speedup {replan_speedup:.1f}x < {MIN_REPLAN_SPEEDUP}x "
+        f"at n={n_gate} (sparse {sparse_dt*1e3:.2f}ms vs dense "
+        f"{dense_dt*1e3:.2f}ms per event)"
+    )
+    rows.append(dict(
+        name="fleet_replan",
+        us_per_call=sparse_dt * 1e6,
+        derived=f"speedup={replan_speedup:.1f}x;dense_ms={dense_dt*1e3:.2f}",
+        sparse_us=sparse_dt * 1e6,
+        dense_us=dense_dt * 1e6,
+        speedup=replan_speedup,
+        n=n_gate,
+        n_events=len(events),
+    ))
+
+    # -- fleet churn trace: ~200 tenants on 512 (smoke) / 1024 nodes --------
+    n_fleet = 512 if smoke else 1024
+    fleet_js, fleet_demands = _fleet(n_fleet, n_tenants=200, seed=1)
+    fleet_topo = initial_topology(n_fleet, DEGREE)
+    fleet_ev = PlanEvaluator(fleet_topo, hw)
+    fleet_ev.comm_time(fleet_js.union(fleet_demands))  # warm route compile
+    fleet_events = _churn_events(fleet_js, fleet_demands,
+                                 12 if smoke else 60)
+    fleet_dt, fleet_ct = _run_replan(fleet_js, fleet_demands, fleet_ev,
+                                     fleet_events, n_fleet)
+    assert np.isfinite(fleet_ct) and fleet_ct > 0.0
+    rows.append(dict(
+        name="fleet_churn",
+        us_per_call=fleet_dt * 1e6,
+        derived=(
+            f"n={n_fleet};tenants={len(fleet_js.tenants)};"
+            f"events_per_s={1.0/fleet_dt:.1f}"
+        ),
+        n=n_fleet,
+        n_tenants=len(fleet_js.tenants),
+        n_events=len(fleet_events),
+        events_per_s=1.0 / fleet_dt,
+        union_comm_time_s=fleet_ct,
+    ))
+
+    _write_perf_record(rows, smoke=smoke)
+    return rows
+
+
+def _write_perf_record(rows: list[dict], smoke: bool) -> None:
+    """BENCH_fleet.json: the headline numbers CI tracks over time."""
+    os.makedirs(os.path.dirname(PERF_RECORD), exist_ok=True)
+    by_name = {r["name"]: r for r in rows}
+    record = dict(
+        bench="fleet",
+        smoke=smoke,
+        candidate_pricing_speedup=by_name["fleet_candidate_pricing"]["speedup"],
+        replan_speedup=by_name["fleet_replan"]["speedup"],
+        gate_nodes=by_name["fleet_candidate_pricing"]["n"],
+        fleet_nodes=by_name["fleet_churn"]["n"],
+        fleet_tenants=by_name["fleet_churn"]["n_tenants"],
+        fleet_events_per_s=by_name["fleet_churn"]["events_per_s"],
+        bit_identical=True,  # asserted above, run fails otherwise
+    )
+    with open(PERF_RECORD, "w") as f:
+        json.dump(record, f, indent=1)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    for row in run(smoke=os.environ.get("SMOKE") == "1"):
+        print(row["name"], f"{row['us_per_call']:.1f}us", row["derived"])

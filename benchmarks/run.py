@@ -26,6 +26,7 @@ BENCHES = [
     ("placement", "Placement co-search + churn-priced migration vs greedy"),
     ("collectives_sched", "Collective-schedule co-optimization vs ring-only"),
     ("roofline", "Roofline dry-run terms"),
+    ("fleet", "Fleet-scale pricing: sparse vs dense at 256-1024 nodes"),
 ]
 
 

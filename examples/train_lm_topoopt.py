@@ -37,6 +37,10 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--d-model", type=int, default=256)
     ap.add_argument("--n-layers", type=int, default=8)
+    ap.add_argument("--schedule", default="ring",
+                    choices=["ring", "recursive_hd", "multi_tree"],
+                    help="collective schedule for gradient sync "
+                         "(normally the searched Strategy.schedule)")
     args = ap.parse_args()
 
     n_dev = jax.device_count()
@@ -62,7 +66,8 @@ def main() -> None:
                         stride=strides[0] if strides else 1)
     opt = adamw(cosine(3e-3, args.steps))
     step_fn = make_shardmap_dp_train_step(
-        cfg, opt, mesh, axis_name="data", ring_strides=strides or (1,)
+        cfg, opt, mesh, axis_name="data", ring_strides=strides or (1,),
+        schedule=args.schedule,
     )
 
     start = 0

@@ -38,8 +38,8 @@ from .netsim import HardwareSpec, compute_time, iteration_time, topoopt_comm_tim
 from .planeval import JobSetEvaluator, LRUCache
 from .simengine import SimEngine
 from .strategy_search import (
-    DEMAND_CACHE_SIZE,
     JobSetSearchResult,
+    demand_cache_size,
     SearchResult,
     Strategy,
     default_strategy,
@@ -388,7 +388,7 @@ def co_optimize_jobset(
         raise ValueError("co_optimize_jobset needs at least one tenant")
     if screen_candidates is not None and screen_candidates < 1:
         raise ValueError("screen_candidates must be >= 1 when given")
-    demand_cache = LRUCache(DEMAND_CACHE_SIZE)
+    demand_cache = LRUCache(demand_cache_size())
 
     order = list(range(len(candidates)))
     if screen_candidates is not None and screen_candidates < len(candidates):

@@ -297,10 +297,42 @@ def multi_tree_all_reduce(
     return out.reshape(shape)
 
 
-def topoopt_psum_fn(strides: tuple[int, ...] | None, axis_name: str):
-    """The gradient-sync collective a training step should use: multi-ring
-    TotientPerms AllReduce when a TopoOpt plan supplies strides, otherwise
-    plain ``lax.psum`` (single XLA all-reduce)."""
+def topoopt_psum_fn(
+    strides: tuple[int, ...] | None,
+    axis_name: str,
+    schedule: str = "ring",
+    group_size: int | None = None,
+):
+    """The gradient-sync collective a training step should use, selected from
+    the searched :class:`~repro.core.strategy_search.Strategy` ``schedule``
+    (all three kernels are ``lax.psum``-equivalent):
+
+    * ``"ring"`` — multi-ring TotientPerms AllReduce when a TopoOpt plan
+      supplies strides, otherwise plain ``lax.psum`` (single XLA all-reduce).
+    * ``"recursive_hd"`` — recursive halving-doubling.  The strict runtime
+      kernel needs a power-of-two group, so when ``group_size`` is known and
+      is not one, selection falls back to the ring family — the same fold
+      the demand compiler applies to straggler nodes.
+    * ``"multi_tree"`` — balanced binary trees seeded from the TotientPerms
+      ring orders; without strides there is no tree seed and plain
+      ``lax.psum`` is used.
+    """
+    if schedule == "recursive_hd":
+        if group_size is None or (group_size & (group_size - 1)) == 0:
+            return partial(recursive_hd_all_reduce, axis_name=axis_name)
+        schedule = "ring"  # straggler fold: non-pow2 groups keep ringing
+    elif schedule == "multi_tree":
+        if strides:
+            return partial(
+                multi_tree_all_reduce, axis_name=axis_name,
+                strides=tuple(strides),
+            )
+        return partial(lax.psum, axis_name=axis_name)
+    elif schedule != "ring":
+        raise ValueError(
+            f"unknown collective schedule {schedule!r}: "
+            "expected 'ring', 'recursive_hd' or 'multi_tree'"
+        )
     if strides:
         return partial(multi_ring_all_reduce, axis_name=axis_name, strides=tuple(strides))
     return partial(lax.psum, axis_name=axis_name)

@@ -21,10 +21,22 @@ abstraction drives both.
 
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from typing import Iterable, Sequence
 
 import numpy as np
+
+
+def sparse_min_nodes() -> int:
+    """Node-count threshold for the sparse (COO) demand paths.
+
+    ``REPRO_SPARSE_MIN_NODES`` (default 0: always sparse).  The sparse
+    paths are bit-identical to the dense ones — this knob exists so fleet
+    runs and ``benchmarks/bench_fleet.py`` can pin either path (e.g. a
+    huge value forces the dense baseline) without code edits.
+    """
+    return int(os.environ.get("REPRO_SPARSE_MIN_NODES", "0"))
 
 
 @dataclass(frozen=True)
@@ -66,6 +78,37 @@ class TrafficDemand:
     @property
     def sum_mp(self) -> float:
         return float(self.mp.sum())
+
+    def mp_coo(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """``(srcs, dsts, vals)`` of the nonzero MP entries in
+        ``np.nonzero`` (row-major) order, cached on the demand.
+
+        This is the sparse handle the fleet-scale pricing paths key on: a
+        compiled evaluator prices a cached demand in O(active pairs)
+        instead of re-scanning the (n, n) matrix.  The first call
+        **freezes** ``mp`` against further in-place writes (demands are
+        built first, priced after — a later write raises loudly instead of
+        silently diverging from the cache); replacing the ``mp`` attribute
+        wholesale invalidates the cache instead.
+        """
+        cached = getattr(self, "_coo", None)
+        if cached is not None and cached[0] is self.mp:
+            return cached[1]
+        srcs, dsts = np.nonzero(self.mp)
+        coo = (srcs, dsts, self.mp[srcs, dsts])
+        self.mp.flags.writeable = False
+        self._coo = (self.mp, coo)
+        return coo
+
+    def set_mp_coo(
+        self, srcs: np.ndarray, dsts: np.ndarray, vals: np.ndarray
+    ) -> None:
+        """Attach a precomputed COO (caller's contract: unique pairs in
+        row-major order whose values equal ``mp``'s bit-for-bit — e.g.
+        built by :func:`remap_demand` / :func:`union_embedded` from parts
+        whose COOs are known).  Freezes ``mp`` like :meth:`mp_coo`."""
+        self.mp.flags.writeable = False
+        self._coo = (self.mp, (srcs, dsts, vals))
 
     def add_mp(self, src: int, dst: int, nbytes: float) -> None:
         if src != dst:
@@ -143,6 +186,15 @@ def remap_demand(
     if servers:
         idx = np.asarray(servers, dtype=np.int64)
         out.mp[np.ix_(idx, idx)] += demand.mp
+        if n_cluster >= sparse_min_nodes():
+            # The embedded matrix's nonzeros are exactly the job-local
+            # nonzeros moved to (servers[s], servers[d]) — attach the COO
+            # now (O(k^2) local scan) so pricing the cluster-level demand
+            # never re-scans the (n, n) matrix.
+            ls, ld, v = demand.mp_coo()
+            gs, gd = idx[ls], idx[ld]
+            order = np.lexsort((gd, gs))  # row-major global order
+            out.set_mp_coo(gs[order], gd[order], v[order])
     return out
 
 
@@ -209,12 +261,24 @@ def union_demand(
             raise ValueError("union_demand needs parts or an explicit n")
         n = parts[0].n
     out = TrafficDemand(n=n)
+    sparse = n >= sparse_min_nodes()
+    touched: list[np.ndarray] = []
     merged: dict[tuple[int, ...], float] = {}
     order: list[tuple[int, ...]] = []
     for p in parts:
         if p.n != n:
             raise ValueError(f"demand on {p.n} nodes in a union over {n}")
-        out.mp += p.mp
+        if sparse:
+            # Scatter only the part's nonzeros: each touched cell receives
+            # the same addition, in the same part order, as the dense
+            # ``out.mp += p.mp`` — and adding 0.0 to a nonnegative float is
+            # a bitwise no-op, so skipping the zero cells is exact.
+            ps, pd, pv = p.mp_coo()
+            if ps.size:
+                out.mp[ps, pd] += pv
+                touched.append(ps.astype(np.int64) * n + pd)
+        else:
+            out.mp += p.mp
         out.steps = max(out.steps, p.steps)
         for g in p.allreduce:
             if g.members not in merged:
@@ -224,6 +288,71 @@ def union_demand(
     out.allreduce = [
         AllReduceGroup(members=m, nbytes=merged[m]) for m in order
     ]
+    if sparse:
+        keys = (
+            np.unique(np.concatenate(touched))
+            if touched
+            else np.zeros(0, dtype=np.int64)
+        )
+        srcs, dsts = keys // n, keys % n
+        out.set_mp_coo(srcs, dsts, out.mp[srcs, dsts])
+    return out
+
+
+def union_embedded(
+    parts: Iterable[tuple[TrafficDemand, Sequence[int]]], n: int
+) -> TrafficDemand:
+    """Union of job-local demands embedded under their placements.
+
+    Bit-identical to ``union_demand([remap_demand(d, s, n) for d, s in
+    parts], n)`` without materializing any per-tenant (n, n) matrix: each
+    part contributes its COO entries straight into the one union matrix —
+    O(active pairs) per tenant instead of O(n^2) — which is what lets
+    fleet-sized jobsets re-union on every arrival/departure/move.  The
+    per-cell additions are the dense path's exactly (same values, same
+    part order; the dense path's additions of 0.0 elsewhere are bitwise
+    no-ops on the nonnegative byte matrices).
+    """
+    out = TrafficDemand(n=n)
+    touched: list[np.ndarray] = []
+    merged: dict[tuple[int, ...], float] = {}
+    order: list[tuple[int, ...]] = []
+    for demand, servers in parts:
+        servers = tuple(int(s) for s in servers)
+        # Same placement validation as remap_demand.
+        if len(servers) != demand.n:
+            raise ValueError(
+                f"placement has {len(servers)} servers for a demand on "
+                f"{demand.n}"
+            )
+        if len(set(servers)) != len(servers):
+            raise ValueError(f"placement {servers!r} repeats a server")
+        if servers and not (0 <= min(servers) and max(servers) < n):
+            raise ValueError(f"placement {servers!r} outside cluster of {n}")
+        out.steps = max(out.steps, demand.steps)
+        for g in demand.allreduce:
+            members = tuple(servers[m] for m in g.members)
+            if members not in merged:
+                order.append(members)
+                merged[members] = 0.0
+            merged[members] += g.nbytes
+        if servers:
+            idx = np.asarray(servers, dtype=np.int64)
+            ls, ld, v = demand.mp_coo()
+            if ls.size:
+                gs, gd = idx[ls], idx[ld]
+                out.mp[gs, gd] += v
+                touched.append(gs * n + gd)
+    out.allreduce = [
+        AllReduceGroup(members=m, nbytes=merged[m]) for m in order
+    ]
+    keys = (
+        np.unique(np.concatenate(touched))
+        if touched
+        else np.zeros(0, dtype=np.int64)
+    )
+    srcs, dsts = keys // n, keys % n
+    out.set_mp_coo(srcs, dsts, out.mp[srcs, dsts])
     return out
 
 

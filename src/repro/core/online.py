@@ -1046,6 +1046,7 @@ class JobSetController(ReoptController):
             if best is not None:
                 ranked.append((best[0], t.label, best[1]))
         ranked.sort(key=lambda r: (r[0], r[1]))
+        jse.log_cache_stats("migration-screen")
         return [(label, servers) for _, label, servers in ranked]
 
     def rebalance(

@@ -55,11 +55,15 @@ survive a fabric change.
 
 from __future__ import annotations
 
+import logging
+import os
 from collections import OrderedDict
 
 import numpy as np
 
-from .demand import TrafficDemand, demand_steps, remap_demand
+from .demand import TrafficDemand, demand_steps, remap_demand, sparse_min_nodes
+
+logger = logging.getLogger(__name__)
 from .netsim import (
     HardwareSpec,
     _routing_with_fallback,
@@ -81,16 +85,43 @@ class LRUCache:
     ``get``/``__getitem__`` refresh recency; inserting past ``maxsize``
     evicts the least recently used entry.  Drop-in for the plain dicts the
     search loops used to grow without limit.
+
+    Tracks lookup hit/miss counts (``hits`` / ``misses`` /
+    :attr:`hit_rate`) so fleet runs can tune cache sizes
+    (``REPRO_DEMAND_CACHE_SIZE`` / ``REPRO_VECTOR_CACHE_SIZE``) from
+    logged rates instead of code edits.
     """
 
     def __init__(self, maxsize: int = 512):
         if maxsize < 1:
             raise ValueError("LRUCache needs maxsize >= 1")
         self.maxsize = maxsize
+        self.hits = 0
+        self.misses = 0
         self._data: OrderedDict = OrderedDict()
 
     def __contains__(self, key) -> bool:
-        return key in self._data
+        found = key in self._data
+        if found:
+            self.hits += 1
+        else:
+            self.misses += 1
+        return found
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of lookups served from cache (0.0 when never probed)."""
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict[str, float]:
+        return {
+            "size": len(self._data),
+            "maxsize": self.maxsize,
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hit_rate,
+        }
 
     def __len__(self) -> int:
         return len(self._data)
@@ -109,7 +140,9 @@ class LRUCache:
 
     def get(self, key, default=None):
         if key in self._data:
+            self.hits += 1
             return self[key]
+        self.misses += 1
         return default
 
     def clear(self) -> None:
@@ -127,10 +160,17 @@ class PlanEvaluator:
     call.
     """
 
-    def __init__(self, topo, hw: HardwareSpec):
+    def __init__(self, topo, hw: HardwareSpec, sparse_min_nodes_: int | None = None):
         self.topo = topo
         self.hw = hw
         self._n = topo.n
+        # Sparse pricing: key MP entries off each demand's cached COO
+        # (TrafficDemand.mp_coo) instead of re-scanning the (n, n) matrix,
+        # and bottleneck only the touched links.  Bit-identical to the
+        # dense path; threshold from REPRO_SPARSE_MIN_NODES (kwarg wins).
+        if sparse_min_nodes_ is None:
+            sparse_min_nodes_ = sparse_min_nodes()
+        self._sparse = self._n >= sparse_min_nodes_
         # Parallel-link counts of the physical graph (multi-edges counted),
         # exactly the reference's ``n_par``.
         par: dict[tuple[int, int], int] = {}
@@ -245,22 +285,34 @@ class PlanEvaluator:
         self._pair_nroutes[pid] = len(routes)
         self._pair_tax[pid] = sum(r.hops for r in routes) / len(routes)
 
+    def _compile_missing(self, pids: np.ndarray) -> None:
+        if pids.size:
+            for pid in pids[self._pair_start[pids] < 0]:
+                self._compile_pair(int(pid) // self._n, int(pid) % self._n)
+
     def _mp_arrays(self, mp: np.ndarray):
         """(pids, bytes) of a demand's nonzero MP entries, with every pair
         compiled into the CSR cache."""
         srcs, dsts = np.nonzero(mp)
         vals = mp[srcs, dsts]
         pids = srcs * self._n + dsts
-        if pids.size:
-            for pid in pids[self._pair_start[pids] < 0]:
-                self._compile_pair(int(pid) // self._n, int(pid) % self._n)
+        self._compile_missing(pids)
         return pids, vals
 
     def _ensure_compiled(self, demand: TrafficDemand):
         """Compile everything a demand touches (so the link universe stops
-        growing before the load vector is allocated)."""
+        growing before the load vector is allocated).
+
+        On the sparse path the MP entries come from the demand's cached
+        COO (same pairs, same row-major order, same float values as the
+        ``np.nonzero`` scan — O(active pairs) on repeat pricings)."""
         for g in demand.allreduce:
             self._group(g.members)
+        if self._sparse:
+            srcs, dsts, vals = demand.mp_coo()
+            pids = srcs.astype(np.int64) * self._n + dsts
+            self._compile_missing(pids)
+            return pids, vals
         return self._mp_arrays(demand.mp)
 
     # -- evaluation ----------------------------------------------------------
@@ -311,6 +363,67 @@ class PlanEvaluator:
         ar += mp
         return ar, pids, vals
 
+    def _eval_compact(self, demand: TrafficDemand):
+        """(touched link ids, compact loads, pids, vals) of one demand —
+        the same scatters as :meth:`_eval` into a vector over only the
+        links the demand touches, so per-candidate pricing cost scales
+        with active edges instead of the link-table size.
+
+        Per-link sums are bit-identical to :meth:`_eval`: each compact
+        slot receives exactly the additions its full-vector link receives,
+        in the same sequential ``np.add.at`` order (groups in demand
+        order, then the MP occurrence stream), and the AllReduce/MP
+        vectors merge with the same single add."""
+        pids, vals = self._ensure_compiled(demand)
+        group_entries: list[tuple[np.ndarray, float]] = []
+        occ_parts: list[np.ndarray] = []
+        for g in demand.allreduce:
+            entry = self._group(g.members)
+            if entry is None:
+                continue
+            ids, n_rings, k = entry
+            per_link_total = 2.0 * (k - 1) / k * g.nbytes
+            if per_link_total == 0.0:
+                continue
+            group_entries.append((ids, per_link_total / n_rings))
+            occ_parts.append(ids)
+        starts = self._pair_start[pids]
+        lens = self._pair_len[pids]
+        total = int(lens.sum())
+        if total:
+            seg_off = np.cumsum(lens) - lens
+            idx = (
+                np.arange(total, dtype=np.int64)
+                - np.repeat(seg_off, lens)
+                + np.repeat(starts, lens)
+            )
+            occ_parts.append(self._mp_ids[idx])
+        if not occ_parts:
+            empty = np.zeros(0, dtype=np.int64)
+            return empty, np.zeros(0, dtype=np.float64), pids, vals
+        occ = np.concatenate(occ_parts)
+        touched, inv = np.unique(occ, return_inverse=True)
+        ar = np.zeros(touched.size, dtype=np.float64)
+        off = 0
+        for ids, share in group_entries:
+            np.add.at(ar, inv[off: off + ids.size], share)
+            off += ids.size
+        mp = np.zeros(touched.size, dtype=np.float64)
+        if total:
+            shares = vals / self._pair_nroutes[pids]
+            np.add.at(mp, inv[off:], np.repeat(shares, lens))
+        ar += mp
+        return touched, ar, pids, vals
+
+    def _bottleneck_compact(self, touched: np.ndarray, loads: np.ndarray) -> float:
+        """Bottleneck over the touched links only — equal to the full-max
+        (untouched loads are zero and loads are nonnegative, so they can
+        never win the max; an all-zero demand bottlenecks at 0.0 both
+        ways)."""
+        if not touched.size:
+            return 0.0
+        return float(np.max(loads / self._cap[touched]))
+
     def loads(self, demand: TrafficDemand) -> np.ndarray:
         """Per-link byte loads (AllReduce rings + routed MP) as a flat
         vector over the compiled link universe — bit-identical to the
@@ -349,8 +462,30 @@ class PlanEvaluator:
                      if k not in shared]
             for g in (*gone, *added):
                 self._group(g.members)
-        diff = new.mp - old.mp
-        pids, vals = self._mp_arrays(diff)
+        if self._sparse:
+            # COO diff: for a pair in both demands the dense cell is
+            # ``new - old`` (one float subtraction); the sequential
+            # ``np.add.at`` below performs ``(0 + new) + (-old)`` — the
+            # identical operation — and pairs in only one demand reduce to
+            # ``new`` / ``-old`` exactly.  Exact-zero diffs are dropped on
+            # both paths (np.nonzero there, the mask here), and np.unique
+            # returns pair ids sorted = the dense row-major order.
+            os_, od_, ov = old.mp_coo()
+            ns_, nd_, nv = new.mp_coo()
+            keys = np.concatenate([
+                ns_.astype(np.int64) * self._n + nd_,
+                os_.astype(np.int64) * self._n + od_,
+            ])
+            contrib = np.concatenate([nv, -ov])
+            uk, inv = np.unique(keys, return_inverse=True)
+            dv = np.zeros(uk.size, dtype=np.float64)
+            np.add.at(dv, inv, contrib)
+            nzm = dv != 0.0
+            pids, vals = uk[nzm], dv[nzm]
+            self._compile_missing(pids)
+        else:
+            diff = new.mp - old.mp
+            pids, vals = self._mp_arrays(diff)
         out = np.zeros(self._n_links, dtype=np.float64)
         out[: base.size] = base
         if gone:
@@ -386,13 +521,17 @@ class PlanEvaluator:
         ``{"comm_time", "bandwidth_tax"}`` — on the compiled arrays.
         ``comm_time`` is bit-identical to the reference; the tax agrees to
         float-reassociation level (~1e-15 relative)."""
-        loads, pids, vals = self._eval(demand)
+        if self._sparse:
+            touched, loads, pids, vals = self._eval_compact(demand)
+            worst = self._bottleneck_compact(touched, loads)
+        else:
+            loads, pids, vals = self._eval(demand)
+            worst = self.comm_time_from_loads(loads)
         logical = float(vals.sum())
         if logical > 0:
             tax = float(vals @ self._pair_tax[pids]) / logical
         else:
             tax = 1.0
-        worst = self.comm_time_from_loads(loads)
         if self.hw.link_latency:
             worst = worst + self.hw.link_latency * demand_steps(demand)
         return {
@@ -404,8 +543,14 @@ class PlanEvaluator:
         """Bottleneck comm time of ``demand`` — bit-identical to
         ``topoopt_comm_time(...)["comm_time"]`` (including the α latency
         term when ``hw.link_latency`` is set: same ``worst + α * steps``
-        expression as the reference)."""
-        worst = self.comm_time_from_loads(self._eval(demand)[0])
+        expression as the reference).  On the sparse path the bottleneck
+        is taken over only the touched links (:meth:`_eval_compact`,
+        bit-identical)."""
+        if self._sparse:
+            touched, loads, _, _ = self._eval_compact(demand)
+            worst = self._bottleneck_compact(touched, loads)
+        else:
+            worst = self.comm_time_from_loads(self._eval(demand)[0])
         if self.hw.link_latency:
             worst = worst + self.hw.link_latency * demand_steps(demand)
         return worst
@@ -472,12 +617,17 @@ class JobSetEvaluator:
         hw: HardwareSpec,
         overlap: float = 0.0,
         demand_cache=None,
-        vector_cache_size: int = 512,
+        vector_cache_size: int | None = None,
         synth_missing_rings: bool = False,
+        share_vector_cache: bool = True,
     ):
         self.jobset = jobset
         self.hw = hw
         self.overlap = overlap
+        if vector_cache_size is None:
+            vector_cache_size = int(
+                os.environ.get("REPRO_VECTOR_CACHE_SIZE", "512")
+            )
         # Price AllReduce groups the topology carries no rings for (a
         # tenant probed at a placement the topology was never built for)
         # as one synthetic ring over the members in placement order, each
@@ -488,7 +638,22 @@ class JobSetEvaluator:
         self.synth_missing_rings = synth_missing_rings
         self.ev = plan_evaluator(topo, hw)
         self.demand_cache = demand_cache if demand_cache is not None else {}
-        self._vectors = LRUCache(vector_cache_size)
+        if share_vector_cache:
+            # Per-tenant load vectors depend only on (tenant, strategy,
+            # placement, synth flag) for a fixed (topology, hw) — exactly
+            # the scope of the memoized PlanEvaluator — so evaluators
+            # built back-to-back on the same fabric (one per controller
+            # replan) share one vector cache: an arrival or departure
+            # re-prices only the tenants it actually touched.  Keys carry
+            # the synth flag so synth/non-synth evaluators cannot poison
+            # each other.
+            shared = getattr(self.ev, "_tenant_vecs", None)
+            if shared is None:
+                shared = LRUCache(vector_cache_size)
+                self.ev._tenant_vecs = shared
+            self._vectors = shared
+        else:
+            self._vectors = LRUCache(vector_cache_size)
         self._tenant = {t.label: t for t in jobset.tenants}
         self._comp = {
             t.label: compute_time(t.flops_per_iteration, t.k, hw)
@@ -502,6 +667,31 @@ class JobSetEvaluator:
         # Per-(label, strategy) schedule step counts (α latency term) —
         # topology- and placement-independent, so memoized flat.
         self._steps_memo: dict[tuple, float] = {}
+
+    # -- cache telemetry -----------------------------------------------------
+
+    def cache_stats(self) -> dict[str, dict]:
+        """Hit/miss statistics of the vector and demand caches (the two
+        LRU-bounded hot-loop caches a fleet run tunes via
+        ``REPRO_VECTOR_CACHE_SIZE`` / ``REPRO_DEMAND_CACHE_SIZE``)."""
+        out: dict[str, dict] = {}
+        if isinstance(self._vectors, LRUCache):
+            out["vectors"] = self._vectors.stats()
+        if isinstance(self.demand_cache, LRUCache):
+            out["demands"] = self.demand_cache.stats()
+        return out
+
+    def log_cache_stats(self, context: str = "") -> None:
+        """DEBUG-log the cache hit rates (the online controller calls this
+        after each migration screen)."""
+        for name, s in self.cache_stats().items():
+            logger.debug(
+                "%s%s cache: %d/%d entries, %.1f%% hit rate "
+                "(%d hits / %d misses)",
+                f"{context}: " if context else "",
+                name, s["size"], s["maxsize"], 100.0 * s["hit_rate"],
+                s["hits"], s["misses"],
+            )
 
     # -- per-tenant vectors --------------------------------------------------
 
@@ -534,7 +724,7 @@ class JobSetEvaluator:
         hit."""
         t = self._tenant[label]
         servers = tuple(int(s) for s in servers)
-        key = (label, strategy, servers)
+        key = (label, strategy, servers, self.synth_missing_rings)
         v = self._vectors.get(key)
         if v is None:
             dem = remap_demand(

@@ -591,8 +591,8 @@ def jax_mcmc_search_jobset(
     from .netsim import compute_time
     from .planeval import JobSetEvaluator, LRUCache
     from .strategy_search import (
-        DEMAND_CACHE_SIZE,
         JobSetSearchResult,
+        demand_cache_size,
         default_strategy,
         evaluate_jobset,
         evaluate_jobset_decomposed,
@@ -601,7 +601,7 @@ def jax_mcmc_search_jobset(
     if not jobset.tenants:
         raise ValueError("jax_mcmc_search_jobset needs at least one tenant")
     if demand_cache is None:
-        demand_cache = LRUCache(DEMAND_CACHE_SIZE)
+        demand_cache = LRUCache(demand_cache_size())
     jse = JobSetEvaluator(
         jobset, topo, hw, overlap=overlap, demand_cache=demand_cache
     )

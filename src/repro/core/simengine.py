@@ -148,37 +148,25 @@ class _FlowState:
     rate: float = 0.0
 
 
-def _max_min_rates(
-    flows: list[_FlowState], cap: np.ndarray, weights: np.ndarray | None = None
-) -> np.ndarray:
-    """Progressive-filling max-min fairness, vectorized.
+def _maxmin_method() -> str:
+    """Filling-loop selection: ``REPRO_MAXMIN_METHOD`` in {auto, heap,
+    dense}; ``auto`` (default) uses the heap event queue once the link
+    table reaches ``REPRO_SPARSE_MIN_LINKS`` links (default 0: always)."""
+    import os
 
-    Semantics match the legacy per-flow-dict loop: repeatedly find the link
-    minimizing remaining_bw / n_users, hand each of its users that fair
-    share (times traversal multiplicity), charge every link they cross, and
-    freeze them.
+    return os.environ.get("REPRO_MAXMIN_METHOD", "auto")
 
-    ``weights`` (per flow, default all ones) generalizes to *weighted*
-    max-min: a link's fair share is split proportionally to flow weight
-    (users count weight x traversal multiplicity).  With unit weights the
-    arithmetic is bit-identical to the unweighted loop (multiplying by 1.0
-    is exact), which is the ``FairnessPolicy`` golden invariant.
-    """
-    F = len(flows)
-    rates = np.zeros(F)
-    if F == 0:
-        return rates
-    w = np.ones(F) if weights is None else np.maximum(weights, 1e-12)
-    L = cap.size
-    rem = cap.astype(np.float64, copy=True)
-    users = np.zeros(L)
-    alive = np.zeros(F, dtype=bool)
-    for i, f in enumerate(flows):
-        if f.lids.size:
-            alive[i] = True
-            users[f.lids] += f.cnts * w[i]
 
-    # Inverted index link -> (flow, count), sorted by link for O(1) slices.
+def _sparse_min_links() -> int:
+    import os
+
+    return int(os.environ.get("REPRO_SPARSE_MIN_LINKS", "0"))
+
+
+def _incidence_csr(flows: list[_FlowState]):
+    """Inverted index link -> (flow, count), sorted by link for O(1)
+    slices; stable sort keeps flows in ascending id within each link —
+    the freeze order both filling loops share."""
     fid = np.concatenate(
         [
             np.full(f.lids.size, i, dtype=np.int64)
@@ -194,38 +182,160 @@ def _max_min_rates(
         [f.cnts for f in flows if f.cnts.size] or [np.empty(0)]
     )
     order = np.argsort(lid, kind="stable")
-    lid_s, fid_s, cnt_s = lid[order], fid[order], cnt[order]
+    return lid[order], fid[order], cnt[order]
 
+
+def _fill_dense(flows, rates, rem, users, alive, w, lid_s, fid_s, cnt_s, finite):
+    """Reference filling loop: O(links) bottleneck scan per round.
+
+    Kept as the baseline the heap loop (and the property tests /
+    ``bench_fleet``) are pinned bit-identical against.
+    """
     n_alive = int(alive.sum())
-    # inf-capacity (unknown) links can yield inf shares; inf-inf -> nan in
-    # the rem update is harmless (those links never become bottlenecks).
-    with np.errstate(invalid="ignore"):
-        while n_alive:
-            used_idx = np.flatnonzero(users > 0)
-            if used_idx.size == 0:
-                break
-            fair = rem[used_idx] / users[used_idx]
-            b = int(used_idx[np.argmin(fair)])
-            share = float(rem[b] / users[b])
-            lo = np.searchsorted(lid_s, b, side="left")
-            hi = np.searchsorted(lid_s, b, side="right")
-            froze_any = False
-            for fi, c_b in zip(fid_s[lo:hi], cnt_s[lo:hi]):
-                if not alive[fi]:
-                    continue
-                f = flows[fi]
-                rates[fi] += share * w[fi] * c_b
-                rem[f.lids] -= share * w[fi] * c_b * f.cnts
-                users[f.lids] -= f.cnts * w[fi]
-                alive[fi] = False
-                n_alive -= 1
-                froze_any = True
-            if not froze_any:
-                # Float residue: non-integer weights can leave a dust user
-                # count on a link whose flows all froze (integer counts
-                # subtract exactly, so the unweighted path never gets here).
-                # Clear it or the filling loop would spin forever.
-                users[b] = 0.0
+    while n_alive:
+        used_idx = np.flatnonzero((users > 0) & finite)
+        if used_idx.size == 0:
+            break
+        fair = rem[used_idx] / users[used_idx]
+        b = int(used_idx[np.argmin(fair)])
+        share = float(rem[b] / users[b])
+        lo = np.searchsorted(lid_s, b, side="left")
+        hi = np.searchsorted(lid_s, b, side="right")
+        froze_any = False
+        for fi, c_b in zip(fid_s[lo:hi], cnt_s[lo:hi]):
+            if not alive[fi]:
+                continue
+            f = flows[fi]
+            rates[fi] += share * w[fi] * c_b
+            rem[f.lids] -= share * w[fi] * c_b * f.cnts
+            users[f.lids] -= f.cnts * w[fi]
+            alive[fi] = False
+            n_alive -= 1
+            froze_any = True
+        if not froze_any:
+            # Float residue: non-integer weights can leave a dust user
+            # count on a link whose flows all froze (integer counts
+            # subtract exactly, so the unweighted path never gets here).
+            # Clear it or the filling loop would spin forever.
+            users[b] = 0.0
+
+
+def _fill_heap(flows, rates, rem, users, alive, w, lid_s, fid_s, cnt_s, finite):
+    """Event-queue filling loop: lazy-deletion heap of (fair share, link).
+
+    Only links whose residual actually changed are re-keyed, so a full
+    fill costs O(nnz log nnz) in the flow->link incidence instead of the
+    dense loop's O(rounds x links).  Bit-identical to :func:`_fill_dense`:
+    the heap's (fair, lid) tuple order reproduces np.argmin's
+    first-smallest-index tie-break, stored fair values are exactly the
+    divisions the dense scan performs (a link's entry is invalidated by
+    version counter whenever rem/users change), and the per-flow freeze
+    arithmetic is byte-for-byte the same statements.
+    """
+    n_alive = int(alive.sum())
+    version: dict[int, int] = {}
+    heap: list[tuple[float, int, int]] = []
+    for li in np.flatnonzero((users > 0) & finite):
+        li = int(li)
+        version[li] = 0
+        heap.append((rem[li] / users[li], li, 0))
+    heapq.heapify(heap)
+    while n_alive and heap:
+        share, b, ver = heapq.heappop(heap)
+        if version.get(b) != ver or users[b] <= 0:
+            continue  # stale entry (residual changed since push) or dust-cleared
+        lo = np.searchsorted(lid_s, b, side="left")
+        hi = np.searchsorted(lid_s, b, side="right")
+        froze_any = False
+        touched: list[np.ndarray] = []
+        for fi, c_b in zip(fid_s[lo:hi], cnt_s[lo:hi]):
+            if not alive[fi]:
+                continue
+            f = flows[fi]
+            rates[fi] += share * w[fi] * c_b
+            rem[f.lids] -= share * w[fi] * c_b * f.cnts
+            users[f.lids] -= f.cnts * w[fi]
+            alive[fi] = False
+            n_alive -= 1
+            froze_any = True
+            touched.append(f.lids)
+        if not froze_any:
+            # Same float-residue dust clearing as the dense loop.
+            users[b] = 0.0
+            version[b] = ver + 1
+            continue
+        for li in np.unique(np.concatenate(touched)):
+            li = int(li)
+            if not finite[li]:
+                continue
+            v = version.get(li, 0) + 1
+            version[li] = v
+            if users[li] > 0:
+                heapq.heappush(heap, (rem[li] / users[li], li, v))
+
+
+def _max_min_rates(
+    flows: list[_FlowState],
+    cap: np.ndarray,
+    weights: np.ndarray | None = None,
+    method: str | None = None,
+) -> np.ndarray:
+    """Progressive-filling max-min fairness over a sparse incidence.
+
+    Semantics match the legacy per-flow-dict loop: repeatedly find the link
+    minimizing remaining_bw / n_users, hand each of its users that fair
+    share (times traversal multiplicity), charge every link they cross, and
+    freeze them.
+
+    ``weights`` (per flow, default all ones) generalizes to *weighted*
+    max-min: a link's fair share is split proportionally to flow weight
+    (users count weight x traversal multiplicity).  With unit weights the
+    arithmetic is bit-identical to the unweighted loop (multiplying by 1.0
+    is exact), which is the ``FairnessPolicy`` golden invariant.
+
+    Unknown links (infinite capacity, lazily added by :class:`_LinkTable`)
+    are masked out of bottleneck selection entirely: they can never
+    constrain a flow, and excluding them removes the old ``inf - inf ->
+    nan`` residual update the legacy loop suppressed with ``errstate``.  A
+    flow whose every link is unknown is unconstrained and finishes at
+    infinite rate — the conclusion the legacy loop reached through an inf
+    share, now reached without manufacturing nans.
+
+    ``method`` ("heap" | "dense" | "auto" | None) picks the filling loop;
+    None defers to ``REPRO_MAXMIN_METHOD`` / ``REPRO_SPARSE_MIN_LINKS``
+    (see :func:`_maxmin_method`).  Both loops are bit-identical.
+    """
+    F = len(flows)
+    rates = np.zeros(F)
+    if F == 0:
+        return rates
+    w = np.ones(F) if weights is None else np.maximum(weights, 1e-12)
+    rem = cap.astype(np.float64, copy=True)
+    users = np.zeros(cap.size)
+    alive = np.zeros(F, dtype=bool)
+    for i, f in enumerate(flows):
+        if f.lids.size:
+            alive[i] = True
+            users[f.lids] += f.cnts * w[i]
+    lid_s, fid_s, cnt_s = _incidence_csr(flows)
+    finite = np.isfinite(cap)
+
+    if method is None or method == "auto":
+        env = _maxmin_method() if method is None else "auto"
+        if env == "auto":
+            env = "heap" if cap.size >= _sparse_min_links() else "dense"
+        method = env
+    fill = _fill_heap if method == "heap" else _fill_dense
+    fill(flows, rates, rem, users, alive, w, lid_s, fid_s, cnt_s, finite)
+
+    # Flows still alive cross only unknown (inf-capacity) links: they are
+    # unconstrained.  (A flow with any finite link would have kept that
+    # link's user count positive, so the loop could not have ended.)
+    if alive.any():
+        for i in np.flatnonzero(alive):
+            f = flows[int(i)]
+            if not finite[f.lids].any():
+                rates[i] = np.inf
     return rates
 
 

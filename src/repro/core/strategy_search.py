@@ -19,6 +19,7 @@ union demand.
 from __future__ import annotations
 
 import math
+import os
 import random
 from dataclasses import dataclass, field, replace
 
@@ -38,6 +39,14 @@ from .workloads import JobSet, JobSpec, job_demand
 # Cap on the per-tenant demand memo the jobset search loops share (entries
 # are job-local TrafficDemands; long MCMC runs used to grow it unbounded).
 DEMAND_CACHE_SIZE = 512
+
+
+def demand_cache_size() -> int:
+    """Capacity of the default per-tenant demand memo.  Fleet runs tune it
+    without code edits via ``REPRO_DEMAND_CACHE_SIZE``; every search entry
+    point also takes an explicit ``demand_cache`` kwarg which wins outright.
+    """
+    return int(os.environ.get("REPRO_DEMAND_CACHE_SIZE", str(DEMAND_CACHE_SIZE)))
 
 # Acceptance decisions closer to the boundary than this (relative) are
 # re-confirmed on a *pure* (path-independent) compiled evaluation: the
@@ -653,7 +662,7 @@ def mcmc_search_jobset(
     if proposals_per_step > 1 and not compiled:
         raise ValueError("batched proposals need the compiled evaluator")
     if demand_cache is None:
-        demand_cache = LRUCache(DEMAND_CACHE_SIZE)
+        demand_cache = LRUCache(demand_cache_size())
     if objective == "decomposed":
         return _mcmc_jobset_decomposed(
             jobset, topo, hw, iters, temperature, overlap, seed, init,

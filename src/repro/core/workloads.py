@@ -240,7 +240,19 @@ class JobSet:
         """Cluster-level union of per-tenant job-local demands.
 
         ``demands[label]`` is tenant ``label``'s demand on ``tenant.k``
-        local nodes; each is embedded under its placement and summed."""
+        local nodes; each is embedded under its placement and summed.  At
+        or above the sparse threshold
+        (:func:`~repro.core.demand.sparse_min_nodes`) the union is built
+        straight from each tenant's COO entries
+        (:func:`~repro.core.demand.union_embedded`, bit-identical) so no
+        per-tenant (n, n) matrix is ever materialized."""
+        from .demand import sparse_min_nodes, union_embedded
+
+        if self.n >= sparse_min_nodes():
+            return union_embedded(
+                ((demands[t.label], t.servers) for t in self.tenants),
+                self.n,
+            )
         parts = [
             remap_demand(demands[t.label], t.servers, self.n)
             for t in self.tenants

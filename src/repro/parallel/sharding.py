@@ -24,8 +24,10 @@ class ShardingPlan:
     fsdp: bool = True          # ZeRO-3: shard params/opt-state over data axes
     zero1: bool = False        # ZeRO-1: replicate params, shard opt state
     seq_parallel: bool = False  # shard activation sequence dim over "model"
-    # TopoOpt integration: collective schedule from the co-optimizer.
+    # TopoOpt integration: collective schedule from the co-optimizer
+    # (the searched ``Strategy.schedule`` family plus its ring strides).
     ring_strides: tuple[int, ...] = ()
+    schedule: str = "ring"
     remat: str = "full"
     loss_chunk: int = 0
 
@@ -158,7 +160,8 @@ def opt_state_sharding(param_shapes, plan: ShardingPlan, mesh: Mesh):
     if plan.zero1:
         plan = ShardingPlan(
             fsdp=True, zero1=True, seq_parallel=plan.seq_parallel,
-            ring_strides=plan.ring_strides, remat=plan.remat,
+            ring_strides=plan.ring_strides, schedule=plan.schedule,
+            remat=plan.remat,
             loss_chunk=plan.loss_chunk,
         )
         return param_sharding(param_shapes, plan, mesh, for_params=True)

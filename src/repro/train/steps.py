@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchConfig, ShapeSpec, cache_specs, input_specs
-from ..core.collectives import multi_ring_all_reduce
+from ..core.collectives import topoopt_psum_fn
 from ..models import lm
 from ..optim import Optimizer
 from ..parallel.act_sharding import ActivationPolicy, set_policy
@@ -122,14 +122,21 @@ def make_shardmap_dp_train_step(
     axis_name: str = "data",
     ring_strides: tuple[int, ...] = (1,),
     compressor=None,
+    schedule: str = "ring",
 ):
     """The §6 trainer: per-device microbatch, local grads, gradient sync via
-    multi-ring TotientPerms AllReduce (optionally int8-compressed).
+    the collective schedule the co-optimizer searched (``Strategy.schedule``):
+    multi-ring TotientPerms AllReduce by default, recursive halving-doubling
+    or multi-tree when the plan says so (optionally int8-compressed — the
+    compressor path is ring-only and ignores ``schedule``).
 
     Params/opt-state replicated; batch sharded on ``axis_name``.
     ``compressor``: parallel.compression.Compressor or None.
     """
     n = mesh.shape[axis_name]
+    sync = topoopt_psum_fn(
+        tuple(ring_strides), axis_name, schedule=schedule, group_size=n
+    )
 
     def step(params, opt_state, batch, step_idx, residual):
         def loss(p):
@@ -145,10 +152,7 @@ def make_shardmap_dp_train_step(
             )
             residual = jax.tree.map(lambda r: r[None], new_res)
         else:
-            grads = jax.tree.map(
-                lambda g: multi_ring_all_reduce(g, axis_name, ring_strides) / n,
-                grads,
-            )
+            grads = jax.tree.map(lambda g: sync(g) / n, grads)
         new_params, new_state = optimizer.update(grads, opt_state, params, step_idx)
         total = jax.lax.pmean(total, axis_name)
         return new_params, new_state, total, residual

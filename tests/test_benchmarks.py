@@ -107,3 +107,22 @@ def test_collectives_sched_bench_smoke(tmp_path, monkeypatch):
     assert max(r["max_rel_err"] for r in rows) == 0.0
     assert (tmp_path / "experiments" / "bench"
             / "BENCH_collectives_sched.json").exists()
+
+
+def test_fleet_bench_smoke(tmp_path, monkeypatch):
+    """Sparse fleet pricing must clear its gates even at smoke sizes:
+    >= 10x candidate pricing and >= 5x replans vs the forced-dense
+    baseline at 256 nodes, bitwise identity at seed sizes, and a
+    512-node / 200-tenant churn trace completing."""
+    from benchmarks import bench_fleet
+
+    monkeypatch.chdir(tmp_path)  # perf record lands in a scratch dir
+    rows = bench_fleet.run(smoke=True)
+    by_name = {r["name"]: r for r in rows}
+    assert by_name["fleet_candidate_pricing"]["speedup"] >= 10.0
+    assert by_name["fleet_replan"]["speedup"] >= 5.0
+    fleet = by_name["fleet_churn"]
+    assert fleet["n"] == 512 and fleet["n_tenants"] == 200
+    assert fleet["events_per_s"] > 0
+    assert (tmp_path / "experiments" / "bench"
+            / "BENCH_fleet.json").exists()

@@ -379,3 +379,14 @@ def test_empty_and_zero_demand():
     empty = TrafficDemand(n=6)
     assert ev.comm(empty) == topoopt_comm_time(topo, empty, HW)
     assert ev.comm_time(empty) == 0.0
+
+
+def test_demand_cache_size_env(monkeypatch):
+    """REPRO_DEMAND_CACHE_SIZE tunes the default demand memo without edits;
+    the explicit demand_cache kwarg still wins (it bypasses the default)."""
+    from repro.core.strategy_search import DEMAND_CACHE_SIZE, demand_cache_size
+
+    monkeypatch.delenv("REPRO_DEMAND_CACHE_SIZE", raising=False)
+    assert demand_cache_size() == DEMAND_CACHE_SIZE
+    monkeypatch.setenv("REPRO_DEMAND_CACHE_SIZE", "9")
+    assert demand_cache_size() == 9

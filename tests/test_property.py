@@ -110,3 +110,129 @@ def test_embedding_bag_property(rows, cols, seed):
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(ref_embedding_bag(tables, idx)), rtol=1e-5
     )
+
+
+# ---------------------------------------------------------------------------
+# Fleet-scale pricing (ISSUE 8): sparse fast paths == dense reference, bitwise
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(min_value=3, max_value=9),
+    n_flows=st.integers(min_value=1, max_value=12),
+    degraded=st.sampled_from([False, True]),
+    weighted=st.sampled_from([False, True]),
+    seed=st.integers(min_value=0, max_value=9999),
+)
+def test_maxmin_heap_bitwise_matches_dense(n, n_flows, degraded, weighted, seed):
+    """Event-queue progressive filling == the dense reference, bit for bit,
+    on random fabrics — including degraded fabrics (routes over unknown
+    links) and weighted fairness."""
+    from repro.core.simengine import Task, _FlowState, _LinkTable, _max_min_rates
+
+    rng = np.random.default_rng(seed)
+    pairs = [(i, j) for i in range(n) for j in range(n) if i != j]
+    keep = max(1, int(len(pairs) * (0.4 if degraded else 0.9)))
+    sel = rng.choice(len(pairs), size=keep, replace=False)
+    table = _LinkTable({pairs[i]: float(rng.uniform(1.0, 100.0)) for i in sel})
+
+    def mk_flows():
+        flows = []
+        rs = np.random.default_rng(seed + 1)
+        for t in range(n_flows):
+            k = int(rs.integers(2, min(n, 4) + 1))
+            route = tuple(int(v) for v in rs.choice(n, size=k, replace=False))
+            lids, cnts = table.indices_for(route)
+            flows.append(_FlowState(
+                task=Task(tid=t, kind="flow", nbytes=1e3, route=route),
+                remaining=1e3, lids=lids, cnts=cnts, hops=len(route) - 1,
+            ))
+        return flows
+
+    w = rng.uniform(0.25, 4.0, size=n_flows) if weighted else None
+    dense = _max_min_rates(mk_flows(), table.cap, weights=w, method="dense")
+    heap = _max_min_rates(mk_flows(), table.cap, weights=w, method="heap")
+    assert not np.isnan(dense).any()
+    assert np.array_equal(dense, heap)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(min_value=6, max_value=14),
+    degraded=st.sampled_from([False, True]),
+    seed=st.integers(min_value=0, max_value=999),
+)
+def test_planeval_sparse_pricing_bitwise_matches_dense(n, degraded, seed):
+    """CSR/segment-sum PlanEvaluator pricing == the dense-incidence path,
+    bit for bit: comm_time, loads, and the loads_delta move fast path."""
+    import random as pyrandom
+
+    from repro.core.netsim import HardwareSpec
+    from repro.core.planeval import PlanEvaluator
+    from repro.core.topology_finder import remove_pair, topology_finder
+    from repro.core.workloads import DLRM, MOE_16E, job_demand
+
+    hw = HardwareSpec(link_bandwidth=12.5e9, degree=4)
+    rng = pyrandom.Random(seed)
+    topo = topology_finder(
+        job_demand(DLRM, n, table_hosts=tuple(range(0, n, 3))), hw.degree
+    )
+    if degraded:
+        topo = remove_pair(topo, (0, 1))
+    sparse = PlanEvaluator(topo, hw)  # sparse by default
+    dense = PlanEvaluator(topo, hw, sparse_min_nodes_=1 << 30)
+    assert sparse._sparse and not dense._sparse
+
+    def rand_demand():
+        if rng.random() < 0.5:
+            hosts = tuple(sorted(rng.sample(range(n), rng.randint(1, n // 2))))
+            return job_demand(DLRM, n, table_hosts=hosts)
+        return job_demand(MOE_16E, n, ep_group_size=rng.choice([2, 4]))
+
+    prev = None
+    for _ in range(4):
+        d = rand_demand()
+        assert sparse.comm_time(d) == dense.comm_time(d)
+        ls, ld = sparse.loads(d), dense.loads(d)
+        assert np.array_equal(ls, ld)
+        if prev is not None:
+            assert np.array_equal(
+                sparse.loads_delta(sparse.loads(prev), prev, d),
+                dense.loads_delta(dense.loads(prev), prev, d),
+            )
+        prev = d
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=4, max_value=20),
+    n_tenants=st.integers(min_value=1, max_value=5),
+    seed=st.integers(min_value=0, max_value=999),
+)
+def test_union_embedded_bitwise_matches_dense_union(n, n_tenants, seed):
+    """Incremental (COO-embedded) union demand == remap-then-union dense
+    reference: same matrix bits, same merged groups, same steps."""
+    import random as pyrandom
+
+    from repro.core.demand import remap_demand, union_demand, union_embedded
+    from repro.core.workloads import BERT, DLRM, job_demand
+
+    rng = pyrandom.Random(seed)
+    parts = []
+    for _ in range(n_tenants):
+        k = rng.randint(2, max(2, n // 2))
+        servers = tuple(rng.sample(range(n), k))
+        spec = rng.choice([BERT, DLRM])
+        d = job_demand(spec, k) if spec is BERT else job_demand(
+            spec, k, table_hosts=tuple(range(0, k, 2))
+        )
+        parts.append((d, servers))
+
+    ref = union_demand([remap_demand(d, s, n) for d, s in parts], n)
+    fast = union_embedded(parts, n)
+    assert np.array_equal(ref.mp, fast.mp)
+    assert ref.steps == fast.steps
+    assert [(g.members, g.nbytes) for g in ref.allreduce] == [
+        (g.members, g.nbytes) for g in fast.allreduce
+    ]

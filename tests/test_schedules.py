@@ -318,3 +318,43 @@ def test_compiled_demand_keeps_connectivity_ring():
     assert demand_steps(d) == 6.0  # 2 log2(8) rounds vs ring's 14
     topo = topology_finder(d, 4)
     assert max(topo.out_degrees()) <= 4
+
+
+def test_topoopt_psum_fn_picks_searched_schedule():
+    """Runtime kernel selection follows the searched ``Strategy.schedule``:
+    the trainer no longer always rings (ROADMAP smaller item)."""
+    from dataclasses import replace
+
+    from jax import lax
+
+    from repro.core.collectives import (
+        multi_ring_all_reduce,
+        multi_tree_all_reduce,
+        recursive_hd_all_reduce,
+        topoopt_psum_fn,
+    )
+
+    # Pre-schedule behavior is the default: strides ring, no strides psum.
+    assert topoopt_psum_fn((1, 3), "x").func is multi_ring_all_reduce
+    assert topoopt_psum_fn((), "x").func is lax.psum
+
+    # A searched strategy carrying the HD schedule drives the HD kernel.
+    s = replace(default_strategy(BERT), schedule="recursive_hd")
+    fn = topoopt_psum_fn((1, 2, 4), "x", schedule=s.schedule, group_size=8)
+    assert fn.func is recursive_hd_all_reduce
+
+    # The strict HD kernel cannot run a non-power-of-two group: selection
+    # folds back to the ring family (what the demand compiler does with
+    # straggler nodes), never raising at trace time.
+    fn = topoopt_psum_fn((1, 5), "x", schedule="recursive_hd", group_size=6)
+    assert fn.func is multi_ring_all_reduce
+
+    # Multi-tree takes the TotientPerms ring orders as tree seeds.
+    strides = schedule_strides(8, "multi_tree", 2)
+    fn = topoopt_psum_fn(strides, "x", schedule="multi_tree", group_size=8)
+    assert fn.func is multi_tree_all_reduce
+    assert fn.keywords["strides"] == strides
+    assert topoopt_psum_fn((), "x", schedule="multi_tree").func is lax.psum
+
+    with pytest.raises(ValueError, match="unknown collective schedule"):
+        topoopt_psum_fn((1,), "x", schedule="butterfly")

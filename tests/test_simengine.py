@@ -428,3 +428,76 @@ def test_scenario_requires_unique_job_names():
                 n=2,
             )
         )
+
+
+# ---------------------------------------------------------------------------
+# Unknown (inf-capacity) links: explicit masking in the filling loop
+# ---------------------------------------------------------------------------
+
+
+def _mk_flows(routes, table):
+    from repro.core.simengine import _FlowState
+
+    flows = []
+    for i, route in enumerate(routes):
+        lids, cnts = table.indices_for(route)
+        flows.append(
+            _FlowState(
+                task=Task(tid=i, kind="flow", nbytes=1000.0, route=route),
+                remaining=1000.0,
+                lids=lids,
+                cnts=cnts,
+                hops=len(route) - 1,
+            )
+        )
+    return flows
+
+
+def test_unknown_links_no_nan_and_methods_bitwise_identical():
+    """Fabric with unknown links: the filling loop must not manufacture
+    nans (the old ``inf - inf`` residual update), flows constrained only
+    by unknown links run unconstrained, and heap == dense bit-for-bit."""
+    from repro.core.simengine import _LinkTable, _max_min_rates
+
+    # Known links (0,1), (1,2); routes also cross unknown (2,3), (3,4).
+    table = _LinkTable({(0, 1): 100.0, (1, 2): 50.0})
+    routes = [
+        (0, 1, 2),  # both known links
+        (0, 1),  # shares (0,1)
+        (2, 3, 4),  # only unknown links -> unconstrained
+        (1, 2, 3),  # known (1,2) + unknown (2,3)
+    ]
+    flows = _mk_flows(routes, table)
+    dense = _max_min_rates(flows, table.cap, method="dense")
+    heap = _max_min_rates(_mk_flows(routes, table), table.cap, method="heap")
+    assert not np.isnan(dense).any() and not np.isnan(heap).any()
+    assert np.isposinf(dense[2])  # unknown-only flow is unconstrained
+    # Bottlenecks: (1,2) at 50/2 -> flows 0 and 3 get 25; then flow 1
+    # takes the rest of (0,1).
+    assert dense[0] == 25.0 and dense[3] == 25.0 and dense[1] == 75.0
+    assert np.array_equal(dense, heap)
+
+
+def test_unknown_only_fabric_completes():
+    """A run whose every route crosses only unknown links finishes at
+    propagation-delay time instead of tripping the deadlock path."""
+    sim = FlowSimVec({(9, 10): 100.0})  # no route uses the known link
+    tasks = [Task(tid=0, kind="flow", nbytes=5000.0, route=(0, 1, 2))]
+    r = sim.run(tasks)
+    assert r.makespan == pytest.approx(2 * PROPAGATION_DELAY)
+    assert 0 in r.finish_times
+
+
+def test_weighted_unknown_links_methods_agree():
+    from repro.core.simengine import _LinkTable, _max_min_rates
+
+    table = _LinkTable({(0, 1): 100.0, (1, 2): 50.0, (2, 0): 30.0})
+    routes = [(0, 1, 2), (1, 2, 0), (2, 0, 1), (0, 1), (5, 6, 7)]
+    weights = np.array([1.0, 2.5, 0.5, 1.0, 3.0])
+    flows = _mk_flows(routes, table)
+    dense = _max_min_rates(flows, table.cap, weights=weights, method="dense")
+    heap = _max_min_rates(
+        _mk_flows(routes, table), table.cap, weights=weights, method="heap"
+    )
+    assert not np.isnan(dense).any()
+    assert np.array_equal(dense, heap)
