@@ -5,9 +5,8 @@ from __future__ import annotations
 
 import time
 
-from repro.core.netsim import (
-    HardwareSpec,
-    compute_time,
+from repro.core.netsim import HardwareSpec, compute_time
+from repro.core.simengine import (
     fat_tree_comm_time,
     ideal_switch_comm_time,
     iteration_time,

@@ -1,0 +1,245 @@
+"""Chaos benchmark: seeded fault storms against the fabric (§7 hardening).
+
+Sweeps fiber MTBF from heavy to light over randomized transient-fault
+storms (:class:`repro.core.faults.FaultModel`: independent fiber flaps plus
+a correlated server domain and an OCS-stride domain) and drives them at two
+granularities:
+
+* **engine** — the storm as transient
+  :class:`~repro.core.simengine.LinkFailure` events (``repair_time`` set)
+  against a single-job scenario with checkpoint-restore restart costs
+  (:func:`~repro.core.costmodel.checkpoint_restart_s`); records per-job
+  downtime, restart counts, availability, and goodput.
+* **driver** — the storm as an iteration-granularity fail/repair trace
+  through :func:`~repro.core.online.run_online_jobset`, static (§7 repair
+  only) vs reactive (hardened replan path: validation, deadline, bounded
+  retries + backoff).
+
+Gating invariants (an ``AssertionError`` fails the bench):
+
+* no crash / no wedge — every run completes with a finite makespan and the
+  hardened controller never exceeds its bounded retry budget;
+* byte conservation — the storm run delivers exactly the fault-free run's
+  bytes (transient cuts reroute and resume, they never lose traffic);
+* reactive >= static-repair goodput (within ``SLACK``) on every storm.
+
+A perf record lands in ``experiments/bench/BENCH_faults.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.alternating import co_optimize_jobset
+from repro.core.costmodel import OCS_FIBER_MOVE_S, checkpoint_restart_s
+from repro.core.faults import FaultModel, server_domain, stride_domain
+from repro.core.netsim import HardwareSpec, compute_time
+from repro.core.online import (
+    ReoptPolicy,
+    links_from_topology,
+    run_online_jobset,
+)
+from repro.core.simengine import Scenario, SimEngine, SimJob, iteration_tasks
+from repro.core.workloads import BERT, DLRM, JobSet, TenantJob, job_demand
+
+DEGREE = 4
+PERF_RECORD = os.path.join("experiments", "bench", "BENCH_faults.json")
+# Reactive must stay within this fraction of the static-repair operator's
+# goodput on every storm (it usually *beats* static; the slack absorbs
+# pause-charging noise on tiny smoke fabrics).
+SLACK = 0.10
+
+
+def _jobset(n: int) -> JobSet:
+    third = n // 3
+    return JobSet(n=n, tenants=[
+        TenantJob(spec=DLRM, servers=tuple(range(0, third)), name="dlrm"),
+        TenantJob(spec=BERT, servers=tuple(range(third, 2 * third)),
+                  name="bert"),
+    ])
+
+
+def _storm(topo, horizon: float, mtbf_scale: float, seed: int) -> FaultModel:
+    """A randomized storm over ``topo``'s live fibers: independent flaps at
+    ``mtbf_scale * horizon`` mean inter-failure time, plus one correlated
+    server domain and one OCS-stride domain flapping an order of magnitude
+    more rarely."""
+    pairs = sorted({(min(a, b), max(a, b)) for a, b in topo.graph.edges()})
+    domains = [
+        server_domain(1, pairs, mtbf=8 * mtbf_scale * horizon,
+                      mttr=0.05 * horizon),
+        stride_domain(topo.n, 1, mtbf=12 * mtbf_scale * horizon,
+                      mttr=0.05 * horizon),
+    ]
+    return FaultModel(
+        n=topo.n, links=tuple(pairs), link_mtbf=mtbf_scale * horizon,
+        link_mttr=0.1 * horizon, domains=domains, seed=seed,
+    )
+
+
+def _engine_storm_row(n, hw, topo, mtbf_scale, seed):
+    """Engine granularity: transient LinkFailures + restart costs against a
+    single-DLRM scenario; gates byte conservation and availability."""
+    demand = job_demand(DLRM, n)
+    comp = compute_time(DLRM.flops_per_sample * DLRM.batch_per_gpu * n, n, hw)
+    links = links_from_topology(topo, hw)
+    jobs = [SimJob("dlrm", iteration_tasks(topo, demand,
+                                           compute_duration=comp))]
+    eng = SimEngine(hw)
+    base = eng.run(Scenario(links=links, jobs=jobs, n=n))
+    assert np.isfinite(base.makespan) and not base.stalled
+
+    horizon = base.makespan
+    fm = _storm(topo, horizon, mtbf_scale, seed)
+    failures = tuple(fm.link_failures(horizon))
+    restart = checkpoint_restart_s(DLRM.state_bytes)
+    chaos = eng.run(Scenario(
+        links=links, jobs=jobs, n=n, failures=failures,
+        restart_s={"dlrm": restart},
+    ))
+
+    # Gate: no crash, bytes conserved, sane availability accounting.
+    assert np.isfinite(chaos.makespan), "storm run never finished"
+    assert chaos.delivered == base.delivered, (
+        f"bytes lost under storm: {chaos.delivered} != {base.delivered}"
+    )
+    avail = chaos.availability("dlrm")
+    assert 0.0 <= avail <= 1.0, f"availability {avail} out of range"
+    return dict(
+        n_failures=len(failures),
+        downtime_s=chaos.downtime.get("dlrm", 0.0),
+        restarts=chaos.restarts.get("dlrm", 0),
+        availability=avail,
+        goodput=chaos.goodput.get("dlrm", 0.0),
+        base_goodput=base.goodput.get("dlrm", 0.0),
+        makespan_s=chaos.makespan,
+        base_makespan_s=base.makespan,
+    )
+
+
+def _driver_storm_row(n, hw, jobset, plan, n_iters, mtbf_scale, seed):
+    """Driver granularity: the storm as a fail/repair trace, static §7
+    repair vs the hardened reactive replan path; gates the goodput floor
+    and the bounded-retry invariant."""
+    calm = run_online_jobset(jobset, hw, policy=ReoptPolicy.never(),
+                             n_iters=1, seed=0, plan=plan)
+    iter_est = max(calm.total_time, 1e-9)
+    fm = _storm(plan.topology, n_iters * iter_est, mtbf_scale * n_iters,
+                seed)
+    trace = fm.events(n_iters, iter_est)
+
+    static = run_online_jobset(
+        jobset, hw, policy=ReoptPolicy.never(), trace=trace,
+        n_iters=n_iters, seed=0, plan=plan)
+    reactive_policy = ReoptPolicy.reactive(
+        fiber_move_latency=OCS_FIBER_MOVE_S, adaptive=True)
+    from dataclasses import replace
+    reactive_policy = replace(
+        reactive_policy, replan_deadline=30.0, replan_retries=1,
+        validate_plans=True)
+    reactive = run_online_jobset(
+        jobset, hw, policy=reactive_policy, trace=trace,
+        n_iters=n_iters, seed=0, plan=plan)
+
+    # Gates: both operators finish, reactive keeps the goodput floor, and
+    # a storm never wedges the controller in an unbounded replan loop.
+    assert np.isfinite(static.total_time) and np.isfinite(
+        reactive.total_time), "storm wedged a driver run"
+    ratio = static.total_time / max(reactive.total_time, 1e-12)
+    assert ratio >= 1.0 - SLACK, (
+        f"reactive goodput fell {ratio:.3f}x below static repair"
+    )
+    n_events = sum(1 for ev in trace if ev.kind in ("fail", "repair"))
+    max_opt_runs = (1 + 1) * max(n_events, 1)  # retries+1 per trigger
+    n_opt_records = sum(
+        1 for r in reactive.log
+        if r.trigger.endswith(":error") or r.trigger.endswith(":deadline")
+    )
+    assert n_opt_records <= max_opt_runs, "retry budget exceeded"
+    return dict(
+        n_trace_events=len(trace),
+        static_s=static.total_time,
+        reactive_s=reactive.total_time,
+        static_over_reactive=ratio,
+        reactive_replans=reactive.n_replans,
+        edges_moved=reactive.edges_moved,
+        refused=list(reactive.refused),
+    )
+
+
+def run(smoke: bool = False) -> list[dict]:
+    n = 9 if smoke else 18
+    n_iters = 3 if smoke else 6
+    rounds, iters = (1, 15) if smoke else (2, 60)
+    mtbf_scales = [0.5, 4.0] if smoke else [0.25, 1.0, 4.0]
+    storm_seeds = [0] if smoke else [0, 1]
+    hw = HardwareSpec(link_bandwidth=12.5e9, degree=DEGREE)
+
+    jobset = _jobset(n)
+    plan = co_optimize_jobset(jobset, hw, rounds=rounds, mcmc_iters=iters,
+                              seed=1)
+
+    rows: list[dict] = []
+    for mtbf_scale in mtbf_scales:
+        t0 = time.perf_counter()
+        eng_rows = [
+            _engine_storm_row(n, hw, plan.topology, mtbf_scale, seed)
+            for seed in storm_seeds
+        ]
+        drv_rows = [
+            _driver_storm_row(n, hw, jobset, plan, n_iters, mtbf_scale, seed)
+            for seed in storm_seeds
+        ]
+        us = (time.perf_counter() - t0) * 1e6
+        avail = float(np.mean([r["availability"] for r in eng_rows]))
+        restarts = int(sum(r["restarts"] for r in eng_rows))
+        ratio = float(np.mean([r["static_over_reactive"] for r in drv_rows]))
+        rows.append(dict(
+            name=f"faults_mtbf_{mtbf_scale:g}x",
+            us_per_call=us,
+            derived=(
+                f"avail={avail:.3f};restarts={restarts};"
+                f"static/reactive={ratio:.2f}"
+            ),
+            mtbf_scale=mtbf_scale,
+            availability=avail,
+            restarts=restarts,
+            static_over_reactive=ratio,
+            engine=eng_rows,
+            driver=drv_rows,
+        ))
+
+    _write_perf_record(rows, smoke=smoke)
+    return rows
+
+
+def _write_perf_record(rows: list[dict], smoke: bool) -> None:
+    """BENCH_faults.json: the headline numbers CI tracks over time."""
+    os.makedirs(os.path.dirname(PERF_RECORD), exist_ok=True)
+    record = dict(
+        bench="faults",
+        smoke=smoke,
+        points=[
+            dict(
+                mtbf_scale=r["mtbf_scale"],
+                availability=r["availability"],
+                restarts=r["restarts"],
+                static_over_reactive=r["static_over_reactive"],
+            )
+            for r in rows
+        ],
+        worst_availability=min(r["availability"] for r in rows),
+        total_restarts=sum(r["restarts"] for r in rows),
+        wall_us=sum(r["us_per_call"] for r in rows),
+    )
+    with open(PERF_RECORD, "w") as f:
+        json.dump(record, f, indent=1)
+
+
+if __name__ == "__main__":
+    for row in run(smoke=os.environ.get("SMOKE", "") == "1"):
+        print(row["name"], row["derived"])

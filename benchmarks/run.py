@@ -27,6 +27,7 @@ BENCHES = [
     ("collectives_sched", "Collective-schedule co-optimization vs ring-only"),
     ("roofline", "Roofline dry-run terms"),
     ("fleet", "Fleet-scale pricing: sparse vs dense at 256-1024 nodes"),
+    ("faults", "Chaos: MTBF storm sweep, availability + hardened replanning"),
 ]
 
 

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import HardwareSpec, topology_finder
-from repro.core.netsim import ideal_switch_comm_time, topoopt_comm_time
+from repro.core.simengine import ideal_switch_comm_time, topoopt_comm_time
 from repro.core.workloads import DLRM, job_demand
 from repro.models import dlrm
 from repro.optim import adamw, constant

@@ -5,7 +5,11 @@ inspect the TopoOpt plan.
 """
 
 from repro.core import HardwareSpec, alternating_optimize
-from repro.core.netsim import fat_tree_comm_time, ideal_switch_comm_time, topoopt_comm_time
+from repro.core.simengine import (
+    fat_tree_comm_time,
+    ideal_switch_comm_time,
+    topoopt_comm_time,
+)
 from repro.core.topology_finder import effective_diameter
 from repro.core.workloads import DLRM
 

@@ -33,7 +33,7 @@ from .demand import (
     remap_demand,
     union_demand,
 )
-from .netsim import HardwareSpec, compute_time, iteration_time
+from .netsim import HardwareSpec, _iteration_time as iteration_time, compute_time
 from .online import (
     JobSetController,
     ReoptController,

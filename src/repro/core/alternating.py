@@ -34,7 +34,12 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from .demand import TrafficDemand
-from .netsim import HardwareSpec, compute_time, iteration_time, topoopt_comm_time
+from .netsim import (
+    HardwareSpec,
+    _iteration_time as iteration_time,
+    _topoopt_comm_time as topoopt_comm_time,
+    compute_time,
+)
 from .planeval import JobSetEvaluator, LRUCache
 from .simengine import SimEngine
 from .strategy_search import (

@@ -74,6 +74,23 @@ def migration_cost(
     )
 
 
+def checkpoint_restart_s(
+    state_bytes: float,
+    checkpoint_bw: float = CHECKPOINT_RESTORE_BW,
+    restart_s: float = MIGRATION_RESTART_S,
+) -> float:
+    """Seconds a *fault-induced* restart pauses a job: reload ``state_bytes``
+    of model state from the last checkpoint at ``checkpoint_bw`` plus the
+    process-teardown / collective-re-init floor.  This is
+    :func:`migration_cost` without the fiber churn term — a job stalled by a
+    fabric partition restores in place, it does not re-seat fibers.  Feed
+    the result into :attr:`repro.core.simengine.Scenario.restart_s` to price
+    partition-survival restarts."""
+    if state_bytes < 0:
+        raise ValueError("checkpoint_restart_s needs non-negative state_bytes")
+    return restart_s + state_bytes / checkpoint_bw
+
+
 def _table2(link_gbps: float) -> dict:
     key = link_gbps * 1e9
     if key not in TABLE2:

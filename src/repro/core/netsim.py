@@ -3,8 +3,12 @@
 The preferred entry point is :class:`repro.core.simengine.SimEngine`, which
 re-exports everything here and unifies the three simulation granularities
 (fluid analysis, event-driven max-min-fair flows, scenario runs with
-arrivals / failures / OCS reconfiguration).  This module keeps the fluid
-primitives themselves:
+arrivals / failures / OCS reconfiguration).  Importing the subsumed entry
+points (``topoopt_comm_time``, ``ideal_switch_comm_time``,
+``fat_tree_comm_time``, ``iteration_time``) from *this* module emits a
+:class:`DeprecationWarning`; the same names are warning-free on
+``repro.core.simengine``.  This module keeps the fluid primitives
+themselves:
 
 * ``topoopt_comm_time`` — every flow follows its routes, link loads
   accumulate, comm time = max link (bytes / bandwidth); AllReduce groups
@@ -18,6 +22,7 @@ Fabrics other than TopoOpt (expander, SiP-ML ring) are built in
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
@@ -82,7 +87,7 @@ def mp_flows(demand: TrafficDemand) -> Flows:
     return Flows(srcs, dsts, demand.mp[srcs, dsts])
 
 
-def topoopt_comm_time(
+def _topoopt_comm_time(
     topo: Topology, demand: TrafficDemand, hw: HardwareSpec
 ) -> dict[str, float]:
     """Fluid comm time on a TopoOpt direct-connect topology.
@@ -202,7 +207,7 @@ def _routing_with_fallback(topo: Topology, flows) -> "RoutingTable":
     return merged
 
 
-def ideal_switch_comm_time(demand: TrafficDemand, hw: HardwareSpec) -> float:
+def _ideal_switch_comm_time(demand: TrafficDemand, hw: HardwareSpec) -> float:
     """Ideal non-blocking switch with node bandwidth d*B (§5.1): AllReduce at
     full node bandwidth + per-node in/out bottleneck for MP."""
     t = 0.0
@@ -215,7 +220,7 @@ def ideal_switch_comm_time(demand: TrafficDemand, hw: HardwareSpec) -> float:
     return max(t, t + node_bottleneck / hw.node_bandwidth)
 
 
-def fat_tree_comm_time(
+def _fat_tree_comm_time(
     demand: TrafficDemand, hw: HardwareSpec, bandwidth_fraction: float
 ) -> float:
     """Cost-equivalent fat-tree: one NIC per server with d*B' bandwidth where
@@ -228,10 +233,10 @@ def fat_tree_comm_time(
         compute_efficiency=hw.compute_efficiency,
         link_latency=hw.link_latency,
     )
-    return ideal_switch_comm_time(demand, scaled)
+    return _ideal_switch_comm_time(demand, scaled)
 
 
-def iteration_time(
+def _iteration_time(
     comm_time: float,
     compute_time: float,
     overlap: float = 0.0,
@@ -244,3 +249,30 @@ def iteration_time(
 
 def compute_time(flops_per_iteration: float, n: int, hw: HardwareSpec) -> float:
     return flops_per_iteration / (n * hw.compute_flops * hw.compute_efficiency)
+
+
+# -- deprecated shim surface -------------------------------------------------
+# The scenario engine subsumed these entry points; they stay importable
+# here for compatibility but warn.  Warning-free homes:
+# ``repro.core.simengine.<name>`` (or ``SimEngine.comm_time`` /
+# ``SimEngine.iteration_time`` for the fluid facade).
+
+_DEPRECATED_SHIMS = {
+    "topoopt_comm_time": _topoopt_comm_time,
+    "ideal_switch_comm_time": _ideal_switch_comm_time,
+    "fat_tree_comm_time": _fat_tree_comm_time,
+    "iteration_time": _iteration_time,
+}
+
+
+def __getattr__(name: str):
+    shim = _DEPRECATED_SHIMS.get(name)
+    if shim is not None:
+        warnings.warn(
+            f"repro.core.netsim.{name} is deprecated; import it from "
+            "repro.core.simengine (or use SimEngine) instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return shim
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -8,19 +8,24 @@ A 10 ms reconfiguration pause is charged on every rebuild (§5.1).
 
 The epoch scheduling itself lives in :class:`repro.core.simengine.SimEngine`
 (``OCSPolicy`` scenarios and ``reconfig_drain``); this module only builds
-one topology from one demand snapshot.
+one topology from one demand snapshot.  Importing ``ocs_topology`` /
+``RECONFIG_WINDOW`` / ``RECONFIG_LATENCY`` from *this* module emits a
+:class:`DeprecationWarning`; the same names are warning-free on
+``repro.core.simengine``.
 """
 
 from __future__ import annotations
 
+import warnings
+
 import networkx as nx
 import numpy as np
 
-RECONFIG_WINDOW = 50e-3
-RECONFIG_LATENCY = 10e-3
+_RECONFIG_WINDOW = 50e-3
+_RECONFIG_LATENCY = 10e-3
 
 
-def ocs_topology(
+def _ocs_topology(
     n: int, demand: np.ndarray, degree: int, ensure_connected: bool = True
 ) -> nx.MultiDiGraph:
     """Algorithm 5: greedy max-demand link allocation with halving."""
@@ -86,3 +91,26 @@ def _two_edge_replacement(
         g.remove_edge(x, y, key=next(iter(g[x][y])))
         g.add_edge(u, y, kind="repair")
         g.add_edge(x, v, kind="repair")
+
+
+# -- deprecated shim surface -------------------------------------------------
+
+_DEPRECATED_SHIMS = {
+    "ocs_topology": lambda: _ocs_topology,
+    "RECONFIG_WINDOW": lambda: _RECONFIG_WINDOW,
+    "RECONFIG_LATENCY": lambda: _RECONFIG_LATENCY,
+}
+
+
+def __getattr__(name: str):
+    shim = _DEPRECATED_SHIMS.get(name)
+    if shim is not None:
+        warnings.warn(
+            f"repro.core.ocs_reconfig.{name} is deprecated; import it from "
+            "repro.core.simengine (or drive OCS epochs via "
+            "SimEngine + OCSPolicy) instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return shim()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

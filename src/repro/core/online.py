@@ -77,7 +77,7 @@ from .alternating import (
 from .costmodel import MIGRATION_RESTART_S, migration_cost
 from .demand import remap_demand
 from .netsim import HardwareSpec, compute_time
-from .ocs_reconfig import RECONFIG_LATENCY
+from .ocs_reconfig import _RECONFIG_LATENCY as RECONFIG_LATENCY
 from .planeval import JobSetEvaluator
 from .simengine import (
     DeadlineFairness,
@@ -95,7 +95,7 @@ from .simengine import (
     links_from_topology,
 )
 from .strategy_search import Strategy, default_strategy
-from .topology_finder import Topology, remove_pair
+from .topology_finder import Topology, remove_pair, restore_pair
 from .workloads import JobSet, JobSpec, TenantJob
 
 __all__ = [
@@ -233,6 +233,29 @@ class ReoptPolicy:
     # "recursive_hd", "multi_tree").  None / ("ring",) keeps the search
     # (and its RNG streams) byte-identical to the pre-schedule behaviour.
     schedules: tuple[str, ...] | None = None
+    # -- robustness hardening (fault storms) --------------------------------
+    # Wall-clock budget in seconds for one warm optimizer run inside a
+    # replan.  The optimizer is not interruptible, so the deadline is
+    # checked post-hoc: an over-budget run is discarded and retried with a
+    # bumped seed (the last permitted attempt's result is kept either way
+    # rather than thrown away).  None disables the deadline.
+    replan_deadline: float | None = None
+    # Seed-bumped retries after an optimizer raise or deadline overrun
+    # before the controller gives up on this trigger and keeps the
+    # last-known-good plan (+ §7 repair).  Exhausting every attempt arms an
+    # exponential backoff — base ``retry_backoff`` seconds (None: the max
+    # of ``replan_latency``/``min_interval``/1 ms), doubling per
+    # consecutive exhaustion — so a fault storm cannot wedge the controller
+    # in a replan-crash loop.
+    replan_retries: int = 2
+    retry_backoff: float | None = None
+    # Validate every candidate plan before adoption: per-node degree
+    # budgets, no edge on a dead pair, per-node capacity conservation, and
+    # tenant-ring connectivity on the *live* degraded fabric.  A plan that
+    # fails a check the incumbent passes is rejected in favour of the
+    # last-known-good plan + §7 repair.  Valid plans (everything a healthy
+    # optimizer emits) adopt byte-identically to the unvalidated path.
+    validate_plans: bool = True
 
     @classmethod
     def never(cls) -> "ReoptPolicy":
@@ -321,6 +344,17 @@ class ReoptController(ScenarioObserver):
         self.dead: set[tuple[int, int]] = set()
         self.n_replans = 0
         self.total_edges_moved = 0
+        # Hardened replan path: retry nonce folded into the warm seed (0 on
+        # first attempts — byte-identical to the pre-hardening seeds),
+        # consecutive give-ups, and the backoff gate they arm.
+        self._retry_nonce = 0
+        self._replan_failures = 0
+        self._backoff_until = -np.inf
+        self.n_rejected_plans = 0  # plans refused by validation
+        self.n_optimizer_errors = 0  # raises + deadline overruns survived
+        # pair -> graph edges _note_dead removed, so repair() can restore
+        # the incumbent fabric in place.
+        self._cut_edges: dict[tuple[int, int], list] = {}
         # Pause of the most recent *applied* PlanUpdate (drivers charge the
         # tail of a pause that hangs past the last task finish).
         self.last_pause = 0.0
@@ -375,7 +409,7 @@ class ReoptController(ScenarioObserver):
             self.job, self.n, self.hw,
             rounds=self.policy.rounds,
             mcmc_iters=self.policy.mcmc_iters,
-            seed=self.seed + 1 + self.n_replans,
+            seed=self.seed + 1 + self.n_replans + 997 * self._retry_nonce,
             warm_topology=self.topology,
             warm_strategy=self.strategy,
             forbidden=tuple(self.dead),
@@ -566,7 +600,26 @@ class ReoptController(ScenarioObserver):
             self._probe_cache = None
         self.dead.add(pair)
         if self._topology is not None:
+            # Snapshot what the cut takes out so a transient fault can be
+            # healed in place (restore_pair) when the repair lands.
+            g = self._topology.graph
+            self._cut_edges[pair] = [
+                (a, b, dict(data))
+                for a, b in (pair, (pair[1], pair[0]))
+                if g.has_edge(a, b)
+                for data in g[a][b].values()
+            ]
             self._topology = remove_pair(self._topology, pair)
+
+    def _note_repaired(self, pair: tuple[int, int]) -> None:
+        """A dead pair came back: lift the forbidden constraint, restore the
+        incumbent's cut edges in place, and drop the probe cache (capacity
+        improved, so any cached estimate is stale)."""
+        self.dead.discard(pair)
+        self._probe_cache = None
+        edges = self._cut_edges.pop(pair, None)
+        if edges and self._topology is not None:
+            self._topology = restore_pair(self._topology, pair, edges)
 
     def fail(self, link: tuple[int, int], now: float = 0.0) -> float:
         """A node pair dies.  Always records the pair and degrades the
@@ -578,6 +631,21 @@ class ReoptController(ScenarioObserver):
         self._note_dead(pair)
         if self.policy.on_failure:
             update = self._maybe_replan(now, "failure")
+            if update is not None:
+                return update.pause
+        return 0.0
+
+    def repair(self, link: tuple[int, int], now: float = 0.0) -> float:
+        """A previously failed pair heals (transient fault over).  Always
+        restores the incumbent's cut capacity; the failure trigger, if
+        enabled, may additionally replan to reclaim the pair.  Returns the
+        pause charged (seconds)."""
+        pair = (min(link), max(link))
+        if pair not in self.dead:
+            return 0.0
+        self._note_repaired(pair)
+        if self.policy.on_failure:
+            update = self._maybe_replan(now, "repair")
             if update is not None:
                 return update.pause
         return 0.0
@@ -602,17 +670,152 @@ class ReoptController(ScenarioObserver):
             topo=res.topology, strategy=res.strategy
         )
 
+    def _retry_backoff_base(self) -> float:
+        if self.policy.retry_backoff is not None:
+            return self.policy.retry_backoff
+        return max(self.policy.replan_latency, self.policy.min_interval, 1e-3)
+
+    def _guarded_optimize(self, now: float, trigger: str):
+        """Run the warm optimizer under the hardening policy: a post-hoc
+        wall-clock deadline (``replan_deadline``) and bounded seed-bumped
+        retries when it raises or overruns.  Returns the optimizer result,
+        or ``None`` after exhausting every attempt — the caller then keeps
+        the last-known-good plan (+ §7 repair) and the controller backs off
+        exponentially, so a fault storm cannot wedge it in a replan-crash
+        loop."""
+        import time as _time
+
+        deadline = self.policy.replan_deadline
+        attempts = 1 + max(int(self.policy.replan_retries), 0)
+        for attempt in range(attempts):
+            self._retry_nonce = attempt
+            t0 = _time.perf_counter()
+            try:
+                res = self._run_optimizer(warm=True)
+            except Exception:
+                self.n_optimizer_errors += 1
+                self.log.append(ReplanRecord(
+                    time=now, trigger=f"{trigger}:error", replanned=False))
+                continue
+            finally:
+                self._retry_nonce = 0
+            if (
+                deadline is not None
+                and _time.perf_counter() - t0 > deadline
+                and attempt + 1 < attempts
+            ):
+                # Over budget with retry budget left: discard, try another
+                # seed.  The last permitted attempt keeps its result —
+                # better a late plan than none.
+                self.n_optimizer_errors += 1
+                self.log.append(ReplanRecord(
+                    time=now, trigger=f"{trigger}:deadline", replanned=False))
+                continue
+            self._replan_failures = 0
+            self._backoff_until = -np.inf
+            return res
+        self._replan_failures += 1
+        self._backoff_until = now + self._retry_backoff_base() * (
+            2 ** (self._replan_failures - 1)
+        )
+        self.last_replan = now
+        return None
+
+    def _required_groups(self) -> list[tuple[int, ...]]:
+        """Server groups that must stay mutually reachable on the live
+        fabric for the plan to be servable.  The single resident job spans
+        every node; :class:`JobSetController` lists per-tenant placements."""
+        return [tuple(range(self.n))] if self.job is not None else []
+
+    def plan_violations(self, topo: Topology) -> list[str]:
+        """Validate a candidate topology against the live degraded fabric.
+
+        Checks: per-node degree budgets (with the +1 slack §7 repair
+        donations get), no edge on a dead pair, per-node capacity
+        conservation, and required-group connectivity on the surviving
+        links.  Returns human-readable violations; empty means valid."""
+        out: list[str] = []
+        budget = topo.degree + 1
+        outdeg = Counter(a for a, _ in topo.graph.edges())
+        indeg = Counter(b for _, b in topo.graph.edges())
+        worst_out = max(outdeg.values(), default=0)
+        worst_in = max(indeg.values(), default=0)
+        if worst_out > budget or worst_in > budget:
+            out.append(
+                f"degree budget exceeded: out={worst_out}/in={worst_in} "
+                f"> {budget}"
+            )
+        on_dead = sorted({
+            (min(a, b), max(a, b))
+            for a, b in topo.graph.edges()
+            if (min(a, b), max(a, b)) in self.dead
+        })
+        if on_dead:
+            out.append(f"edges on dead pairs {on_dead[:4]}")
+        links = self._links_for(topo)
+        cap_budget = budget * self.hw.link_bandwidth * (1.0 + 1e-9)
+        node_cap: dict[int, float] = {}
+        for (a, _b), c in links.items():
+            node_cap[a] = node_cap.get(a, 0.0) + c
+        worst_cap = max(node_cap.values(), default=0.0)
+        if worst_cap > cap_budget:
+            out.append(
+                f"capacity conservation violated: {worst_cap:.3g} B/s out "
+                f"of one node > {cap_budget:.3g}"
+            )
+        groups = [g for g in self._required_groups() if len(g) > 1]
+        if groups:
+            import networkx as nx
+
+            g = nx.DiGraph()
+            g.add_nodes_from(range(self.n))
+            g.add_edges_from(links.keys())
+            comp_of: dict[int, int] = {}
+            for ci, comp in enumerate(nx.strongly_connected_components(g)):
+                for v in comp:
+                    comp_of[v] = ci
+            for grp in groups:
+                if len({comp_of[v] for v in grp}) > 1:
+                    out.append(
+                        f"servers {tuple(grp)[:6]} split across fabric "
+                        "partitions"
+                    )
+        return out
+
     def replan(self, now: float, trigger: str) -> PlanUpdate | None:
         """Re-run the alternating optimizer warm-started from the incumbent,
         forbidding dead pairs; adopt whichever of {new plan, degraded
         incumbent} probes faster.  Returns the PlanUpdate to apply — or
         ``None`` when the adaptive gate skips (the probed win would not pay
-        for the churn-proportional pause)."""
+        for the churn-proportional pause), the optimizer kept failing
+        (:meth:`_guarded_optimize`), or validation rejected the candidate
+        (:meth:`plan_violations`) — in the latter two cases the
+        last-known-good plan + §7 repair stays in force."""
         self._replan_now = now
         self.ensure_plan()
         est_before = self.estimated_iter_time()
-        res = self._run_optimizer(warm=True)
+        res = self._guarded_optimize(now, trigger)
+        if res is None:
+            return None
         est_new = self._estimate_plan(res)
+        if self.policy.validate_plans and est_new <= est_before:
+            # About to adopt: validate first.  A candidate that probes well
+            # but breaks a fabric invariant (degree budget, dead-pair edge,
+            # capacity conservation, tenant-ring connectivity) is refused
+            # and the last-known-good incumbent + §7 repair stays in force.
+            # (When the *incumbent* fails the same checks — e.g. the fabric
+            # is genuinely partitioned — the est comparison decides, as
+            # before.)  Candidates the est comparison would reject anyway
+            # take the unvalidated keep-incumbent path below, unchanged.
+            bad = self.plan_violations(res.topology)
+            if bad and not self.plan_violations(self.topology):
+                self.n_rejected_plans += 1
+                self.last_replan = now
+                self.log.append(ReplanRecord(
+                    time=now, trigger=f"{trigger}:invalid", replanned=False,
+                    est_before=est_before, est_after=est_new,
+                ))
+                return None
         adopt = est_new <= est_before
         edges_moved = edge_churn(self.topology, res.topology) if adopt else 0
         pause = self._replan_pause(edges_moved)
@@ -660,6 +863,13 @@ class ReoptController(ScenarioObserver):
         )
 
     def _maybe_replan(self, now: float, trigger: str) -> PlanUpdate | None:
+        if now < self._backoff_until:
+            # Optimizer-failure backoff: a storm of triggers while replans
+            # keep raising/overrunning must not re-run the optimizer on
+            # every event.
+            self.log.append(ReplanRecord(
+                time=now, trigger=f"{trigger}:backoff", replanned=False))
+            return None
         gate = (
             self._adaptive_interval if self.policy.adaptive
             else self.policy.min_interval
@@ -686,6 +896,19 @@ class ReoptController(ScenarioObserver):
         if not self.policy.on_failure:
             return None
         return self._maybe_replan(view.now + self.clock_offset, "failure")
+
+    def on_repair(
+        self, view: EngineView, link: tuple[int, int]
+    ) -> PlanUpdate | None:
+        pair = (min(link), max(link))
+        if pair not in self.dead:
+            return None
+        self._note_repaired(pair)
+        if not self.policy.on_failure:
+            # Static operator: the engine already restored the capacity;
+            # the healed incumbent simply resumes.
+            return None
+        return self._maybe_replan(view.now + self.clock_offset, "repair")
 
     def on_arrival(self, view: EngineView, job: SimJob) -> PlanUpdate | None:
         if not self.policy.on_arrival or self.suppress_job_hooks:
@@ -774,6 +997,9 @@ class JobSetController(ReoptController):
         self._pending_candidates: list[JobSet] | None = None
         # Every migration decision rebalance() ever took (adopted or not).
         self.migrations: list[MigrationRecord] = []
+        # Arrivals admit() turned away because no live fabric component
+        # could host them: (time, label) records, in admission order.
+        self.refused: list[tuple[float, str]] = []
         super().__init__(job=None, n=jobset.n, hw=hw, policy=policy,
                          seed=seed, plan=plan)
 
@@ -818,7 +1044,7 @@ class JobSetController(ReoptController):
             self._opt_jobset(self.jobset, now), self.hw,
             rounds=self.policy.rounds,
             mcmc_iters=self.policy.mcmc_iters,
-            seed=self.seed + 1 + self.n_replans,
+            seed=self.seed + 1 + self.n_replans + 997 * self._retry_nonce,
             warm_topology=self.topology,
             warm_strategies=self.strategies(),
             forbidden=tuple(self.dead),
@@ -859,6 +1085,11 @@ class JobSetController(ReoptController):
             return None  # nothing to optimize for (e.g. failure after the
             # last tenant departed); keep the incumbent fabric as-is.
         return super()._maybe_replan(now, trigger)
+
+    def _required_groups(self) -> list[tuple[int, ...]]:
+        """Each multi-server tenant's ring must stay connected on the live
+        fabric (single-server tenants have no network demand)."""
+        return [t.servers for t in self.jobset.tenants if t.k > 1]
 
     def strategies(self) -> dict[str, Strategy]:
         """Per-tenant strategies of the incumbent plan, with cold defaults
@@ -931,10 +1162,15 @@ class JobSetController(ReoptController):
         name: str | None = None,
         now: float = 0.0,
         candidates: int | None = None,
-    ) -> tuple[tuple[int, ...], float]:
+    ) -> tuple[tuple[int, ...], float] | None:
         """Admit an arriving job: place it on ``k`` free servers, then let
         the arrival trigger replan the shared fabric.  Returns
-        ``(servers, pause_seconds)`` — the servers the tenant ends up on.
+        ``(servers, pause_seconds)`` — the servers the tenant ends up on —
+        or ``None`` when free servers exist but no connected component of
+        the live (degraded) fabric can host all ``k`` of them: the job is
+        *refused* rather than admitted astride a partition it could never
+        AllReduce across.  Refusals are recorded in :attr:`refused` as
+        ``(now, label)`` so operators can re-admit after a repair.
 
         ``candidates`` (default: the policy's ``candidates``) switches the
         admission from greedy-then-replan to **placement co-search**: the
@@ -952,10 +1188,19 @@ class JobSetController(ReoptController):
         label = name or spec.name
         free = self.jobset.free_servers()
         links = self.links()
+        seed_placement = place_arrival(k, free, links, require_hostable=True)
+        if seed_placement is None:
+            self.refused.append((now, label))
+            return None
         if n_cand <= 1:
-            placements = [place_arrival(k, free, links)]
+            placements = [seed_placement]
         else:
-            placements = place_candidates(k, free, links, n=n_cand)
+            # Hostable seed first (bit-identical to place_candidates[0] on
+            # a connected fabric), then the diverse variants it didn't pick.
+            placements = [seed_placement] + [
+                p for p in place_candidates(k, free, links, n=n_cand)
+                if p != seed_placement
+            ]
         base = self.jobset
         self.jobset = base.with_tenant(
             TenantJob(spec=spec, servers=placements[0], weight=weight,
@@ -1218,6 +1463,9 @@ class TraceEvent:
 
     ``kind="fail"``: the fiber pair ``link`` dies when iteration
     ``iteration`` starts (``frac=0``) or ``frac`` of the way through it.
+    ``kind="repair"``: a previously failed ``link`` comes back at that
+    iteration boundary (transient fault healed; the controller restores the
+    fiber and may replan).
     ``kind="load"``: the resident job's spec becomes ``job`` (a load shift —
     bigger batch, more tables, a different model) at that iteration boundary.
 
@@ -1225,16 +1473,32 @@ class TraceEvent:
     ``kind="arrive"`` — job ``job`` joins on ``k`` servers with fairness
     ``weight`` under label ``name`` (placed by :func:`place_arrival`) — and
     ``kind="depart"`` — tenant ``name`` finishes and frees its servers.
+
+    Unknown kinds raise :class:`ValueError` at construction — the drivers
+    dispatch on ``kind``, and a typo'd kind used to be skipped silently.
     """
 
+    KINDS = frozenset({"fail", "repair", "load", "arrive", "depart"})
+
     iteration: int
-    kind: str  # "fail" | "load" | "arrive" | "depart"
+    kind: str  # "fail" | "repair" | "load" | "arrive" | "depart"
     link: tuple[int, int] | None = None
     frac: float = 0.0
     job: JobSpec | None = None
     k: int = 0
     weight: float = 1.0
     name: str | None = None
+
+    def __post_init__(self):
+        if self.kind not in self.KINDS:
+            raise ValueError(
+                f"unknown TraceEvent kind {self.kind!r}; expected one of "
+                f"{sorted(self.KINDS)}"
+            )
+        if self.kind in ("fail", "repair") and self.link is None:
+            raise ValueError(
+                f"TraceEvent(kind={self.kind!r}) requires a link"
+            )
 
 
 @dataclass
@@ -1293,6 +1557,8 @@ def run_online(
         for ev in by_iter.get(it, ()):
             if ev.kind == "load" and ev.job is not None:
                 total += ctrl.set_job(ev.job, now=total)
+            elif ev.kind == "repair" and ev.link is not None:
+                total += ctrl.repair(ev.link, now=total)
             elif ev.kind == "fail" and ev.link is not None:
                 if ev.frac <= 0.0:
                     total += ctrl.fail(ev.link, now=total)
@@ -1361,6 +1627,9 @@ class JobSetRunResult:
     log: list[ReplanRecord] = field(default_factory=list)
     # Every rebalance decision (adopted or rejected), in decision order.
     migrations: list[MigrationRecord] = field(default_factory=list)
+    # Labels of arrivals the controller refused (no live fabric component
+    # could host them), in admission order.
+    refused: list[str] = field(default_factory=list)
     final_plan: JobSetPlan | None = None
     final_jobset: JobSet | None = None
 
@@ -1414,12 +1683,15 @@ def run_online_jobset(
         mid_iter: list[TraceEvent] = []
         for ev in by_iter.get(it, ()):
             if ev.kind == "arrive" and ev.job is not None:
-                _, pause = ctrl.admit(
+                admitted = ctrl.admit(
                     ev.job, ev.k, weight=ev.weight, name=ev.name, now=total,
                 )
-                total += pause
+                if admitted is not None:
+                    total += admitted[1]
             elif ev.kind == "depart" and ev.name:
                 total += ctrl.depart(ev.name, now=total)
+            elif ev.kind == "repair" and ev.link is not None:
+                total += ctrl.repair(ev.link, now=total)
             elif ev.kind == "fail" and ev.link is not None:
                 if ev.frac <= 0.0:
                     total += ctrl.fail(ev.link, now=total)
@@ -1469,6 +1741,7 @@ def run_online_jobset(
     result.edges_moved = ctrl.total_edges_moved
     result.log = ctrl.log
     result.migrations = list(ctrl.migrations)
+    result.refused = [label for _, label in ctrl.refused]
     result.final_plan = ctrl.plan
     result.final_jobset = ctrl.jobset
     return result
@@ -1558,11 +1831,35 @@ def _greedy_pack(
     return tuple(int(v) for v in sub_ids[chosen_mask])
 
 
+def _live_components(
+    free_ids: np.ndarray, links: dict[tuple[int, int], float]
+) -> np.ndarray:
+    """Component label per free server under the live fabric's *undirected*
+    connectivity (positive-capacity links; paths may transit busy servers).
+    Free servers with no live fiber at all become singleton components."""
+    parent: dict[int, int] = {}
+
+    def find(x: int) -> int:
+        parent.setdefault(x, x)
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for (a, b), c in links.items():
+        if c > 0:
+            ra, rb = find(int(a)), find(int(b))
+            if ra != rb:
+                parent[rb] = ra
+    return np.asarray([find(int(v)) for v in free_ids], dtype=np.int64)
+
+
 def place_arrival(
     k: int,
     free: set[int] | frozenset[int],
     links: dict[tuple[int, int], float],
-) -> tuple[int, ...]:
+    require_hostable: bool = False,
+) -> tuple[int, ...] | None:
     """Pick ``k`` free servers for a newly arriving job, topology-aware.
 
     Greedy capacity packing: seed with the free server carrying the most
@@ -1571,6 +1868,16 @@ def place_arrival(
     degraded fabric this steers new jobs away from servers whose fibers died;
     on a healthy one it reduces fabric fragmentation versus lowest-id
     first-fit.  Falls back to lowest ids to break ties deterministically.
+
+    ``require_hostable=True`` additionally demands that the ``k`` servers
+    share one connected component of the live fabric (a job split across a
+    partition can never finish an AllReduce).  When the plain greedy pick
+    straddles a partition, the pack is retried inside the component holding
+    the most free servers (ties toward the one with the smallest id);
+    returns ``None`` when *no* live component has ``k`` free servers — the
+    degraded-fabric signal :meth:`JobSetController.admit` turns into a
+    refused admission.  On a connected fabric the flag is a no-op and the
+    result is bit-identical to the default path.
 
     Vectorized: one symmetric NumPy adjacency over the free servers
     replaces the per-step dict scans; each selection is a stable
@@ -1583,7 +1890,28 @@ def place_arrival(
     if k == 0:
         return ()
     ids, a_mat, touch = _free_capacity_matrix(free, links)
-    return _greedy_pack(ids, a_mat, k, np.ones(ids.size, dtype=bool), touch)
+    chosen = _greedy_pack(ids, a_mat, k, np.ones(ids.size, dtype=bool), touch)
+    if not require_hostable or k == 1:
+        return chosen  # a single-server tenant has no network demand
+    comp = _live_components(ids, links)
+    label_of = dict(zip(ids.tolist(), comp.tolist()))
+    if len({label_of[v] for v in chosen}) == 1:
+        return chosen  # greedy pick already lives inside one component
+    # The fabric is partitioned under the free pool: retry inside the
+    # component with the most free servers (ties -> smallest server id).
+    best_label: int | None = None
+    best_key: tuple[int, int] | None = None
+    for label in dict.fromkeys(comp.tolist()):
+        mask = comp == label
+        size = int(mask.sum())
+        if size < k:
+            continue
+        key = (-size, int(ids[mask][0]))
+        if best_key is None or key < best_key:
+            best_key, best_label = key, label
+    if best_label is None:
+        return None
+    return _greedy_pack(ids, a_mat, k, comp == best_label, touch)
 
 
 def place_candidates(

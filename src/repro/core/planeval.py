@@ -66,9 +66,9 @@ from .demand import TrafficDemand, demand_steps, remap_demand, sparse_min_nodes
 logger = logging.getLogger(__name__)
 from .netsim import (
     HardwareSpec,
+    _iteration_time as iteration_time,
     _routing_with_fallback,
     compute_time,
-    iteration_time,
 )
 
 __all__ = [

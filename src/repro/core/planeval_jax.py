@@ -519,7 +519,7 @@ def jax_mcmc_search(
     anneal on the same (α, β) objective the NumPy path prices.
     """
     from .demand import demand_steps
-    from .netsim import compute_time, iteration_time
+    from .netsim import _iteration_time as iteration_time, compute_time
     from .strategy_search import SearchResult
 
     n = topo.n

@@ -35,14 +35,18 @@ import numpy as np
 from .demand import TrafficDemand
 from .netsim import (  # re-exported: the facade subsumes these
     HardwareSpec,
+    _fat_tree_comm_time as fat_tree_comm_time,
+    _ideal_switch_comm_time as ideal_switch_comm_time,
+    _iteration_time as iteration_time,
+    _topoopt_comm_time as topoopt_comm_time,
     compute_time,
-    fat_tree_comm_time,
-    ideal_switch_comm_time,
-    iteration_time,
     mp_flows,
-    topoopt_comm_time,
 )
-from .ocs_reconfig import RECONFIG_LATENCY, RECONFIG_WINDOW, ocs_topology
+from .ocs_reconfig import (
+    _RECONFIG_LATENCY as RECONFIG_LATENCY,
+    _RECONFIG_WINDOW as RECONFIG_WINDOW,
+    _ocs_topology as ocs_topology,
+)
 from .planeval import plan_evaluator
 from .routing import k_shortest_mp_routes
 from .topology_finder import Topology, topology_finder
@@ -66,7 +70,7 @@ __all__ = [
     "SimEngine",
     "links_from_topology",
     "iteration_tasks",
-    # re-exports
+    # re-exports (the blessed, warning-free home of the legacy shim names)
     "HardwareSpec",
     "compute_time",
     "fat_tree_comm_time",
@@ -75,6 +79,8 @@ __all__ = [
     "topoopt_comm_time",
     "ocs_topology",
     "topology_finder",
+    "RECONFIG_WINDOW",
+    "RECONFIG_LATENCY",
 ]
 
 PROPAGATION_DELAY = 1e-6  # §5.1: link propagation delay 1 us
@@ -459,10 +465,26 @@ class SimJob:
 
 @dataclass(frozen=True)
 class LinkFailure:
-    """Both directions of ``link`` die at ``time``."""
+    """Both directions of ``link`` die at ``time``.
+
+    ``repair_time`` (absolute scenario seconds, strictly after ``time``)
+    makes the fault transient: at that instant the pair's pre-failure
+    capacity is restored and in-flight flows are re-pathed against the
+    repaired fabric with their remaining bytes intact — the same
+    byte-preserving reroute a failure applies.  ``None`` (the default)
+    keeps the original permanent-failure semantics.
+    """
 
     time: float
     link: tuple[int, int]
+    repair_time: float | None = None
+
+    def __post_init__(self):
+        if self.repair_time is not None and self.repair_time <= self.time:
+            raise ValueError(
+                f"repair_time {self.repair_time} must be strictly after "
+                f"the failure time {self.time}"
+            )
 
 
 @dataclass(frozen=True)
@@ -637,6 +659,13 @@ class ScenarioObserver:
     ) -> PlanUpdate | None:
         return None
 
+    def on_repair(
+        self, view: EngineView, link: tuple[int, int]
+    ) -> PlanUpdate | None:
+        """A transient failure's ``repair_time`` elapsed; the engine has
+        already restored the pair's pre-failure capacity."""
+        return None
+
     def on_check(self, view: EngineView) -> PlanUpdate | None:
         return None
 
@@ -659,6 +688,11 @@ class Scenario:
     n: int | None = None  # node count (required for reconfig rebuilds)
     # Per-job bandwidth weights (weighted max-min); None = plain max-min.
     fairness: FairnessPolicy | None = None
+    # Checkpoint-restore cost in seconds, charged to a job each time the
+    # fabric reconnects it after a partition stranded one of its flows
+    # (price with :func:`repro.core.costmodel.checkpoint_restart_s`).
+    # Jobs absent from the map restart for free.
+    restart_s: dict[str, float] = field(default_factory=dict)
 
 
 @dataclass
@@ -675,6 +709,23 @@ class ScenarioResult:
     edges_moved: int = 0  # physical fiber churn summed over PlanUpdates
     # Tenant migrations carried by applied PlanUpdates, in application order.
     migrations: tuple[MigrationRecord, ...] = ()
+    # Fault accounting: seconds each job spent partition-stalled (an
+    # unroutable flow, or blocked on a checkpoint-restore restart) and how
+    # many times it restarted after reconnection.  Empty on fault-free runs.
+    downtime: dict[str, float] = field(default_factory=dict)
+    restarts: dict[str, int] = field(default_factory=dict)
+
+    @property
+    def goodput(self) -> dict[str, float]:
+        """Network bytes delivered per wall-clock second, per job."""
+        span = self.makespan if self.makespan > 0 else 1.0
+        return {job: b / span for job, b in self.delivered.items()}
+
+    def availability(self, job: str) -> float:
+        """Fraction of the run the job was *not* partition-stalled."""
+        if self.makespan <= 0:
+            return 1.0
+        return 1.0 - min(self.downtime.get(job, 0.0), self.makespan) / self.makespan
 
 
 class _ScenarioFlow(_FlowState):
@@ -792,6 +843,14 @@ class SimEngine:
         failures = sorted(scenario.failures, key=lambda f: f.time)
         fail_i = 0
         arr_i = 0
+        # Transient faults: repairs fire in their own time order, restoring
+        # the capacity snapshot the matching failure took (``cut_caps``).
+        repairs = sorted(
+            (f for f in failures if f.repair_time is not None),
+            key=lambda f: f.repair_time,
+        )
+        rep_i = 0
+        cut_caps: dict[tuple[int, int], dict[tuple[int, int], float]] = {}
 
         pending: dict[tuple[str, int], set[int]] = {}
         dependents: dict[tuple[str, int], list[Task]] = {}
@@ -819,6 +878,14 @@ class SimEngine:
         arrived: set[str] = set()
         departed: list[str] = []
         last_check = -np.inf
+        # Partition-survival accounting.  ``track_faults`` flips on the
+        # first unroutable flow and stays off for fault-free runs, which
+        # therefore never touch any of this state (bit-identity invariant).
+        downtime: dict[str, float] = {}
+        restarts: dict[str, int] = {}
+        restart_until: dict[str, float] = {}
+        partitioned: set[str] = set()
+        track_faults = False
 
         # OCS epoch state: next rebuild boundary and pause end.
         next_rebuild = 0.0 if reconfig else np.inf
@@ -864,9 +931,11 @@ class SimEngine:
             return path
 
         def install_route(f: _ScenarioFlow) -> None:
+            nonlocal track_faults
             src, dst = f.task.route[0], f.task.route[-1]
             path = resolve_route(src, dst)
             if path is None:
+                track_faults = True
                 f.path = ()
                 f.lids = np.empty(0, dtype=np.int64)
                 f.cnts = np.empty(0)
@@ -904,6 +973,23 @@ class SimEngine:
                 if not deps and (job_name, t.tid) not in finish:
                     admit(job, t)
 
+        def refresh_partitions() -> None:
+            """Recompute the partition-stalled job set after a route-changing
+            event.  A resident job leaving the set (its last unroutable flow
+            got a path back) restarts from checkpoint: the restart is
+            counted, and ``scenario.restart_s`` seconds of blocked progress
+            are charged via ``restart_until``."""
+            stalled_now = {f.job for f in active if not f.path}
+            for job in partitioned - stalled_now:
+                if outstanding.get(job, 0) <= 0:
+                    continue
+                restarts[job] = restarts.get(job, 0) + 1
+                pause = scenario.restart_s.get(job, 0.0)
+                if pause > 0:
+                    restart_until[job] = now + pause
+            partitioned.clear()
+            partitioned.update(stalled_now)
+
         def set_links(new_links: dict[tuple[int, int], float]) -> None:
             """Swap the live fabric: refresh capacities (dead links -> 0,
             new links appended), drop stale routes, re-path in-flight flows."""
@@ -922,6 +1008,8 @@ class SimEngine:
             route_cache.clear()
             for f in active:
                 install_route(f)
+            if track_faults:
+                refresh_partitions()
 
         def make_view() -> EngineView:
             return EngineView(
@@ -981,21 +1069,50 @@ class SimEngine:
             n_reconfigs += 1
 
         def apply_failure(link: tuple[int, int]) -> None:
+            pair = (min(link), max(link))
+            snap: dict[tuple[int, int], float] = {}
             for l in (link, (link[1], link[0])):
                 if l in live:
+                    snap[l] = live[l]
                     del live[l]
                 if l in table.index:
                     table.cap[table.index[l]] = 0.0
+            if snap:
+                # Snapshot what the cut removed so a repair can restore it.
+                cut_caps[pair] = snap
             route_cache.clear()
             dead = {link, (link[1], link[0])}
             for f in active:
                 if any(hop in dead for hop in zip(f.path[:-1], f.path[1:])):
                     install_route(f)
+            if track_faults:
+                refresh_partitions()
+
+        def apply_repair(link: tuple[int, int]) -> None:
+            """Restore both directions of a failed pair to their pre-failure
+            capacity and re-path flows that could improve (unroutable or
+            detoured) — the byte-preserving reroute, in reverse."""
+            snap = cut_caps.pop((min(link), max(link)), None)
+            if snap is None:
+                return
+            for l, c in snap.items():
+                live[l] = c
+                if l in table.index:
+                    table.cap[table.index[l]] = c
+                else:
+                    table.index[l] = len(table.index)
+                    table.cap = np.append(table.cap, c)
+            route_cache.clear()
+            for f in active:
+                if not f.path or len(f.path) > 2:
+                    install_route(f)
+            if track_faults:
+                refresh_partitions()
 
         # Admit roots of jobs arriving at t=0 happens via the arrival queue.
         while active or compute_heap or arr_i < len(arrivals) or (
             fail_i < len(failures)
-        ):
+        ) or rep_i < len(repairs):
             in_pause = now < pause_until
             flow_w = None
             if fairness is not None and active and not in_pause:
@@ -1006,11 +1123,28 @@ class SimEngine:
                     (f.weight for f in active),
                     dtype=np.float64, count=len(active),
                 )
-            rates = (
-                np.zeros(len(active))
-                if in_pause
-                else _max_min_rates(active, table.cap, weights=flow_w)
-            )
+            blocked = None
+            if restart_until and active and not in_pause:
+                blocked = np.fromiter(
+                    (restart_until.get(f.job, -np.inf) > now for f in active),
+                    dtype=bool, count=len(active),
+                )
+                if not blocked.any():
+                    blocked = None
+            if in_pause:
+                rates = np.zeros(len(active))
+            elif blocked is not None:
+                # Checkpoint-restore in progress: the restarting jobs' flows
+                # make no progress; everyone else shares the fabric.
+                sub = [f for f, b in zip(active, blocked) if not b]
+                rates = np.zeros(len(active))
+                if sub:
+                    sub_w = flow_w[~blocked] if flow_w is not None else None
+                    rates[~blocked] = _max_min_rates(
+                        sub, table.cap, weights=sub_w
+                    )
+            else:
+                rates = _max_min_rates(active, table.cap, weights=flow_w)
             t_flow = np.inf
             next_idx = -1
             if active and not in_pause:
@@ -1032,6 +1166,17 @@ class SimEngine:
             t_comp = compute_heap[0][0] if compute_heap else np.inf
             t_arr = arrivals[arr_i][0] if arr_i < len(arrivals) else np.inf
             t_fail = failures[fail_i].time if fail_i < len(failures) else np.inf
+            t_rep = (
+                repairs[rep_i].repair_time if rep_i < len(repairs) else np.inf
+            )
+            # A restart pause ending re-enables its job's flows: wake then.
+            t_restart = np.inf
+            if restart_until:
+                pend = [u for u in restart_until.values() if u > now]
+                if pend:
+                    t_restart = min(pend)
+                else:
+                    restart_until.clear()
             # Clamp to now: a rebuild boundary that elapsed while only
             # compute was running fires immediately, not in the past.
             t_reconf = (
@@ -1051,7 +1196,10 @@ class SimEngine:
                 if tc > last_check:
                     t_check = max(tc, now)
 
-            t_work = min(t_flow, t_comp, t_arr, t_fail, t_reconf, t_pause_end)
+            t_work = min(
+                t_flow, t_comp, t_arr, t_fail, t_rep, t_restart, t_reconf,
+                t_pause_end,
+            )
             t_next = min(t_work, t_check)
             if not np.isfinite(t_work):
                 if (
@@ -1070,12 +1218,15 @@ class SimEngine:
                 # Deadlock: every remaining flow is unroutable.  Drop any
                 # failure events that can never fire (non-finite times) —
                 # they would otherwise keep the loop's while-condition true
-                # with no event left to make progress.
+                # with no event left to make progress.  (Pending repairs
+                # keep t_work finite, so this branch means none remain.)
                 fail_i = len(failures)
                 for f in active:
                     stalled.append((f.job, f.task.tid))
                     release(f.job, f.task.tid, now)
                 active.clear()
+                partitioned.clear()
+                restart_until.clear()
                 notify_departures()
                 continue
             stall_rescues = 1
@@ -1085,11 +1236,19 @@ class SimEngine:
                 remaining = np.maximum(0.0, remaining - rates * dt)
                 for f, r in zip(active, remaining):
                     f.remaining = float(r)
+            if track_faults and dt > 0:
+                down = {f.job for f in active if not f.path}
+                for job_name, until in restart_until.items():
+                    if until > now and outstanding.get(job_name, 0) > 0:
+                        down.add(job_name)
+                for job_name in down:
+                    downtime[job_name] = downtime.get(job_name, 0.0) + dt
             now = t_next
 
-            # Event priority at equal times: arrival, failure, reconfig,
-            # check, pause-end, compute, flow — deterministic and
-            # arrival-first so new jobs contend for bandwidth immediately.
+            # Event priority at equal times: arrival, failure, repair,
+            # reconfig, check, pause-end, restart-end, compute, flow —
+            # deterministic and arrival-first so new jobs contend for
+            # bandwidth immediately.
             if t_arr <= t_next:
                 job = jobs[arrivals[arr_i][1]]
                 arr_i += 1
@@ -1097,6 +1256,10 @@ class SimEngine:
                 for t in job.tasks:
                     if not t.deps:
                         admit(job, t)
+                if track_faults:
+                    # A job admitted onto a partitioned fabric starts
+                    # stalled; register it so a later reconnect restarts it.
+                    refresh_partitions()
                 if observer is not None:
                     apply_update(observer.on_arrival(make_view(), job))
             elif t_fail <= t_next:
@@ -1105,12 +1268,20 @@ class SimEngine:
                 fail_i += 1
                 if observer is not None:
                     apply_update(observer.on_failure(make_view(), failed_link))
+            elif rep_i < len(repairs) and t_rep <= t_next:
+                repaired_link = repairs[rep_i].link
+                apply_repair(repaired_link)
+                rep_i += 1
+                if observer is not None:
+                    apply_update(observer.on_repair(make_view(), repaired_link))
             elif reconfig is not None and t_reconf <= t_next:
                 if n_reconfigs >= reconfig.max_epochs:
                     for f in active:
                         stalled.append((f.job, f.task.tid))
                         release(f.job, f.task.tid, now)
                     active.clear()
+                    partitioned.clear()
+                    restart_until.clear()
                     next_rebuild = np.inf
                     notify_departures()
                     continue
@@ -1122,6 +1293,8 @@ class SimEngine:
                 apply_update(observer.on_check(make_view()))
             elif in_pause and t_pause_end <= t_next:
                 pass  # pause over; next iteration recomputes rates
+            elif t_restart <= t_next:
+                pass  # a restart pause ended; next pass unblocks its flows
             elif t_comp <= t_flow and compute_heap:
                 _, _, job_name, tid = heapq.heappop(compute_heap)
                 release(job_name, tid, now)
@@ -1149,6 +1322,8 @@ class SimEngine:
             replan_times=tuple(replan_times),
             edges_moved=edges_moved,
             migrations=tuple(migrations),
+            downtime=dict(downtime),
+            restarts=dict(restarts),
         )
 
     # -- vectorized benchmark inner loops -----------------------------------

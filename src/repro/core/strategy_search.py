@@ -28,8 +28,8 @@ import numpy as np
 from .demand import TrafficDemand, demand_steps
 from .netsim import (
     HardwareSpec,
+    _iteration_time as iteration_time,
     compute_time,
-    iteration_time,
     reference_comm_time,
 )
 from .planeval import JobSetEvaluator, LRUCache, plan_evaluator

@@ -473,3 +473,31 @@ def remove_pair(topo: Topology, pair: tuple[int, int]) -> Topology:
     )
     degraded.routing = _reroute_around(topo, g, removed)
     return degraded
+
+
+def restore_pair(
+    topo: Topology,
+    pair: tuple[int, int],
+    edges: list[tuple[int, int, dict]],
+) -> Topology:
+    """Invert :func:`remove_pair` after a transient fault heals.
+
+    ``edges`` is the (a, b, edge-data) list snapshotted before the pair was
+    removed; they are re-added verbatim and the restored directions get
+    their direct route back.  Routes that were detoured around the dead
+    pair keep their detour — they are valid, just suboptimal, and the next
+    re-optimization (or :func:`_reroute_around`) tightens them.
+    """
+    g = topo.graph.copy()
+    for a, b, data in edges:
+        g.add_edge(a, b, **data)
+    restored = Topology(
+        n=topo.n, degree=topo.degree, graph=g, rings=topo.rings,
+        d_allreduce=topo.d_allreduce, d_mp=topo.d_mp,
+    )
+    routing = RoutingTable(routes=dict(topo.routing.routes))
+    for direction in {(a, b) for a, b, _ in edges}:
+        routing.routes.pop(direction, None)
+        routing.add(direction[0], direction[1], direction)
+    restored.routing = routing
+    return restored

@@ -214,6 +214,20 @@ class JobSet:
         used = {s for t in self.tenants for s in t.servers}
         return set(range(self.n)) - used
 
+    def restart_costs(self) -> dict[str, float]:
+        """Per-tenant fault-restart pause (seconds): the checkpoint-restore
+        reload of each tenant's model state
+        (:func:`repro.core.costmodel.checkpoint_restart_s`).  Feed the
+        result into :attr:`repro.core.simengine.Scenario.restart_s` so a
+        fabric partition that stalls a tenant charges its real
+        restore-from-checkpoint time when the partition heals."""
+        from .costmodel import checkpoint_restart_s
+
+        return {
+            t.label: checkpoint_restart_s(t.spec.state_bytes)
+            for t in self.tenants
+        }
+
     def with_tenant(self, tenant: TenantJob) -> "JobSet":
         return JobSet(n=self.n, tenants=[*self.tenants, tenant])
 

@@ -3,9 +3,8 @@ import pytest
 
 from repro.core.demand import TrafficDemand, data_parallel_demand
 from repro.core.fabrics import expander_topology, generic_comm_time, sipml_ring_topology
-from repro.core.netsim import (
-    HardwareSpec,
-    compute_time,
+from repro.core.netsim import HardwareSpec, compute_time
+from repro.core.simengine import (
     fat_tree_comm_time,
     ideal_switch_comm_time,
     iteration_time,

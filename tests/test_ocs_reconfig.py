@@ -1,7 +1,7 @@
 import networkx as nx
 import numpy as np
 
-from repro.core.ocs_reconfig import ocs_topology
+from repro.core.simengine import ocs_topology
 
 
 def test_highest_demand_gets_most_links():

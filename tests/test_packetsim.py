@@ -1,6 +1,6 @@
 import pytest
 
-from repro.core.packetsim import FlowSim, PROPAGATION_DELAY, Task
+from repro.core.simengine import PROPAGATION_DELAY, FlowSimVec as FlowSim, Task
 
 
 def _bw(links, bw=100.0):

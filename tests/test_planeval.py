@@ -24,8 +24,8 @@ from repro.core.netsim import (
     _routing_with_fallback,
     mp_flows,
     reference_comm_time,
-    topoopt_comm_time,
 )
+from repro.core.simengine import topoopt_comm_time
 from repro.core.planeval import (
     JobSetEvaluator,
     LRUCache,

@@ -21,7 +21,8 @@ from repro.core.alternating import (
     initial_topology,
 )
 from repro.core.demand import demand_steps
-from repro.core.netsim import HardwareSpec, compute_time, iteration_time, reference_comm_time
+from repro.core.netsim import HardwareSpec, compute_time, reference_comm_time
+from repro.core.simengine import iteration_time
 from repro.core.planeval import plan_evaluator
 from repro.core.schedules import SCHEDULES, get_schedule, validate_hd_group
 from repro.core.select_perms import schedule_strides

@@ -14,7 +14,11 @@ from repro.core import (
     alternating_optimize,
     topology_finder,
 )
-from repro.core.netsim import fat_tree_comm_time, ideal_switch_comm_time, topoopt_comm_time
+from repro.core.simengine import (
+    fat_tree_comm_time,
+    ideal_switch_comm_time,
+    topoopt_comm_time,
+)
 from repro.core.workloads import DLRM, job_demand
 
 # Multi-minute subprocess tests (fresh jax init per case); quick loop:
