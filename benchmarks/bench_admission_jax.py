@@ -1,0 +1,166 @@
+"""Fused admission co-search: candidate x ladder grid vs sequential rounds.
+
+The PR-10 tentpole fuses the whole admission co-search — ``k`` placement
+candidates x a parallel-tempering temperature ladder x ``chains`` — into
+one jitted grid dispatch per alternating round
+(:func:`repro.core.alternating.co_optimize_jobset` with ``temperatures``),
+with the winning assignment indices staying on-device between rounds.
+The acceptance bar is end-to-end: the fused path must finish the same
+admission decision at least **3x** faster than the PR-6 sequential
+per-candidate loop (``backend="jax"``, ``temperatures=None``) at equal or
+better plan quality on the same fixed seed.
+
+* ``admission_jax_fused`` — wall-clock of one warm admission co-search,
+  sequential vs fused, best-of-N after a jit-warming run of each path.
+  Asserts the >= 3x bar, that the fused plan's weighted iteration time is
+  never worse than the sequential baseline's, and that the adopted winner
+  re-prices **bit-exactly** on the NumPy evaluator
+  (:func:`repro.core.strategy_search.evaluate_jobset`) — the fused loop's
+  device energies are advisory; the committed number is always NumPy's.
+
+A perf record lands in ``experiments/bench/BENCH_admission_jax.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core.alternating import co_optimize_jobset
+from repro.core.netsim import HardwareSpec
+from repro.core.planeval_jax import DEFAULT_TEMPER_LADDER
+from repro.core.strategy_search import evaluate_jobset
+from repro.core.workloads import BERT, DLRM, JobSet, TenantJob
+
+DEGREE = 4
+PERF_RECORD = os.path.join("experiments", "bench", "BENCH_admission_jax.json")
+
+# The tentpole acceptance bar: the fused candidate x ladder grid must beat
+# the sequential per-candidate loop end-to-end by at least this factor.
+MIN_ADMISSION_SPEEDUP = 3.0
+
+
+def _candidates(n: int, k: int) -> tuple[JobSet, list[JobSet]]:
+    """An admission scenario: two tenants under ``k`` shifted placements.
+
+    Mirrors :func:`repro.core.online.place_candidates` admission variants —
+    the same tenants, rotated around the ring so each candidate stresses a
+    different region of the shared fabric."""
+
+    def _at(off: int) -> JobSet:
+        return JobSet(n=n, tenants=[
+            TenantJob(spec=DLRM, weight=2.0, name="dlrm",
+                      servers=tuple((s + off) % n for s in range(0, 6))),
+            TenantJob(spec=BERT, weight=1.0, name="bert",
+                      servers=tuple((s + off) % n for s in range(6, 12))),
+        ])
+
+    return _at(0), [_at(off) for off in range(k)]
+
+
+def _bench_admission(n: int, k: int, chains: int, rounds: int,
+                     iters: int, repeats: int, hw: HardwareSpec) -> dict:
+    base, cands = _candidates(n, k)
+    ladder = DEFAULT_TEMPER_LADDER
+    kw = dict(rounds=rounds, mcmc_iters=iters, seed=3,
+              placement_candidates=cands, backend="jax", chains=chains)
+
+    def _seq():
+        return co_optimize_jobset(base, hw, **kw)
+
+    def _fused():
+        return co_optimize_jobset(base, hw, temperatures=ladder, **kw)
+
+    # Warm each path's jit cache (the fused grid program and the flat
+    # per-candidate kernel compile at different shapes), then time
+    # steady-state admissions — what the online controller actually pays
+    # on every arrival after the first.
+    plan_seq, plan_fused = _seq(), _fused()
+    t_seq = t_fused = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        _seq()
+        t_seq = min(t_seq, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        _fused()
+        t_fused = min(t_fused, time.perf_counter() - t0)
+
+    speedup = t_seq / t_fused
+    assert speedup >= MIN_ADMISSION_SPEEDUP, (
+        f"fused admission ran {speedup:.2f}x the sequential path, "
+        f"need >= {MIN_ADMISSION_SPEEDUP}x"
+    )
+    # Equal-or-better quality on the same fixed seed: the ladder explores
+    # strictly more of the move space than the single-temperature chains.
+    assert plan_fused.iter_time <= plan_seq.iter_time * (1 + 1e-9), (
+        f"fused plan regressed quality: {plan_fused.iter_time} vs "
+        f"sequential {plan_seq.iter_time}"
+    )
+    # The adopted winner must re-price bit-exactly on the NumPy path —
+    # the committed iter_time is never a device-side float.
+    repriced, _, _ = evaluate_jobset(
+        plan_fused.strategies, plan_fused.jobset, plan_fused.topology, hw
+    )
+    assert repriced == plan_fused.iter_time, (
+        f"fused plan not NumPy-exact: {repriced} != {plan_fused.iter_time}"
+    )
+    return dict(
+        name=f"admission_jax_fused_n{n}",
+        us_per_call=t_fused * 1e6,
+        derived=(
+            f"speedup={speedup:.1f}x;"
+            f"fused_s={t_fused:.3f};seq_s={t_seq:.3f};"
+            f"fused_iter_time={plan_fused.iter_time:.6g};"
+            f"seq_iter_time={plan_seq.iter_time:.6g};"
+            f"candidates={k};ladder={len(ladder)};chains={chains}"
+        ),
+        speedup=speedup,
+        fused_s=t_fused,
+        seq_s=t_seq,
+        fused_iter_time=plan_fused.iter_time,
+        seq_iter_time=plan_seq.iter_time,
+        candidates=k,
+        ladder=len(ladder),
+        chains=chains,
+        rounds=rounds,
+        mcmc_iters=iters,
+    )
+
+
+def run(smoke: bool = False) -> list[dict]:
+    hw = HardwareSpec(link_bandwidth=12.5e9, degree=DEGREE)
+    if smoke:
+        n, k, chains, rounds, iters, repeats = 16, 4, 4, 2, 40, 1
+    else:
+        n, k, chains, rounds, iters, repeats = 16, 4, 4, 2, 120, 2
+    rows = [_bench_admission(n, k, chains, rounds, iters, repeats, hw)]
+    _write_perf_record(rows, smoke=smoke)
+    return rows
+
+
+def _write_perf_record(rows: list[dict], smoke: bool) -> None:
+    """BENCH_admission_jax.json: the acceptance numbers CI tracks."""
+    os.makedirs(os.path.dirname(PERF_RECORD), exist_ok=True)
+    row = rows[0]
+    record = dict(
+        bench="admission_jax",
+        smoke=smoke,
+        admission_speedup=row["speedup"],
+        fused_s=row["fused_s"],
+        seq_s=row["seq_s"],
+        fused_iter_time=row["fused_iter_time"],
+        seq_iter_time=row["seq_iter_time"],
+        candidates=row["candidates"],
+        ladder=row["ladder"],
+        chains=row["chains"],
+        meets_bar=bool(row["speedup"] >= MIN_ADMISSION_SPEEDUP),
+        wall_us=sum(r["us_per_call"] for r in rows),
+    )
+    with open(PERF_RECORD, "w") as f:
+        json.dump(record, f, indent=1)
+
+
+if __name__ == "__main__":
+    for r in run(smoke=True):
+        print(r["name"], r["derived"])

@@ -17,6 +17,11 @@ DRYRUN_DIR = os.path.join(
     "experiments", "dryrun",
 )
 
+BENCH_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "experiments", "bench",
+)
+
 
 def load(tag: str | None = None) -> list[dict]:
     recs = []
@@ -26,6 +31,42 @@ def load(tag: str | None = None) -> list[dict]:
         if tag is None or r.get("tag") == tag:
             recs.append(r)
     return recs
+
+
+def load_bench() -> list[tuple[str, object]]:
+    """Canonical perf records only: one ``BENCH_<name>.json`` per bench.
+
+    The glob is deliberately anchored on the ``BENCH_`` prefix — the run
+    harness used to also dump stray lowercase ``<name>.json`` twins, and a
+    bare ``*.json`` glob would double-count any that linger in a working
+    tree."""
+    recs = []
+    for path in sorted(glob.glob(os.path.join(BENCH_DIR, "BENCH_*.json"))):
+        name = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        with open(path) as f:
+            recs.append((name, json.load(f)))
+    return recs
+
+
+def bench_table() -> str:
+    """§Perf-records table: the scalar headline fields of every canonical
+    bench record (list records are summarized by row count)."""
+    out = [
+        "| bench | headline metrics |",
+        "|---|---|",
+    ]
+    for name, rec in load_bench():
+        if isinstance(rec, dict):
+            scalars = [
+                f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                for k, v in rec.items()
+                if isinstance(v, (int, float, bool)) and k != "smoke"
+            ]
+            headline = ", ".join(scalars[:6]) or f"{len(rec)} fields"
+        else:
+            headline = f"{len(rec)} rows"
+        out.append(f"| {name} | {headline} |")
+    return "\n".join(out)
 
 
 def _fmt_bytes(b: float) -> str:
@@ -105,7 +146,7 @@ def main() -> None:
     ap.add_argument("--tag", default="baseline")
     ap.add_argument(
         "--section", default="all",
-        choices=["all", "dryrun", "roofline", "perf"],
+        choices=["all", "dryrun", "roofline", "perf", "bench"],
     )
     ap.add_argument("--perf-cells", default=(
         "granite-8b:train_4k,falcon-mamba-7b:train_4k,"
@@ -129,6 +170,10 @@ def main() -> None:
             print(f"### Perf iterations — {arch} x {shape}\n")
             print(perf_table(arch, shape))
             print()
+    if args.section in ("all", "bench"):
+        print("### Benchmark perf records (experiments/bench)\n")
+        print(bench_table())
+        print()
 
 
 if __name__ == "__main__":

@@ -28,6 +28,7 @@ BENCHES = [
     ("roofline", "Roofline dry-run terms"),
     ("fleet", "Fleet-scale pricing: sparse vs dense at 256-1024 nodes"),
     ("faults", "Chaos: MTBF storm sweep, availability + hardened replanning"),
+    ("admission_jax", "Fused admission co-search: candidate x ladder grid"),
 ]
 
 
@@ -57,8 +58,15 @@ def main() -> None:
                 else {}
             )
             rows = mod.run(**kwargs)
-            with open(os.path.join(args.out, f"{bench}.json"), "w") as f:
-                json.dump(rows, f, indent=1, default=str)
+            # One canonical record per bench: modules with a PERF_RECORD
+            # write their own BENCH_<name>.json (rich derived metrics);
+            # for the rest the harness writes the row dump under the same
+            # naming scheme.  (The harness used to always dump a stray
+            # lowercase <name>.json that shadowed the canonical record.)
+            if not hasattr(mod, "PERF_RECORD"):
+                record = os.path.join(args.out, f"BENCH_{bench}.json")
+                with open(record, "w") as f:
+                    json.dump(rows, f, indent=1, default=str)
             for row in rows:
                 print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
         except Exception:

@@ -33,6 +33,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+import numpy as np
+
 from .demand import TrafficDemand
 from .netsim import (
     HardwareSpec,
@@ -44,6 +46,7 @@ from .planeval import JobSetEvaluator, LRUCache
 from .simengine import SimEngine
 from .strategy_search import (
     JobSetSearchResult,
+    _check_schedules,
     demand_cache_size,
     SearchResult,
     Strategy,
@@ -149,6 +152,7 @@ def alternating_optimize(
     chains: int = 1,
     pool_size: int = 64,
     schedules: tuple[str, ...] | None = None,
+    temperatures: tuple[float, ...] | None = None,
 ) -> CoOptResult:
     """TopoOpt's off-line co-optimization loop.
 
@@ -172,7 +176,9 @@ def alternating_optimize(
     ``compiled=False`` reference at fixed seeds.  ``backend="jax"`` runs
     each round's strategy search as ``chains`` batched on-device chains
     (:mod:`repro.core.planeval_jax`); the default NumPy backend is
-    byte-stable against it.
+    byte-stable against it.  ``temperatures`` (JAX only) upgrades each
+    round's search to a parallel-tempering ladder on the grid kernel — a
+    singleton ladder replays the flat chains exactly.
     """
     warm = warm_topology is not None
     topo = (
@@ -191,7 +197,7 @@ def alternating_optimize(
             seed=seed + r, init=strategy_init,
             compiled=compiled, proposals_per_step=proposals_per_step,
             backend=backend, chains=chains, pool_size=pool_size,
-            schedules=schedules,
+            schedules=schedules, temperatures=temperatures,
         )
         # Comm x Topo plane: rebuild the topology for the found demand.
         new_topo = topology_finder(
@@ -240,6 +246,7 @@ def _co_optimize_single(
     chains: int = 1,
     pool_size: int = 64,
     schedules: tuple[str, ...] | None = None,
+    temperatures: tuple[float, ...] | None = None,
 ) -> JobSetPlan:
     """The two-plane alternating loop for one fixed tenant placement —
     exactly the pre-placement-search ``co_optimize_jobset`` body."""
@@ -267,7 +274,7 @@ def _co_optimize_single(
             compiled=compiled, proposals_per_step=proposals_per_step,
             demand_cache=demand_cache, objective=objective,
             backend=backend, chains=chains, pool_size=pool_size,
-            schedules=schedules,
+            schedules=schedules, temperatures=temperatures,
         )
         new_topo = topology_finder(
             res.demand, hw.degree, forbidden=forbidden,
@@ -307,6 +314,173 @@ def _co_optimize_single(
     return best
 
 
+def _co_optimize_fused(
+    candidates: list[JobSet],
+    order: list[int],
+    hw: HardwareSpec,
+    rounds: int,
+    mcmc_iters: int,
+    overlap: float,
+    seed: int,
+    rel_tol: float,
+    warm_topology: Topology | None,
+    warm_strategies: dict[str, Strategy] | None,
+    forbidden: tuple[tuple[int, int], ...],
+    demand_cache,
+    objective: str,
+    chains: int,
+    pool_size: int,
+    schedules: tuple[str, ...] | None,
+    temperatures: tuple[float, ...],
+) -> JobSetPlan:
+    """Fused admission co-search: every screened placement candidate x the
+    tempering ladder in **one** device dispatch per alternating round.
+
+    Where the sequential path runs the whole alternating loop once per
+    candidate (each round's winner re-materialized on host, every
+    candidate paying its own jit dispatches), this loop prices one pool
+    per tenant up front, stacks every candidate's link table into the
+    padded grid (:func:`~repro.core.planeval_jax.pack_jobset_grid`), and
+    per round launches a single grid dispatch
+    (:meth:`~repro.core.planeval_jax.ChainKernel.run_grid`).  The winner
+    hand-off between rounds stays on-device: each candidate's best
+    (chain, rung) assignment — pool *indices*, valid across rounds because
+    the pools are fixed — seeds the next round's grid directly; the host
+    reads back only the small index array to rebuild each candidate's
+    topology from its winner demand.  Only the final overall winner is
+    re-priced on the bit-exact NumPy path.
+
+    Search semantics differ from the sequential path (shared pools across
+    rounds, device energies as round scores) — a documented different
+    search, gated end-to-end by ``benchmarks/bench_admission_jax.py`` on
+    both speedup and plan quality.  Per-candidate best tracking scores
+    each round's winner on the topology the chains searched on, so the
+    tracked energy and the final NumPy re-price agree to
+    :data:`~repro.core.planeval_jax.JAX_EQUIV_RTOL`.
+    """
+    from .planeval_jax import (
+        _POOL_SEED_OFFSET,
+        _require_jax,
+        ChainKernel,
+        check_temper_ladder,
+        draw_grid_streams,
+        draw_swap_streams,
+        pack_jobset_grid,
+        strategy_pool,
+    )
+
+    jnp = _require_jax().numpy
+    ladder = np.asarray(check_temper_ladder(temperatures), dtype=np.float64)
+    M = ladder.size
+    schedules = _check_schedules(schedules)
+    subset = [candidates[ci] for ci in order]
+    C = len(subset)
+    tenants = subset[0].tenants
+    T = len(tenants)
+    init = {
+        t.label: (warm_strategies or {}).get(t.label)
+        or default_strategy(t.spec)
+        for t in tenants
+    }
+    # One pre-priced pool per tenant, shared by every candidate and round
+    # (the same seeds the sequential JAX path uses for its first round).
+    pools = [
+        strategy_pool(
+            t.spec, t.k, pool_size, seed + _POOL_SEED_OFFSET + i,
+            init=init[t.label], schedules=schedules,
+        )
+        for i, t in enumerate(tenants)
+    ]
+    warm = warm_topology is not None
+    topos = [
+        warm_topology
+        if warm
+        else topology_finder(
+            js.union_for(init), hw.degree, forbidden=forbidden,
+            pack="per_node",
+        )
+        for js in subset
+    ]
+
+    cur_idx = np.zeros((C, T), dtype=np.int64)  # device array after round 0
+    best_obj = np.full(C, np.inf)
+    best_idx = np.zeros((C, T), dtype=np.int64)
+    best_topo: list[Topology] = list(topos)
+    round_objs: list[list[float]] = [[] for _ in range(C)]
+
+    for r in range(rounds):
+        V, caps, comps, weights, steps, _evs = pack_jobset_grid(
+            subset, topos, hw, pools, overlap=overlap,
+            demand_cache=demand_cache,
+        )
+        kernel = ChainKernel(
+            V, caps, comps, weights, overlap=overlap, objective=objective,
+            steps=steps, alpha=hw.link_latency,
+        )
+        t_idx, s_idx, u = draw_grid_streams(
+            seed + r, C, chains, M, mcmc_iters, T, pool_size
+        )
+        su = draw_swap_streams(seed + r, C, chains, M, mcmc_iters)
+        ba, bo, _hist = kernel.run_grid(
+            cur_idx, ladder, t_idx, s_idx, u, su, device=True
+        )
+        # Per-candidate winning chain; the index arrays stay on device as
+        # the next round's start states.
+        k_star = jnp.argmin(bo, axis=1)
+        c_ar = jnp.arange(C)
+        cur_idx = ba[c_ar, k_star]
+        win_idx = np.asarray(cur_idx)
+        win_obj = np.asarray(bo[c_ar, k_star], dtype=np.float64)
+        new_topos = []
+        for ci, js in enumerate(subset):
+            round_objs[ci].append(float(win_obj[ci]))
+            # Best tracking scores the winner on the topology it was
+            # searched on (== the device energy); the rebuilt topology
+            # feeds the next round and gets credited there if better.
+            if win_obj[ci] < best_obj[ci]:
+                best_obj[ci] = win_obj[ci]
+                best_idx[ci] = win_idx[ci]
+                best_topo[ci] = topos[ci]
+            strategies = {
+                t.label: pools[i][int(win_idx[ci, i])]
+                for i, t in enumerate(js.tenants)
+            }
+            new_topos.append(topology_finder(
+                js.union_for(strategies), hw.degree, forbidden=forbidden,
+                warm_start=topos[ci] if warm else None, pack="per_node",
+            ))
+        topos = new_topos
+        if r >= 1 and all(
+            abs(ro[-2] - ro[-1]) <= rel_tol * max(ro[-2], 1e-12)
+            for ro in round_objs
+        ):
+            break
+
+    w = int(np.argmin(best_obj))  # ties resolve toward earlier candidates
+    js = subset[w]
+    strategies = {
+        t.label: pools[i][int(best_idx[w, i])]
+        for i, t in enumerate(js.tenants)
+    }
+    topo = best_topo[w]
+    if objective == "decomposed":
+        t_fin, per_job = evaluate_jobset_decomposed(
+            strategies, js, topo, hw, overlap, _demand_cache=demand_cache
+        )
+        union = js.union_for(strategies)
+    else:
+        t_fin, union, per_job = evaluate_jobset(
+            strategies, js, topo, hw, overlap,
+            _demand_cache=demand_cache, compiled=True,
+        )
+    plan = JobSetPlan(
+        strategies=strategies, topology=topo, iter_time=t_fin,
+        demand=union, per_job=per_job, rounds=round_objs[w], jobset=js,
+        candidate_index=order[w],
+    )
+    return plan
+
+
 def co_optimize_jobset(
     jobset: JobSet,
     hw: HardwareSpec,
@@ -327,6 +501,7 @@ def co_optimize_jobset(
     chains: int = 1,
     pool_size: int = 64,
     schedules: tuple[str, ...] | None = None,
+    temperatures: tuple[float, ...] | None = None,
 ) -> JobSetPlan:
     """Multi-tenant alternating optimization: co-optimize every resident
     job's parallelization strategy against one *shared* topology.
@@ -370,6 +545,17 @@ def co_optimize_jobset(
     (:func:`~repro.core.strategy_search.evaluate_jobset_decomposed`);
     ``backend="jax"`` / ``chains`` run each round's search as batched
     on-device chains.  The defaults preserve existing goldens.
+
+    ``temperatures`` (JAX only) is the **fused admission co-search** path:
+    with two or more surviving candidates, the per-candidate Python loop
+    below is replaced by one grid dispatch per alternating round — every
+    candidate x every ladder rung x every chain in a single jit call, the
+    winner hand-off between rounds staying on-device, and only the final
+    plan re-priced on the bit-exact NumPy path (:func:`_co_optimize_fused`,
+    a documented different search gated on end quality).  With a single
+    candidate the standard per-round loop runs with the ladder threaded
+    into each round's search, so a singleton ladder replays the flat JAX
+    path exactly.
 
     One LRU-bounded per-tenant demand cache is shared across every round's
     MCMC and the final pricing (the caches used to be rebuilt per round);
@@ -424,18 +610,34 @@ def co_optimize_jobset(
         scores.sort()
         order = sorted(ci for _, ci in scores[:screen_candidates])
 
-    best: JobSetPlan | None = None
-    for ci in order:
-        plan = _co_optimize_single(
-            candidates[ci], hw, rounds, mcmc_iters, overlap, seed, rel_tol,
-            warm_topology, warm_strategies, forbidden, compiled,
-            proposals_per_step, demand_cache,
-            objective=objective, backend=backend, chains=chains,
-            pool_size=pool_size, schedules=schedules,
+    if temperatures is not None and backend != "jax":
+        raise ValueError(
+            "temperatures (tempering ladder) needs backend='jax'"
         )
-        plan.candidate_index = ci
-        if best is None or plan.iter_time < best.iter_time:
-            best = plan
+    if temperatures is not None and len(order) > 1:
+        # Fused admission co-search: all surviving candidates x the
+        # tempering ladder in one grid dispatch per alternating round.
+        best: JobSetPlan | None = _co_optimize_fused(
+            candidates, order, hw, rounds, mcmc_iters, overlap, seed,
+            rel_tol, warm_topology, warm_strategies, forbidden,
+            demand_cache, objective=objective, chains=chains,
+            pool_size=pool_size, schedules=schedules,
+            temperatures=temperatures,
+        )
+    else:
+        best = None
+        for ci in order:
+            plan = _co_optimize_single(
+                candidates[ci], hw, rounds, mcmc_iters, overlap, seed,
+                rel_tol, warm_topology, warm_strategies, forbidden,
+                compiled, proposals_per_step, demand_cache,
+                objective=objective, backend=backend, chains=chains,
+                pool_size=pool_size, schedules=schedules,
+                temperatures=temperatures,
+            )
+            plan.candidate_index = ci
+            if best is None or plan.iter_time < best.iter_time:
+                best = plan
 
     assert best is not None
     best.per_job_comm = tenant_comm_times(

@@ -233,6 +233,13 @@ class ReoptPolicy:
     # "recursive_hd", "multi_tree").  None / ("ring",) keeps the search
     # (and its RNG streams) byte-identical to the pre-schedule behaviour.
     schedules: tuple[str, ...] | None = None
+    # Parallel-tempering ladder of the JAX grid kernel (ascending floats).
+    # With backend="jax" and placement candidates this turns every
+    # admission into the *fused* co-search: all screened candidates x the
+    # ladder anneal in one device dispatch per alternating round
+    # (repro.core.alternating._co_optimize_fused).  None keeps the flat
+    # single-temperature chains; requires backend="jax" when set.
+    temperatures: tuple[float, ...] | None = None
     # -- robustness hardening (fault storms) --------------------------------
     # Wall-clock budget in seconds for one warm optimizer run inside a
     # replan.  The optimizer is not interruptible, so the deadline is
@@ -404,6 +411,7 @@ class ReoptController(ScenarioObserver):
                 backend=self.policy.backend,
                 chains=self.policy.chains,
                 schedules=self.policy.schedules,
+                temperatures=self.policy.temperatures,
             )
         return alternating_optimize(
             self.job, self.n, self.hw,
@@ -417,6 +425,7 @@ class ReoptController(ScenarioObserver):
             backend=self.policy.backend,
             chains=self.policy.chains,
             schedules=self.policy.schedules,
+            temperatures=self.policy.temperatures,
         )
 
     def ensure_plan(self) -> CoOptResult:
@@ -1034,6 +1043,7 @@ class JobSetController(ReoptController):
                 backend=self.policy.backend,
                 chains=self.policy.chains,
                 schedules=self.policy.schedules,
+                temperatures=self.policy.temperatures,
             )
         candidates = None
         if self._pending_candidates is not None:
@@ -1055,6 +1065,7 @@ class JobSetController(ReoptController):
             backend=self.policy.backend,
             chains=self.policy.chains,
             schedules=self.policy.schedules,
+            temperatures=self.policy.temperatures,
         )
 
     def _adopt_plan(self, res) -> None:
@@ -1181,7 +1192,17 @@ class JobSetController(ReoptController):
         the greedy :func:`place_arrival` path, byte-identical to the
         pre-search behaviour.  When the replan is suppressed (hysteresis,
         adaptive skip, or a policy without the arrival trigger) the tenant
-        stays on the greedy seed placement."""
+        stays on the greedy seed placement.
+
+        With ``policy.backend="jax"`` and ``policy.temperatures`` set, the
+        candidate search runs **fused**: every screened placement
+        candidate x the tempering ladder anneals in one device dispatch
+        per alternating round
+        (:func:`~repro.core.alternating.co_optimize_jobset` with
+        ``temperatures=``), with the winner hand-off staying on-device
+        between rounds — the wide-admission configuration
+        ``benchmarks/bench_admission_jax.py`` gates at >= 3x the
+        sequential per-candidate throughput."""
         if k < 1:
             raise ValueError(f"admit needs k >= 1 servers, got {k}")
         n_cand = self.policy.candidates if candidates is None else candidates
@@ -1377,6 +1398,7 @@ class JobSetController(ReoptController):
                     backend=self.policy.backend,
                     chains=self.policy.chains,
                     schedules=self.policy.schedules,
+                    temperatures=self.policy.temperatures,
                 )
                 saved = self.jobset
                 self.jobset = trial

@@ -47,6 +47,7 @@ under :mod:`repro.kernels` own the lower-level accelerator hot loops.
 from __future__ import annotations
 
 import math
+import os
 import random
 
 import numpy as np
@@ -57,14 +58,21 @@ from .planeval import PlanEvaluator, plan_evaluator
 
 __all__ = [
     "JAX_EQUIV_RTOL",
+    "DEFAULT_TEMPER_LADDER",
     "have_jax",
     "pack_demand",
     "JaxPlanEvaluator",
     "jax_plan_evaluator",
     "ChainKernel",
+    "check_temper_ladder",
+    "default_temper_ladder",
     "draw_proposal_streams",
+    "draw_grid_streams",
+    "draw_swap_streams",
     "run_chains_reference",
+    "run_grid_reference",
     "strategy_pool",
+    "pack_jobset_grid",
     "jax_mcmc_search",
     "jax_mcmc_search_jobset",
 ]
@@ -72,6 +80,48 @@ __all__ = [
 # Decorrelates the pool-construction RNG from the per-chain proposal
 # streams (both are seeded from the caller's one seed).
 _POOL_SEED_OFFSET = 0x9E3779B9
+
+# Decorrelates the tempering swap uniforms from the proposal streams: a
+# singleton ladder draws no swap uniforms, so the proposal streams (and
+# with them every pre-ladder golden) are untouched by the ladder's
+# introduction.
+_SWAP_SEED_OFFSET = 0x85EBCA6B
+
+# Default parallel-tempering ladder (ascending; the coldest rung matches
+# the historical single-chain temperature=0.05 regime, the hottest rung
+# explores).  Override with REPRO_TEMPER_LADDER="0.05,0.1,0.2,0.4".
+DEFAULT_TEMPER_LADDER = (0.05, 0.1, 0.2, 0.4)
+
+
+def check_temper_ladder(temperatures) -> tuple[float, ...]:
+    """Validate a tempering ladder: non-empty, positive finite, ascending.
+
+    Returns the ladder as a float tuple.  Neighbor swap moves pair rung
+    ``m`` with ``m + 1``, so the ladder must be sorted coldest-first for
+    the swap acceptance rule to mean what parallel tempering means.
+    """
+    ladder = tuple(float(t) for t in temperatures)
+    if not ladder:
+        raise ValueError("temperature ladder must be non-empty")
+    for t in ladder:
+        if not math.isfinite(t) or t <= 0.0:
+            raise ValueError(
+                "ladder temperatures must be positive and finite"
+            )
+    if any(b < a for a, b in zip(ladder, ladder[1:])):
+        raise ValueError("temperature ladder must be sorted ascending")
+    return ladder
+
+
+def default_temper_ladder() -> tuple[float, ...]:
+    """The tempering ladder fused admission uses when the caller passes
+    ``temperatures=True``-style defaults: :data:`DEFAULT_TEMPER_LADDER`,
+    overridable via the ``REPRO_TEMPER_LADDER`` env knob (comma-separated
+    ascending floats, e.g. ``"0.05,0.1,0.2,0.4"``)."""
+    env = os.environ.get("REPRO_TEMPER_LADDER", "").strip()
+    if not env:
+        return DEFAULT_TEMPER_LADDER
+    return check_temper_ladder(float(x) for x in env.split(","))
 
 # Documented JAX-vs-NumPy agreement: float64 throughout (ensure_x64), but
 # segment_sum/jnp.sum reassociate additions the reference performs
@@ -327,6 +377,191 @@ def draw_proposal_streams(
     return t_idx, s_idx, u
 
 
+def draw_grid_streams(
+    seed: int,
+    candidates: int,
+    chains: int,
+    ladder: int,
+    iters: int,
+    n_tenants: int,
+    pool_size: int,
+):
+    """:func:`draw_proposal_streams` lifted to the (candidate, temperature)
+    grid: cell ``(ci, c, m)`` draws its own stream from
+    ``random.Random(seed + c + _POOL_SEED_OFFSET * (ci * ladder + m))`` in
+    the same strict (tenant, pool index, acceptance uniform) order.  The
+    golden-ladder offset decorrelates cells while the degenerate cell
+    ``(0, c, 0)`` reduces to exactly :func:`draw_proposal_streams`' chain
+    ``c`` — the byte-identity anchor of the singleton-ladder contract.
+
+    Returns ``(t_idx, s_idx, u)`` each of shape
+    ``(candidates, chains, ladder, iters)``.
+    """
+    t_idx = np.zeros((candidates, chains, ladder, iters), dtype=np.int64)
+    s_idx = np.zeros((candidates, chains, ladder, iters), dtype=np.int64)
+    u = np.zeros((candidates, chains, ladder, iters), dtype=np.float64)
+    for ci in range(candidates):
+        for c in range(chains):
+            for m in range(ladder):
+                rng = random.Random(
+                    seed + c + _POOL_SEED_OFFSET * (ci * ladder + m)
+                )
+                for i in range(iters):
+                    t_idx[ci, c, m, i] = rng.randrange(n_tenants)
+                    s_idx[ci, c, m, i] = rng.randrange(pool_size)
+                    u[ci, c, m, i] = rng.random()
+    return t_idx, s_idx, u
+
+
+def draw_swap_streams(
+    seed: int, candidates: int, chains: int, ladder: int, iters: int
+) -> np.ndarray:
+    """Pre-drawn swap-acceptance uniforms of the tempering ladder.
+
+    One uniform per (iteration, neighbor pair) from a
+    :data:`_SWAP_SEED_OFFSET`-shifted stream per (candidate, chain) — a
+    singleton ladder has zero pairs and draws nothing, leaving the
+    proposal streams byte-identical to the pre-ladder kernel.
+
+    Returns shape ``(candidates, chains, iters, ladder // 2)``.
+    """
+    pairs = ladder // 2
+    su = np.zeros((candidates, chains, iters, pairs), dtype=np.float64)
+    for ci in range(candidates):
+        for c in range(chains):
+            rng = random.Random(
+                seed + c + _SWAP_SEED_OFFSET + _POOL_SEED_OFFSET * ci
+            )
+            for i in range(iters):
+                for p in range(pairs):
+                    su[ci, c, i, p] = rng.random()
+    return su
+
+
+# Compiled grid programs, shared across ChainKernel instances: keyed by
+# the scalar closure parameters; jax.jit then specializes per argument
+# shape.  This is what lets the fused alternating loop rebuild its kernel
+# every round (new load tensors, same shapes) without recompiling — the
+# flat kernel keeps its per-instance jit (the PR 6 baseline semantics).
+_GRID_PROGRAMS: dict = {}
+
+
+def _grid_program(objective, overlap, alpha, total_w, has_steps):
+    key = (objective, overlap, alpha, total_w, has_steps)
+    fn = _GRID_PROGRAMS.get(key)
+    if fn is not None:
+        return fn
+    jax = _require_jax()
+    jnp = jax.numpy
+
+    def _objective_rows(Vc, capsc, steps_d, w_d, comps_d, A):
+        # A: (M, T) ladder of states -> (M,) objectives.  Identical
+        # arithmetic to the flat kernel's _objective, vectorized over the
+        # rung axis.
+        T = A.shape[1]
+        t_ar = jnp.arange(T)
+        rows = Vc[t_ar[None, :], A]  # (M, T, L)
+        if objective == "union":
+            comm = jnp.max(rows.sum(axis=1) / capsc[None, :], axis=1)
+            if has_steps:
+                comm = comm + alpha * jnp.max(
+                    steps_d[t_ar[None, :], A], axis=1
+                )
+            comm_t = jnp.broadcast_to(comm[:, None], A.shape)
+        else:
+            active = rows > 0.0
+            active_w = jnp.sum(
+                jnp.where(active, w_d[None, :, None], 0.0), axis=1
+            )  # (M, L)
+            per = jnp.where(
+                active,
+                rows * active_w[:, None, :]
+                / (w_d[None, :, None] * capsc[None, None, :]),
+                0.0,
+            )
+            comm_t = jnp.max(per, axis=2)  # (M, T)
+            if has_steps:
+                comm_t = comm_t + alpha * steps_d[t_ar[None, :], A]
+        hidden = jnp.minimum(comm_t * overlap, comps_d[None, :])
+        iters_t = comps_d[None, :] + comm_t - hidden
+        return jnp.sum(w_d[None, :] * iters_t, axis=1) / total_w
+
+    def _one_ladder(Vc, capsc, comps_d, w_d, steps_d, init_a, temps,
+                    t_idx, s_idx, u, su, parity):
+        M = t_idx.shape[0]
+        P = su.shape[1]
+        m_ar = jnp.arange(M)
+        p_ar = jnp.arange(P)
+
+        def step(carry, inp):
+            A, cur, best_a, best = carry
+            ti, si, ui, sui, par = inp
+            # Per-rung annealing move (each rung mutates its own row).
+            cand_A = A.at[m_ar, ti].set(si)
+            cand = _objective_rows(Vc, capsc, steps_d, w_d, comps_d,
+                                   cand_A)
+            temp = temps * jnp.maximum(cur, 1e-12)
+            accept = (cand <= cur) | (ui < jnp.exp(-(cand - cur) / temp))
+            A = jnp.where(accept[:, None], cand_A, A)
+            cur = jnp.where(accept, cand, cur)
+            if P:
+                # Even/odd neighbor swap pass: parity alternates the
+                # pairing; the last pair is clipped to a self-pair
+                # (valid=False) on odd ladders.
+                lo = 2 * p_ar + par
+                hi = lo + 1
+                valid = hi < M
+                lo_c = jnp.minimum(lo, M - 1)
+                hi_c = jnp.minimum(hi, M - 1)
+                delta = (1.0 / temps[lo_c] - 1.0 / temps[hi_c]) * (
+                    cur[lo_c] - cur[hi_c]
+                )
+                sw = valid & (sui < jnp.exp(delta))
+                A_lo, A_hi = A[lo_c], A[hi_c]
+                c_lo, c_hi = cur[lo_c], cur[hi_c]
+                A = A.at[lo_c].set(jnp.where(sw[:, None], A_hi, A_lo))
+                A = A.at[hi_c].set(jnp.where(sw[:, None], A_lo, A_hi))
+                cur = cur.at[lo_c].set(jnp.where(sw, c_hi, c_lo))
+                cur = cur.at[hi_c].set(jnp.where(sw, c_lo, c_hi))
+            m_star = jnp.argmin(cur)
+            step_best = cur[m_star]
+            better = step_best < best
+            best = jnp.where(better, step_best, best)
+            best_a = jnp.where(better, A[m_star], best_a)
+            return (A, cur, best_a, best), step_best
+
+        A0 = jnp.broadcast_to(init_a, (M, init_a.shape[0]))
+        cur0 = _objective_rows(Vc, capsc, steps_d, w_d, comps_d, A0)
+        m0 = jnp.argmin(cur0)
+        (A, cur, best_a, best), hist = jax.lax.scan(
+            step,
+            (A0, cur0, A0[m0], cur0[m0]),
+            (
+                jnp.swapaxes(t_idx, 0, 1),
+                jnp.swapaxes(s_idx, 0, 1),
+                jnp.swapaxes(u, 0, 1),
+                su,
+                parity,
+            ),
+        )
+        return best_a, best, jnp.concatenate([cur0[m0][None], hist])
+
+    # vmap chains inside candidates: stream cells are (C, K, M, iters)
+    # and swap uniforms (C, K, iters, P); V/caps/init vary per candidate,
+    # the ladder, tenant tables, and parity schedule are shared.
+    per_chain = jax.vmap(
+        _one_ladder,
+        in_axes=(None, None, None, None, None, None, None, 0, 0, 0, 0,
+                 None),
+    )
+    fn = jax.jit(jax.vmap(
+        per_chain,
+        in_axes=(0, 0, None, None, None, 0, None, 0, 0, 0, 0, None),
+    ))
+    _GRID_PROGRAMS[key] = fn
+    return fn
+
+
 class ChainKernel:
     """K annealing chains over a pre-priced strategy pool, on device.
 
@@ -344,12 +579,26 @@ class ChainKernel:
     (:func:`~repro.core.strategy_search.tenant_comm_times` semantics:
     each tenant's own bytes under weighted processor sharing of every link
     it loads).
+
+    **Grid mode** (``V.ndim == 4``): ``V[ci, t, s, :]`` stacks one load
+    tensor per placement candidate, padded to the widest candidate's link
+    table (dummy links carry zero load against ``caps[ci, pad:]``, so they
+    can never win a bottleneck); ``caps`` becomes ``(C, L)``.  Each chain
+    then carries a whole parallel-tempering ladder: every scan step applies
+    the annealing rule to all ``M`` rungs at once, follows with a
+    deterministic even/odd neighbor swap pass (Metropolis swap acceptance
+    ``su < exp((1/T_lo - 1/T_hi) * (E_lo - E_hi))`` on pre-drawn host
+    uniforms, iteration parity alternating the pairing), and tracks the
+    per-(candidate, chain) best state across rungs — the whole
+    (candidate x chain x rung) grid in **one** jit dispatch
+    (:meth:`run_grid`).  A singleton ladder performs no swap pass and
+    replays the flat kernel's decisions exactly.
     """
 
     def __init__(
         self,
-        V: np.ndarray,  # (T, S, L) per-(tenant, pool strategy) load vectors
-        caps: np.ndarray,  # (L,)
+        V: np.ndarray,  # (T, S, L) load vectors; (C, T, S, L) = grid mode
+        caps: np.ndarray,  # (L,); (C, L) in grid mode
         comps: np.ndarray,  # (T,) per-tenant compute times
         weights: np.ndarray,  # (T,) tenant weights
         overlap: float = 0.0,
@@ -362,6 +611,11 @@ class ChainKernel:
         if objective not in ("union", "decomposed"):
             raise ValueError(f"unknown chain objective {objective!r}")
         self.objective = objective
+        self.grid = V.ndim == 4
+        if self.grid:
+            self._init_grid(V, caps, comps, weights, overlap, objective,
+                            steps, alpha)
+            return
         T, S, L = V.shape
         self.shape = (T, S, L)
         V_d = jnp.asarray(V, dtype=jnp.float64)
@@ -443,6 +697,8 @@ class ChainKernel:
         """All K chains in one dispatch.  Returns
         ``(best_assignments (K, T), best_objs (K,), history (K, iters+1))``
         as NumPy arrays."""
+        if self.grid:
+            raise ValueError("grid-mode ChainKernel runs via run_grid()")
         jnp = _require_jax().numpy
         best_a, best, hist = self._run(
             jnp.asarray(init_a, dtype=jnp.int64),
@@ -451,6 +707,83 @@ class ChainKernel:
             jnp.asarray(s_idx, dtype=jnp.int64),
             jnp.asarray(u, dtype=jnp.float64),
         )
+        return (
+            np.asarray(best_a),
+            np.asarray(best, dtype=np.float64),
+            np.asarray(hist, dtype=np.float64),
+        )
+
+    def _init_grid(self, V, caps, comps, weights, overlap, objective,
+                   steps, alpha):
+        jnp = _require_jax().numpy
+        C, T, S, L = V.shape
+        caps = np.asarray(caps, dtype=np.float64)
+        if caps.shape != (C, L):
+            raise ValueError(
+                f"grid caps must have shape {(C, L)}, got {caps.shape}"
+            )
+        self.shape = (T, S, L)
+        self.grid_shape = (C, T, S, L)
+        self._V_g = jnp.asarray(V, dtype=jnp.float64)
+        self._caps_g = jnp.asarray(caps, dtype=jnp.float64)
+        self._comps_g = jnp.asarray(comps, dtype=jnp.float64)
+        self._w_g = jnp.asarray(weights, dtype=jnp.float64)
+        alpha = float(alpha)
+        self._steps_g = (
+            jnp.asarray(steps, dtype=jnp.float64)
+            if steps is not None and alpha
+            else None
+        )
+        # The compiled grid program is shared across kernel instances
+        # (keyed by the scalar parameters, shape-specialized by jit), so
+        # rebuilding the kernel every alternating round costs no
+        # recompile as long as the padded grid shapes repeat.
+        self._run_grid_fn = _grid_program(
+            objective, float(overlap), alpha, float(np.sum(weights)),
+            self._steps_g is not None,
+        )
+
+    def run_grid(
+        self,
+        init_a: np.ndarray,  # (C, T) per-candidate start states
+        temperatures: np.ndarray,  # (M,) ascending tempering ladder
+        t_idx: np.ndarray,  # (C, K, M, iters)
+        s_idx: np.ndarray,
+        u: np.ndarray,
+        swap_u: np.ndarray,  # (C, K, iters, M // 2)
+        device: bool = False,
+    ):
+        """The whole (candidate x chain x rung) grid in one dispatch.
+
+        Returns ``(best_assignments (C, K, T), best_objs (C, K),
+        history (C, K, iters + 1))`` — history is the running
+        min-over-rungs objective.  ``device=True`` returns the raw JAX
+        arrays so callers (the fused alternating loop) can hand the winner
+        indices straight back into the next round's dispatch without a
+        host round-trip.
+        """
+        if not self.grid:
+            raise ValueError("flat ChainKernel runs via run()")
+        jax = _require_jax()
+        jnp = jax.numpy
+        iters = t_idx.shape[3]
+        parity = jnp.asarray(np.arange(iters, dtype=np.int64) % 2)
+        best_a, best, hist = self._run_grid_fn(
+            self._V_g,
+            self._caps_g,
+            self._comps_g,
+            self._w_g,
+            self._steps_g,
+            jnp.asarray(init_a, dtype=jnp.int64),
+            jnp.asarray(temperatures, dtype=jnp.float64),
+            jnp.asarray(t_idx, dtype=jnp.int64),
+            jnp.asarray(s_idx, dtype=jnp.int64),
+            jnp.asarray(u, dtype=jnp.float64),
+            jnp.asarray(swap_u, dtype=jnp.float64),
+            parity,
+        )
+        if device:
+            return best_a, best, hist
         return (
             np.asarray(best_a),
             np.asarray(best, dtype=np.float64),
@@ -493,6 +826,39 @@ def _objective_reference(
     return float(np.sum(weights * iters_t) / np.sum(weights))
 
 
+def _run_cell_or_grid(
+    V, caps, comps, weights, overlap, objective, steps, alpha,
+    seed, chains, iters, T, S, temperature, temperatures,
+):
+    """Dispatch one jobset search: the flat K-chain kernel when no ladder
+    is requested, the C=1 grid kernel under a tempering ladder.  Returns
+    ``(best_a (K', T), best_obj (K',), hist (K', iters + 1))`` with the
+    grid's candidate axis squeezed away."""
+    if temperatures is None:
+        kernel = ChainKernel(
+            V, caps, comps, weights, overlap=overlap, objective=objective,
+            steps=steps, alpha=alpha,
+        )
+        t_idx, s_idx, u = draw_proposal_streams(seed, chains, iters, T, S)
+        return kernel.run(
+            np.zeros(T, dtype=np.int64),
+            np.full(chains, temperature, dtype=np.float64),
+            t_idx, s_idx, u,
+        )
+    ladder = np.asarray(check_temper_ladder(temperatures), dtype=np.float64)
+    M = ladder.size
+    kernel = ChainKernel(
+        V[None], np.asarray(caps, dtype=np.float64)[None], comps, weights,
+        overlap=overlap, objective=objective, steps=steps, alpha=alpha,
+    )
+    t_idx, s_idx, u = draw_grid_streams(seed, 1, chains, M, iters, T, S)
+    su = draw_swap_streams(seed, 1, chains, M, iters)
+    best_a, best_obj, hist = kernel.run_grid(
+        np.zeros((1, T), dtype=np.int64), ladder, t_idx, s_idx, u, su,
+    )
+    return best_a[0], best_obj[0], hist[0]
+
+
 def jax_mcmc_search(
     job,
     topo,
@@ -505,6 +871,7 @@ def jax_mcmc_search(
     chains: int = 1,
     pool_size: int = 64,
     schedules=None,
+    temperatures=None,
 ):
     """Batched single-job strategy search — the ``backend="jax"`` body of
     :func:`~repro.core.strategy_search.mcmc_search`.
@@ -517,6 +884,11 @@ def jax_mcmc_search(
     chain's on-device objective trace.  ``schedules`` widens the pool with
     collective-schedule flips; with ``hw.link_latency`` set the chains
     anneal on the same (α, β) objective the NumPy path prices.
+
+    ``temperatures`` replaces the single ``temperature`` with a
+    parallel-tempering ladder run through the grid kernel — a singleton
+    ladder ``(t,)`` replays the flat ``temperature=t`` chains' decisions
+    exactly (same proposal streams, no swap draws).
     """
     from .demand import demand_steps
     from .netsim import _iteration_time as iteration_time, compute_time
@@ -542,15 +914,10 @@ def jax_mcmc_search(
         if hw.link_latency
         else None
     )
-    kernel = ChainKernel(
-        V, caps, np.array([comp]), np.array([1.0]), overlap=overlap,
-        steps=steps, alpha=hw.link_latency,
-    )
-    t_idx, s_idx, u = draw_proposal_streams(seed, chains, iters, 1, S)
-    best_a, best_obj, hist = kernel.run(
-        np.zeros(1, dtype=np.int64),
-        np.full(chains, temperature, dtype=np.float64),
-        t_idx, s_idx, u,
+    best_a, best_obj, hist = _run_cell_or_grid(
+        V, caps, np.array([comp]), np.array([1.0]), overlap, "union",
+        steps, hw.link_latency, seed, chains, iters, 1, S,
+        temperature, temperatures,
     )
     c = int(np.argmin(best_obj))
     strategy = pool[int(best_a[c, 0])]
@@ -576,6 +943,7 @@ def jax_mcmc_search_jobset(
     objective: str = "union",
     demand_cache=None,
     schedules=None,
+    temperatures=None,
 ):
     """Batched multi-tenant strategy search — the ``backend="jax"`` body of
     :func:`~repro.core.strategy_search.mcmc_search_jobset`.
@@ -587,6 +955,10 @@ def jax_mcmc_search_jobset(
     under the requested objective.  The winner's reported
     ``iter_time``/``per_job`` are re-priced on the bit-exact NumPy path
     (union) or the reference decomposition (decomposed).
+
+    ``temperatures`` swaps the single ``temperature`` for a
+    parallel-tempering ladder through the grid kernel; the singleton
+    ladder replays the flat kernel's decisions exactly.
     """
     from .netsim import compute_time
     from .planeval import JobSetEvaluator, LRUCache
@@ -641,15 +1013,10 @@ def jax_mcmc_search_jobset(
             [jse._steps(t.label, s) for s in pools[i]]
             for i, t in enumerate(tenants)
         ], dtype=np.float64)
-    kernel = ChainKernel(
-        V, caps, comps, weights, overlap=overlap, objective=objective,
-        steps=steps, alpha=hw.link_latency,
-    )
-    t_idx, s_idx, u = draw_proposal_streams(seed, chains, iters, T, S)
-    best_a, best_obj, hist = kernel.run(
-        np.zeros(T, dtype=np.int64),
-        np.full(chains, temperature, dtype=np.float64),
-        t_idx, s_idx, u,
+    best_a, best_obj, hist = _run_cell_or_grid(
+        V, caps, comps, weights, overlap, objective, steps,
+        hw.link_latency, seed, chains, iters, T, S,
+        temperature, temperatures,
     )
     c = int(np.argmin(best_obj))
     best = {
@@ -669,6 +1036,90 @@ def jax_mcmc_search_jobset(
         strategies=best, iter_time=obj, demand=union, per_job=per_job,
         history=[float(h) for h in hist[c]],
     )
+
+
+def pack_jobset_grid(
+    candidates,  # list[JobSet]: same tenants, different placements
+    topos,  # list[Topology], one search topology per candidate
+    hw: HardwareSpec,
+    pools,  # list[list[Strategy]], one pre-built pool per tenant
+    overlap: float = 0.0,
+    demand_cache=None,
+    pad_cap: float = 1.0,
+    pad_to: int = 32,
+):
+    """Stack per-candidate pool pricings into the padded grid tensors.
+
+    Each candidate's pool entries are priced on its own topology through
+    the incremental :class:`~repro.core.planeval.JobSetEvaluator` (one
+    shared per-tenant demand cache serves all candidates — job-local
+    demands are placement-independent), then every candidate's link table
+    is padded to the widest one: dummy links carry zero load against
+    capacity ``pad_cap``, so they can never win a bottleneck max nor
+    activate in the decomposed objective, whatever ``pad_cap > 0`` is.
+
+    ``pad_to`` additionally rounds the link axis up to a bucket multiple
+    so the grid shape repeats across alternating rounds (and admissions of
+    similar size) — repeated shapes hit the shared compiled grid program's
+    jit cache instead of recompiling per round.
+
+    Returns ``(V (C, T, S, L), caps (C, L), comps (T,), weights (T,),
+    steps (T, S) | None, evaluators)``.
+    """
+    from .netsim import compute_time
+    from .planeval import JobSetEvaluator, LRUCache
+    from .strategy_search import demand_cache_size
+
+    if demand_cache is None:
+        demand_cache = LRUCache(demand_cache_size())
+    labels = [t.label for t in candidates[0].tenants]
+    for js in candidates:
+        if [t.label for t in js.tenants] != labels:
+            raise ValueError(
+                "grid candidates must list the same tenants in the same "
+                "order"
+            )
+    evs = []
+    vecs_per = []
+    for js, topo in zip(candidates, topos):
+        jse = JobSetEvaluator(
+            js, topo, hw, overlap=overlap, demand_cache=demand_cache
+        )
+        # Price every entry before reading n_links: the link universe
+        # grows as new MP routes compile.
+        vecs = [
+            [jse.tenant_loads_at(t.label, s, t.servers) for s in pools[i]]
+            for i, t in enumerate(js.tenants)
+        ]
+        evs.append(jse)
+        vecs_per.append(vecs)
+    C, T, S = len(candidates), len(labels), len(pools[0])
+    L = max(max(jse.ev.n_links for jse in evs), 1)
+    if pad_to > 1:
+        L = -(-L // pad_to) * pad_to
+    V = np.zeros((C, T, S, L), dtype=np.float64)
+    caps = np.full((C, L), float(pad_cap), dtype=np.float64)
+    for ci, (jse, vecs) in enumerate(zip(evs, vecs_per)):
+        nl = jse.ev.n_links
+        if nl:
+            caps[ci, :nl] = jse.ev.caps
+        for i in range(T):
+            for s, v in enumerate(vecs[i]):
+                V[ci, i, s, : v.size] = v
+    tenants = candidates[0].tenants
+    comps = np.array(
+        [compute_time(t.flops_per_iteration, t.k, hw) for t in tenants]
+    )
+    weights = np.array([t.weight for t in tenants], dtype=np.float64)
+    steps = None
+    if hw.link_latency:
+        # Latency rounds are placement-independent (group sizes and pinned
+        # steps survive remapping), so one candidate's table serves all.
+        steps = np.asarray([
+            [evs[0]._steps(t.label, s) for s in pools[i]]
+            for i, t in enumerate(tenants)
+        ], dtype=np.float64)
+    return V, caps, comps, weights, steps, evs
 
 
 def run_chains_reference(
@@ -717,4 +1168,94 @@ def run_chains_reference(
             hists[c, i + 1] = cur
         best_as[c] = best_a
         bests[c] = best
+    return best_as, bests, hists
+
+
+def _swap_pass_reference(
+    A: np.ndarray,  # (M, T) ladder states, mutated in place
+    cur: np.ndarray,  # (M,) ladder energies, mutated in place
+    temps: np.ndarray,  # (M,) ascending ladder
+    su: np.ndarray,  # (M // 2,) swap uniforms of this iteration
+    parity: int,
+):
+    """One even/odd neighbor swap pass — the host mirror of the grid
+    kernel's tempering exchange (same clipping of the out-of-range last
+    pair, same Metropolis swap acceptance)."""
+    M = cur.shape[0]
+    for p in range(M // 2):
+        lo = 2 * p + parity
+        hi = lo + 1
+        if hi >= M:
+            continue
+        delta = (1.0 / temps[lo] - 1.0 / temps[hi]) * (cur[lo] - cur[hi])
+        # exp saturates above ~709; any delta past ~50 already accepts
+        # with certainty against a uniform < 1 (the device side computes
+        # exp(delta) = inf, which accepts identically).
+        if su[p] < math.exp(min(delta, 50.0)):
+            A[[lo, hi]] = A[[hi, lo]]
+            cur[lo], cur[hi] = cur[hi], cur[lo]
+    return A, cur
+
+
+def run_grid_reference(
+    V: np.ndarray,  # (C, T, S, L)
+    caps: np.ndarray,  # (C, L)
+    comps: np.ndarray,
+    weights: np.ndarray,
+    overlap: float,
+    objective: str,
+    init_a: np.ndarray,  # (C, T)
+    temperatures: np.ndarray,  # (M,)
+    t_idx: np.ndarray,  # (C, K, M, iters)
+    s_idx: np.ndarray,
+    u: np.ndarray,
+    swap_u: np.ndarray,  # (C, K, iters, M // 2)
+    steps: np.ndarray | None = None,
+    alpha: float = 0.0,
+):
+    """Sequential NumPy replay of the fused (candidate x chain x rung)
+    grid: one cell at a time, same pre-drawn streams, same per-rung
+    annealing rule, same even/odd swap passes — the equivalence oracle the
+    property tests pin :meth:`ChainKernel.run_grid` against."""
+    C, K, M, iters = t_idx.shape
+    T = V.shape[1]
+    temps = np.asarray(temperatures, dtype=np.float64)
+    best_as = np.zeros((C, K, T), dtype=np.int64)
+    bests = np.zeros((C, K), dtype=np.float64)
+    hists = np.zeros((C, K, iters + 1), dtype=np.float64)
+
+    def obj(ci, a):
+        return _objective_reference(
+            V[ci], caps[ci], comps, weights, overlap, objective, a,
+            steps=steps, alpha=alpha,
+        )
+
+    for ci in range(C):
+        for c in range(K):
+            A = np.tile(init_a[ci].astype(np.int64), (M, 1))
+            cur = np.array([obj(ci, A[m]) for m in range(M)])
+            m0 = int(np.argmin(cur))
+            best_a, best = A[m0].copy(), cur[m0]
+            hists[ci, c, 0] = cur[m0]
+            for i in range(iters):
+                for m in range(M):
+                    cand_a = A[m].copy()
+                    cand_a[t_idx[ci, c, m, i]] = s_idx[ci, c, m, i]
+                    cand = obj(ci, cand_a)
+                    temp = temps[m] * max(cur[m], 1e-12)
+                    if cand <= cur[m] or u[ci, c, m, i] < math.exp(
+                        -(cand - cur[m]) / temp
+                    ):
+                        A[m] = cand_a
+                        cur[m] = cand
+                if M > 1:
+                    _swap_pass_reference(
+                        A, cur, temps, swap_u[ci, c, i], i % 2
+                    )
+                m_star = int(np.argmin(cur))
+                if cur[m_star] < best:
+                    best_a, best = A[m_star].copy(), cur[m_star]
+                hists[ci, c, i + 1] = cur[m_star]
+            best_as[ci, c] = best_a
+            bests[ci, c] = best
     return best_as, bests, hists

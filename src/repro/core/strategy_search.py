@@ -193,6 +193,7 @@ def mcmc_search(
     chains: int = 1,
     pool_size: int = 64,
     schedules: tuple[str, ...] | None = None,
+    temperatures: tuple[float, ...] | None = None,
 ) -> SearchResult:
     """Search the Comp x Comm plane for a fixed topology (§4.1).
 
@@ -223,11 +224,21 @@ def mcmc_search(
     the NumPy walk (finite move space, its own RNG streams); the default
     ``backend="numpy"`` is byte-stable against its introduction, and the
     returned ``iter_time`` is always re-priced on the bit-exact NumPy path.
+
+    ``temperatures`` (JAX only) replaces ``temperature`` with an ascending
+    parallel-tempering ladder: each chain carries the whole ladder on
+    device with even/odd neighbor swap moves
+    (:meth:`~repro.core.planeval_jax.ChainKernel.run_grid`).  A singleton
+    ladder ``(t,)`` replays the flat ``temperature=t`` chains exactly.
     """
     if backend not in ("numpy", "jax"):
         raise ValueError(f"unknown mcmc_search backend {backend!r}")
     if chains < 1:
         raise ValueError("chains must be >= 1")
+    if temperatures is not None and backend != "jax":
+        raise ValueError(
+            "temperatures (tempering ladder) needs backend='jax'"
+        )
     schedules = _check_schedules(schedules)
     if backend == "jax":
         from .planeval_jax import jax_mcmc_search
@@ -236,6 +247,7 @@ def mcmc_search(
             job, topo, hw, iters=iters, temperature=temperature,
             overlap=overlap, seed=seed, init=init, chains=chains,
             pool_size=pool_size, schedules=schedules,
+            temperatures=temperatures,
         )
     if chains != 1:
         raise ValueError("chains > 1 needs backend='jax'")
@@ -597,6 +609,7 @@ def mcmc_search_jobset(
     chains: int = 1,
     pool_size: int = 64,
     schedules: tuple[str, ...] | None = None,
+    temperatures: tuple[float, ...] | None = None,
 ) -> JobSetSearchResult:
     """Joint Comp x Comm search for a shared cluster (fixed topology).
 
@@ -636,6 +649,10 @@ def mcmc_search_jobset(
     (:func:`repro.core.planeval_jax.jax_mcmc_search_jobset`); the reported
     result is re-priced on the bit-exact NumPy path.  ``backend="numpy"``
     (default) is byte-stable against its introduction.
+
+    ``temperatures`` (JAX only) swaps ``temperature`` for an ascending
+    parallel-tempering ladder run through the on-device grid kernel; a
+    singleton ladder replays the flat chains' decisions exactly.
     """
     if not jobset.tenants:
         raise ValueError("mcmc_search_jobset needs at least one tenant")
@@ -645,6 +662,10 @@ def mcmc_search_jobset(
         raise ValueError(f"unknown mcmc_search_jobset backend {backend!r}")
     if chains < 1:
         raise ValueError("chains must be >= 1")
+    if temperatures is not None and backend != "jax":
+        raise ValueError(
+            "temperatures (tempering ladder) needs backend='jax'"
+        )
     schedules = _check_schedules(schedules)
     if backend == "jax":
         from .planeval_jax import jax_mcmc_search_jobset
@@ -654,6 +675,7 @@ def mcmc_search_jobset(
             overlap=overlap, seed=seed, init=init, chains=chains,
             pool_size=pool_size, objective=objective,
             demand_cache=demand_cache, schedules=schedules,
+            temperatures=temperatures,
         )
     if chains != 1:
         raise ValueError("chains > 1 needs backend='jax'")

@@ -126,3 +126,20 @@ def test_fleet_bench_smoke(tmp_path, monkeypatch):
     assert fleet["events_per_s"] > 0
     assert (tmp_path / "experiments" / "bench"
             / "BENCH_fleet.json").exists()
+
+
+def test_admission_jax_bench_smoke(tmp_path, monkeypatch):
+    """The fused candidate x ladder admission co-search must clear the
+    >= 3x end-to-end bar at smoke sizes, never regress plan quality vs
+    the sequential baseline at the same seed, and the module's own
+    asserts pin the NumPy-exact re-price of the winner."""
+    from benchmarks import bench_admission_jax
+
+    monkeypatch.chdir(tmp_path)  # perf record lands in a scratch dir
+    rows = bench_admission_jax.run(smoke=True)
+    row = rows[0]
+    assert row["speedup"] >= bench_admission_jax.MIN_ADMISSION_SPEEDUP
+    assert row["fused_iter_time"] <= row["seq_iter_time"] * (1 + 1e-9)
+    assert row["candidates"] >= 4 and row["ladder"] >= 4
+    assert (tmp_path / "experiments" / "bench"
+            / "BENCH_admission_jax.json").exists()
